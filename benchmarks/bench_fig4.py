@@ -1,0 +1,32 @@
+"""Paper Fig. 4: full-editing (γ=0) and half-editing (γ=0.5) vs FediLoRA's
+similarity-weighted editing — personalized performance per epoch under 60%
+missing, heterogeneous ranks.  Paper finding: more editing ≠ better."""
+
+from __future__ import annotations
+
+from repro.core.editing import EditConfig
+
+from benchmarks.common import DEFAULT_ROUNDS, build_trainer, csv_line
+
+
+def main(rounds: int = DEFAULT_ROUNDS, dataset: str = "samllava") -> list[str]:
+    lines = []
+    curves = {}
+    for tag, edit in (("full", EditConfig(gamma_mode="full")),
+                      ("half", EditConfig(gamma_mode="half")),
+                      ("fedilora", EditConfig(gamma_mode="similarity"))):
+        tr = build_trainer(dataset, aggregator="fedilora", missing=0.6, edit=edit)
+        per_epoch = []
+        for r in range(rounds):
+            tr.run_round()
+            if (r + 1) % 2 == 0:
+                p = tr.evaluate_personalized(generate=False)
+                per_epoch.append(round(p["loss"], 4))
+        curves[tag] = per_epoch
+        lines.append(csv_line(f"fig4/personalized_loss_curve/{tag}", 0.0,
+                              " ".join(map(str, per_epoch))))
+    return lines
+
+
+if __name__ == "__main__":
+    print("\n".join(main()))

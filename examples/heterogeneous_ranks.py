@@ -1,0 +1,59 @@
+"""Anatomy of dimension-wise aggregation (paper Sec. 3.1, Fig. 2).
+
+Builds four clients with ranks (2, 4, 4, 8), shows the per-dimension weight
+matrix p̃, and contrasts FediLoRA's aggregate with HetLoRA's zero-pad average
+on the exact rows only the high-rank client populates — the information-
+dilution effect of paper Fig. 5, in miniature.
+
+Run:  PYTHONPATH=src python examples/heterogeneous_ranks.py
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import aggregation as AG
+from repro.core.lora import LoRAConfig, LoRASpec, init_lora_params, mask_lora_params
+
+np.set_printoptions(precision=3, suppress=True)
+
+
+def main():
+    ranks = np.array([2, 4, 4, 8])
+    sizes = np.array([100.0, 100.0, 100.0, 100.0])
+    p = jnp.asarray(sizes / sizes.sum())
+    r_g = int(ranks.max())
+
+    print("client ranks:", ranks.tolist(), "| global rank r_g =", r_g)
+    w = AG.dimension_wise_weights(jnp.asarray(ranks), p, r_g)
+    print("\ndimension-wise weights p̃[k, d] (rows = clients, cols = rank dims):")
+    print(np.asarray(w))
+    print("column sums (each covered dim renormalises to 1):",
+          np.asarray(w.sum(0)))
+
+    spec = [LoRASpec("layer0.wq", 16, 16, 1)]
+    key = jax.random.PRNGKey(0)
+    loras = []
+    for i, r in enumerate(ranks):
+        lo = init_lora_params(jax.random.fold_in(key, i), spec,
+                              LoRAConfig(rank=r_g), client_rank=int(r))
+        lo = {"layer0.wq": {"A": lo["layer0.wq"]["A"],
+                            "B": jax.random.normal(jax.random.fold_in(key, 10 + i),
+                                                   lo["layer0.wq"]["B"].shape)}}
+        loras.append(mask_lora_params(lo, int(r), r_g))
+    stack = jax.tree_util.tree_map(lambda *xs: jnp.stack(xs), *loras)
+
+    fed = AG.fedilora(stack, jnp.asarray(ranks), p)
+    het = AG.hetlora(stack, jnp.asarray(ranks), p, beta=0.0)
+
+    a_hi = np.asarray(stack["layer0.wq"]["A"][3, 0, 4:, :])  # dims only client 3 has
+    a_fed = np.asarray(fed["layer0.wq"]["A"][0, 4:, :])
+    a_het = np.asarray(het["layer0.wq"]["A"][0, 4:, :])
+    print("\nrows 4..8 exist only in the rank-8 client:")
+    print(f"  ‖client row‖      = {np.linalg.norm(a_hi):.3f}")
+    print(f"  ‖FediLoRA row‖    = {np.linalg.norm(a_fed):.3f}   (verbatim — no dilution)")
+    print(f"  ‖HetLoRA row‖     = {np.linalg.norm(a_het):.3f}   (divided by K=4)")
+
+
+if __name__ == "__main__":
+    main()

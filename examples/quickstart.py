@@ -1,0 +1,61 @@
+"""Quickstart: federated multimodal LoRA fine-tuning with FediLoRA in ~60 s.
+
+Ten clients with heterogeneous LoRA ranks (4..32) fine-tune a tiny
+prefix-VLM on a synthetic image-captioning task with 60% missing
+modalities; the server aggregates with the paper's dimension-wise
+reweighting and clients repair their least-similar LoRA layer from the
+previous global round.
+
+Run:  PYTHONPATH=src python examples/quickstart.py
+"""
+
+import numpy as np
+
+from repro.configs import get_config
+from repro.core.editing import EditConfig
+from repro.data.missing import apply_missing_modality
+from repro.data.partition import heterogeneous_sizes
+from repro.data.synthetic import SyntheticTaskConfig, make_federated_datasets
+from repro.federated import FederatedConfig, FederatedTrainer
+from repro.optim import OptimizerConfig
+
+
+def main():
+    task = SyntheticTaskConfig(seed=0)
+    sizes = heterogeneous_sizes(10, 700, seed=0)
+    clients, global_test = make_federated_datasets(task, 10, sizes, seed=0)
+
+    train_shards, eval_shards = [], []
+    for k, d in enumerate(clients):
+        n_tr = int(d["tokens"].shape[0] * 0.8)
+        shard = {kk: v[:n_tr] for kk, v in d.items()}
+        # FedMultimodal protocol: 60% of examples lose image or text
+        shard = apply_missing_modality(shard, 0.6, task.prompt_len, seed=k)
+        train_shards.append(shard)
+        eval_shards.append({kk: v[n_tr:] for kk, v in d.items()})
+
+    fed = FederatedConfig(
+        num_clients=10, sample_rate=0.4,
+        ranks=(4, 8, 8, 12, 12, 16, 16, 24, 32, 32),   # heterogeneous capacity
+        local_steps=6, batch_size=8,
+        aggregator="fedilora",                          # the paper's method
+        edit=EditConfig(k=1, matrices="A"))             # Min-1, A-only editing
+    opt = OptimizerConfig(peak_lr=3e-3, total_steps=600)
+
+    trainer = FederatedTrainer(get_config("fedbench-tiny"), fed, opt,
+                               train_shards, eval_shards, global_test)
+    print("round  train_loss  edited_layer_modules")
+    for r in range(8):
+        rec = trainer.run_round()
+        print(f"{rec['round']:>5}  {rec['train_loss']:<10.4f}  {rec['edited_layers']}")
+
+    g = trainer.evaluate_global(n=32)
+    p = trainer.evaluate_personalized(n=8)
+    print(f"\nglobal:        loss={g['loss']:.4f} acc={g['acc']:.3f} "
+          f"BLEU={g['bleu']:.2f} RSUM={g['rsum']:.2f}")
+    print(f"personalized:  loss={p['loss']:.4f} acc={p['acc']:.3f} "
+          f"BLEU={p['bleu']:.2f} RSUM={p['rsum']:.2f}")
+
+
+if __name__ == "__main__":
+    main()

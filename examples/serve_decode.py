@@ -1,0 +1,61 @@
+"""Serving path demo: batched one-token decode with per-family caches.
+
+Loads reduced variants of three assigned architectures — dense GQA
+(qwen2-0.5b, KV cache), SSM (mamba2-130m, O(1) recurrent state) and MLA
+(deepseek-v2, compressed latent cache) — attaches a LoRA adapter, prefills a
+prompt and greedily decodes continuations through ``serve_step``, verifying
+decode-vs-prefill logits agreement along the way.
+
+Run:  PYTHONPATH=src python examples/serve_decode.py
+"""
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get_reduced_config
+from repro.core.lora import LoRAConfig, init_lora_params
+from repro.launch.steps import make_serve_step
+from repro.models import transformer as T
+
+
+def demo(arch: str, prompt_len=8, gen_len=8, batch=4):
+    import dataclasses
+    cfg = get_reduced_config(arch)
+    if cfg.moe is not None:
+        # raise expert capacity so no token drops — prefill routes per full
+        # batch while decode routes per step, and dropped tokens would make
+        # the two paths (correctly) disagree
+        cfg = dataclasses.replace(cfg, moe=dataclasses.replace(
+            cfg.moe, capacity_factor=8.0))
+    key = jax.random.PRNGKey(0)
+    params = T.init_params(key, cfg)
+    lora = init_lora_params(key, T.lora_specs(cfg), LoRAConfig(rank=8))
+    serve_step = jax.jit(make_serve_step(cfg, lora_scale=0.5))
+
+    prompt = jax.random.randint(key, (batch, prompt_len), 4, cfg.vocab_size)
+    max_len = prompt_len + gen_len
+    cache = T.init_cache(cfg, params, batch, max_len)
+
+    # prefill by streaming the prompt through serve_step (teacher forcing)
+    full, _ = T.forward(cfg, params, prompt, lora=lora, lora_scale=0.5)
+    last = None
+    for t in range(prompt_len):
+        last, cache = serve_step(params, lora, cache, prompt[:, t], jnp.asarray(t))
+        err = float(jnp.max(jnp.abs(last - full[:, t].astype(jnp.float32))))
+        assert err < 2e-3, f"{arch}: decode/prefill mismatch {err}"
+
+    toks = [jnp.argmax(last, -1)]
+    for t in range(prompt_len, max_len - 1):
+        last, cache = serve_step(params, lora, cache, toks[-1].astype(jnp.int32),
+                                 jnp.asarray(t))
+        toks.append(jnp.argmax(last, -1))
+    gen = jnp.stack(toks, 1)
+    cache_mb = sum(x.size * x.dtype.itemsize
+                   for x in jax.tree_util.tree_leaves(cache)) / 2 ** 20
+    print(f"{arch:<22} generated {gen.shape} | cache {cache_mb:.2f} MiB "
+          f"| decode==prefill ✓")
+
+
+if __name__ == "__main__":
+    for arch in ("qwen2-0.5b", "mamba2-130m", "deepseek-v2-236b"):
+        demo(arch)

@@ -1,0 +1,75 @@
+"""Checkpointing: flat-key npz serialisation of parameter pytrees + federated
+server/client state.  Path separator "/" over dict keys; dataclass states are
+decomposed into their pytree fields.  Deterministic round-trip (tests assert
+bit-equality)."""
+
+from __future__ import annotations
+
+import json
+import os
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+Pytree = Any
+_SEP = "/"
+
+
+def _flatten(tree: Pytree, prefix: str = "") -> dict:
+    out = {}
+    if isinstance(tree, dict):
+        for k in sorted(tree.keys()):
+            out.update(_flatten(tree[k], f"{prefix}{k}{_SEP}"))
+    elif isinstance(tree, (list, tuple)):
+        for i, v in enumerate(tree):
+            out.update(_flatten(v, f"{prefix}{i}{_SEP}"))
+    else:
+        out[prefix.rstrip(_SEP)] = np.asarray(tree)
+    return out
+
+
+def save_pytree(path: str, tree: Pytree) -> None:
+    flat = _flatten(tree)
+    os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
+    np.savez(path, **flat)
+
+
+def _insert(root: dict, keys: list[str], value):
+    node = root
+    for k in keys[:-1]:
+        node = node.setdefault(k, {})
+    node[keys[-1]] = jnp.asarray(value)
+
+
+def load_pytree(path: str) -> Pytree:
+    data = np.load(path)
+    root: dict = {}
+    for k in data.files:
+        _insert(root, k.split(_SEP), data[k])
+    return root
+
+
+def save_federated(dirpath: str, trainer) -> None:
+    """Persist server + per-client adapter state of a FederatedTrainer."""
+    os.makedirs(dirpath, exist_ok=True)
+    save_pytree(os.path.join(dirpath, "global_lora.npz"), trainer.server.global_lora)
+    save_pytree(os.path.join(dirpath, "prev_global.npz"), trainer.server.prev_global)
+    for i, c in enumerate(trainer.clients):
+        save_pytree(os.path.join(dirpath, f"client_{i}.npz"), c.lora)
+    meta = {"round": trainer.server.round,
+            "ranks": [c.rank for c in trainer.clients],
+            "aggregator": trainer.fcfg.aggregator}
+    with open(os.path.join(dirpath, "meta.json"), "w") as f:
+        json.dump(meta, f)
+
+
+def load_federated(dirpath: str, trainer) -> None:
+    with open(os.path.join(dirpath, "meta.json")) as f:
+        meta = json.load(f)
+    trainer.server.global_lora = load_pytree(os.path.join(dirpath, "global_lora.npz"))
+    trainer.server.prev_global = load_pytree(os.path.join(dirpath, "prev_global.npz"))
+    trainer.server.round = meta["round"]
+    for i, c in enumerate(trainer.clients):
+        c.lora = load_pytree(os.path.join(dirpath, f"client_{i}.npz"))

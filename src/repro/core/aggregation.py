@@ -1,0 +1,173 @@
+"""Federated LoRA aggregation strategies.
+
+All strategies consume *stacked* client LoRA pytrees — every leaf carries a
+leading client axis ``K`` (``A: [K, L, r_g, n]``, ``B: [K, L, m, r_g]``) plus a
+static-shape rank vector ``ranks: i32[K]`` and base FedAvg weights
+``p: f32[K]`` (normalised local data sizes, paper Eq. 1).  Stacking makes every
+strategy a pure, jit-able tensor program; on the production mesh the client
+axis lives on ``data`` so aggregation lowers to a weighted
+reduce-scatter/all-reduce rather than a parameter-server gather (DESIGN.md §3).
+
+Implemented:
+
+* ``fedavg``     — plain weighted mean (homogeneous-rank baseline, FedIT-style).
+* ``hetlora``    — zero-pad + sparsity(Frobenius-norm)-weighted mean, global
+                   truncate-redistribute (Cho et al., 2024).
+* ``flora``      — noise-free stacking: dW = sum_k p_k B_k A_k folded into a
+                   dense accumulated delta; clients re-init LoRA each round
+                   (Wang et al., 2024).
+* ``fedilora``   — the paper's dimension-wise reweighting (Eqs. 3-5): row d of
+                   the global A (col d of B) is averaged only over clients
+                   whose rank covers d, with weights renormalised per-dimension.
+"""
+
+from __future__ import annotations
+
+from typing import Callable, Mapping
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.lora import rank_mask
+
+Pytree = object
+_EPS = 1e-12
+
+
+def _client_masks(ranks: jax.Array, r_g: int, dtype=jnp.float32) -> jax.Array:
+    """[K, r_g] binary masks, mask[k, d] = 1[d < r_k] (paper Eq. 3)."""
+    return jax.vmap(lambda r: rank_mask(r, r_g, dtype))(ranks)
+
+
+def dimension_wise_weights(ranks: jax.Array, p: jax.Array, r_g: int) -> jax.Array:
+    """Paper Eq. 4: p~_k^(d) = mask_k^(d) p_k / sum_j mask_j^(d) p_j  → [K, r_g].
+
+    Rows (dimensions) covered by no client get all-zero weights.
+    """
+    masks = _client_masks(ranks, r_g, p.dtype)          # [K, r_g]
+    num = masks * p[:, None]                            # [K, r_g]
+    den = jnp.sum(num, axis=0, keepdims=True)           # [1, r_g]
+    return num / jnp.maximum(den, _EPS)
+
+
+# ---------------------------------------------------------------------------
+# FedAvg (homogeneous baseline)
+# ---------------------------------------------------------------------------
+
+def fedavg(stacked: Pytree, ranks: jax.Array, p: jax.Array) -> Pytree:
+    """Plain data-size-weighted mean over the client axis (paper Eq. 1).
+
+    With heterogeneous ranks this is exactly HetLoRA-style zero-pad averaging
+    with uniform-in-k weights: padded rows dilute by sum over *all* K clients.
+    """
+    p = p / jnp.maximum(jnp.sum(p), _EPS)
+
+    def _agg(leaf):
+        return jnp.einsum("k,k...->...", p.astype(leaf.dtype), leaf)
+
+    return jax.tree_util.tree_map(_agg, stacked)
+
+
+# ---------------------------------------------------------------------------
+# HetLoRA (Cho et al. 2024): zero-pad + sparsity-weighted aggregation
+# ---------------------------------------------------------------------------
+
+def hetlora_sparsity_weights(stacked: Pytree, p: jax.Array, beta: float = 1.0) -> jax.Array:
+    """HetLoRA reweights clients by the Frobenius norm of their update
+    (||B_k A_k||_F proxied by ||A_k||_F * ||B_k||_F over all modules), so
+    'information-rich' clients count more.  Padded rows contribute zero norm.
+    """
+    def _per_client_norm(tree):
+        leaves = jax.tree_util.tree_leaves(tree)
+        sq = sum(jnp.sum(jnp.square(x.astype(jnp.float32)), axis=tuple(range(1, x.ndim)))
+                 for x in leaves)  # [K]
+        return jnp.sqrt(sq)
+
+    norms = _per_client_norm(stacked) ** beta
+    w = p * norms
+    return w / jnp.maximum(jnp.sum(w), _EPS)
+
+
+def hetlora(stacked: Pytree, ranks: jax.Array, p: jax.Array, beta: float = 1.0) -> Pytree:
+    """Zero-padding aggregation with sparsity weighting.  Crucially the
+    denominator is the *total* weight (all K clients), so dimensions only a few
+    high-rank clients populate are diluted — the failure mode FediLoRA fixes
+    and Fig. 5 (global adapter L2 collapse) measures.
+    """
+    w = hetlora_sparsity_weights(stacked, p, beta)
+
+    def _agg(leaf):
+        return jnp.einsum("k,k...->...", w.astype(leaf.dtype), leaf)
+
+    return jax.tree_util.tree_map(_agg, stacked)
+
+
+def hetlora_self_prune(entry: Mapping[str, jax.Array], rank: jax.Array, r_g: int,
+                       gamma: float = 0.99) -> jax.Array:
+    """HetLoRA rank self-pruning: drop trailing dimensions whose cumulative
+    contribution (by |A row| * |B col| mass) is below a (1-gamma) tail.
+    Returns the pruned rank (never grows)."""
+    a_mass = jnp.sqrt(jnp.sum(jnp.square(entry["A"]), axis=(0, 2)))  # [r_g]
+    b_mass = jnp.sqrt(jnp.sum(jnp.square(entry["B"]), axis=(0, 1)))  # [r_g]
+    mass = a_mass * b_mass
+    total = jnp.maximum(jnp.sum(mass), _EPS)
+    cum = jnp.cumsum(mass) / total
+    kept = jnp.sum((cum < gamma).astype(jnp.int32)) + 1
+    return jnp.minimum(jnp.minimum(kept, rank), r_g)
+
+
+# ---------------------------------------------------------------------------
+# FLoRA (Wang et al. 2024): stacking-based, noise-free aggregation
+# ---------------------------------------------------------------------------
+
+def flora_delta(stacked: Pytree, ranks: jax.Array, p: jax.Array, scale: float) -> Pytree:
+    """Noise-free global update: dW = sum_k p_k * scale * B_k A_k.
+
+    Stacking [A_1; ...; A_K] row-wise and [B_1 ... B_K] col-wise and
+    multiplying is *identical* to summing the per-client products — we compute
+    the sum directly (the padded tail rows/cols are zero, so heterogeneous
+    ranks need no special casing).  Returns dense deltas {name: [L, m, n]}.
+    """
+    p = p / jnp.maximum(jnp.sum(p), _EPS)
+
+    def _delta(entry):
+        d = jnp.einsum("k,klor,klri->loi", p.astype(entry["A"].dtype), entry["B"], entry["A"])
+        return scale * d
+
+    return {name: _delta(entry) for name, entry in stacked.items()}
+
+
+# ---------------------------------------------------------------------------
+# FediLoRA (the paper): dimension-wise reweighted aggregation
+# ---------------------------------------------------------------------------
+
+def fedilora(stacked: Pytree, ranks: jax.Array, p: jax.Array) -> Pytree:
+    """Paper Eqs. 3-5.  Row d of global A aggregates only clients with
+    r_k >= d, with weights renormalised within that set; likewise col d of B.
+
+    Degenerate cases: homogeneous ranks → exactly FedAvg;  a dimension covered
+    by a single client → that client's row verbatim (no dilution).
+    """
+    r_g = None
+    for entry in stacked.values():
+        r_g = entry["A"].shape[2]  # [K, L, r_g, n]
+        break
+    assert r_g is not None, "empty LoRA tree"
+    pt = dimension_wise_weights(ranks, p, r_g)  # [K, r_g]
+
+    out = {}
+    for name, entry in stacked.items():
+        a, b = entry["A"], entry["B"]
+        w = pt.astype(a.dtype)
+        out[name] = {
+            "A": jnp.einsum("kd,kldn->ldn", w, a),   # row-wise over rank dim
+            "B": jnp.einsum("kd,klmd->lmd", w, b),   # col-wise over rank dim
+        }
+    return out
+
+
+AGGREGATORS: dict[str, Callable] = {
+    "fedavg": fedavg,
+    "hetlora": hetlora,
+    "fedilora": fedilora,
+}

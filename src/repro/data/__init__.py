@@ -1,0 +1,8 @@
+from repro.data.synthetic import (  # noqa: F401
+    MultimodalBatch,
+    SyntheticTaskConfig,
+    make_federated_datasets,
+    make_synthetic_dataset,
+)
+from repro.data.partition import dirichlet_partition  # noqa: F401
+from repro.data.missing import apply_missing_modality  # noqa: F401

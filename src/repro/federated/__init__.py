@@ -1,0 +1,2 @@
+from repro.federated.config import FederatedConfig  # noqa: F401
+from repro.federated.runtime import FederatedTrainer, ServerState, ClientState  # noqa: F401

@@ -1,0 +1,33 @@
+"""Federated fine-tuning configuration (paper Sec. 4 experimental setup)."""
+
+from __future__ import annotations
+
+import dataclasses
+
+from repro.core.editing import EditConfig
+
+
+@dataclasses.dataclass(frozen=True)
+class FederatedConfig:
+    num_clients: int = 10
+    sample_rate: float = 0.4                 # clients per round (paper: 0.4)
+    # heterogeneous ranks 4..32 (paper Sec. 4); len must equal num_clients
+    ranks: tuple = (4, 8, 8, 12, 12, 16, 16, 24, 32, 32)
+    local_steps: int = 10
+    batch_size: int = 8
+    aggregator: str = "fedilora"             # fedavg | hetlora | flora |
+    #                                          fedilora | fedilora_kernel
+    edit: EditConfig = dataclasses.field(default_factory=EditConfig)
+    lora_alpha: float = 16.0
+    missing_ratio: float = 0.0
+    seed: int = 0
+    hetlora_beta: float = 1.0
+    hetlora_prune_gamma: float = 0.0         # >0 enables rank self-pruning
+
+    @property
+    def global_rank(self) -> int:
+        return max(self.ranks)
+
+    def homogeneous(self, rank: int = 12) -> "FederatedConfig":
+        """Paper Table 3: homogeneous configuration (all clients rank 12)."""
+        return dataclasses.replace(self, ranks=(rank,) * self.num_clients)

@@ -1,0 +1,286 @@
+"""Federated LoRA training runtime (server + clients + round loop).
+
+One communication round (paper Fig. 3):
+
+1. server distributes the global LoRA truncated to each sampled client's rank
+   (``truncate_redistribute``);  FLoRA instead folds the accumulated dense
+   delta into the effective base weights and clients re-init fresh LoRA;
+2. each client runs ``local_steps`` LoRA-only AdamW steps on its private,
+   possibly modality-incomplete shard (jit'd ``lax.scan`` over prefetched
+   batches);
+3. **LoRA editing** (FediLoRA Sec. 3.2) runs at the end of local fine-tuning
+   and *before* aggregation: cosine-similarity vs. the previous round's
+   global A, argmin layer, soft blend;
+4. the server stacks the sampled clients' padded adapters and aggregates
+   with the configured strategy (FedAvg / HetLoRA / FLoRA / FediLoRA).
+
+Clients keep their post-edit adapters for the *personalized* evaluation; the
+aggregated adapter is the *global* evaluation target (paper Table 1).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import aggregation as AG
+from repro.core.editing import EditConfig, edit_lora
+from repro.core.lora import (LoRAConfig, init_lora_params, mask_lora_params,
+                             truncate_redistribute)
+from repro.data.synthetic import EOS, SEP, batch_iterator
+from repro.federated.config import FederatedConfig
+from repro.metrics import corpus_scores
+from repro.models import transformer as T
+from repro.models.config import ModelConfig
+from repro.optim import OptimizerConfig, make_optimizer
+
+Pytree = Any
+
+
+@dataclasses.dataclass
+class ServerState:
+    global_lora: Pytree          # padded to r_g
+    prev_global: Pytree          # A_{g,t-1} for editing (paper Eq. 6)
+    round: int = 0
+    flora_delta: Pytree | None = None
+
+
+@dataclasses.dataclass
+class ClientState:
+    rank: int
+    lora: Pytree                 # padded to r_g, masked to rank
+    data: dict                   # training shard (possibly modality-dropped)
+    eval_data: dict              # local test split (complete modalities)
+    size: int
+    rng: np.random.Generator
+
+
+class FederatedTrainer:
+    def __init__(self, model_cfg: ModelConfig, fed_cfg: FederatedConfig,
+                 opt_cfg: OptimizerConfig, client_train: list[dict],
+                 client_eval: list[dict], global_test: dict,
+                 base_params: Pytree | None = None, seed: int = 0):
+        self.mcfg = model_cfg
+        self.fcfg = fed_cfg
+        self.ocfg = opt_cfg
+        self.global_test = global_test
+        key = jax.random.PRNGKey(seed)
+        self.base_params = base_params if base_params is not None \
+            else T.init_params(key, model_cfg)
+        self.specs = T.lora_specs(model_cfg)
+        r_g = fed_cfg.global_rank
+        self.lcfg = LoRAConfig(rank=r_g, alpha=fed_cfg.lora_alpha)
+        self.lora_scale = fed_cfg.lora_alpha / r_g
+        g0 = init_lora_params(jax.random.fold_in(key, 1), self.specs, self.lcfg)
+        self.server = ServerState(global_lora=g0,
+                                  prev_global=jax.tree_util.tree_map(jnp.copy, g0))
+        self.clients: list[ClientState] = []
+        for k in range(fed_cfg.num_clients):
+            lora_k = init_lora_params(jax.random.fold_in(key, 100 + k), self.specs,
+                                      self.lcfg, client_rank=fed_cfg.ranks[k])
+            self.clients.append(ClientState(
+                rank=fed_cfg.ranks[k], lora=lora_k, data=client_train[k],
+                eval_data=client_eval[k], size=client_train[k]["tokens"].shape[0],
+                rng=np.random.default_rng(seed + 7 * k + 1)))
+        self._opt_init, self._opt_update = make_optimizer(opt_cfg)
+        self._local_train = jax.jit(self._local_train_impl)
+        self._eval_loss = jax.jit(self._eval_loss_impl)
+        self._next_logits = jax.jit(self._next_logits_impl)
+        self.rng = np.random.default_rng(seed)
+        self.history: list[dict] = []
+
+    # ------------------------------------------------------------------ local
+    def _local_train_impl(self, base_params, lora, rank, batches):
+        """scan over prefetched batches; grads masked to the client's rank
+        subspace so padded dims stay exactly zero."""
+        opt_state = self._opt_init(lora)
+        r_g = self.lcfg.rank
+
+        def loss_of(lo, mb):
+            loss, _ = T.loss_fn(self.mcfg, base_params, lo, mb, self.lora_scale)
+            return loss
+
+        def step(carry, mb):
+            lo, opt = carry
+            loss, g = jax.value_and_grad(loss_of)(lo, mb)
+            g = mask_lora_params(g, rank, r_g)
+            lo, opt = self._opt_update(lo, g, opt)
+            lo = mask_lora_params(lo, rank, r_g)
+            return (lo, opt), loss
+
+        (lora, _), losses = jax.lax.scan(step, (lora, opt_state), batches)
+        return lora, losses
+
+    def _prefetch(self, client: ClientState) -> dict:
+        it = batch_iterator(client.data, self.fcfg.batch_size, client.rng)
+        bs = [next(it) for _ in range(self.fcfg.local_steps)]
+        stacked = {k: np.stack([b[k] for b in bs]) for k in bs[0]}
+        return {k: jnp.asarray(v) for k, v in stacked.items()
+                if k in ("tokens", "labels", "loss_mask", "image", "image_mask",
+                         "audio", "text_mask")}
+
+    # ------------------------------------------------------------------ round
+    def run_round(self) -> dict:
+        fc = self.fcfg
+        n_sample = max(int(round(fc.sample_rate * fc.num_clients)), 1)
+        sampled = sorted(self.rng.choice(fc.num_clients, n_sample, replace=False))
+        r_g = self.lcfg.rank
+
+        edited_layers, losses = [], []
+        for k in sampled:
+            c = self.clients[k]
+            if fc.aggregator == "flora":
+                # FLoRA: server folded delta into base; clients restart LoRA
+                lora0 = init_lora_params(
+                    jax.random.PRNGKey(1000 * self.server.round + k),
+                    self.specs, self.lcfg, client_rank=c.rank)
+            else:
+                lora0 = truncate_redistribute(self.server.global_lora, c.rank, r_g)
+            batches = self._prefetch(c)
+            lora1, ls = self._local_train(self.base_params, lora0, c.rank, batches)
+            losses.append(float(ls[-1]))
+            # HetLoRA rank self-pruning (Cho et al. 2024): clients shrink
+            # their rank when trailing dims carry negligible mass
+            if fc.aggregator == "hetlora" and fc.hetlora_prune_gamma > 0:
+                pruned = c.rank
+                for entry in lora1.values():
+                    pr = AG.hetlora_self_prune(entry, c.rank, r_g,
+                                               fc.hetlora_prune_gamma)
+                    pruned = min(pruned, int(pr))
+                if pruned < c.rank:
+                    c.rank = max(pruned, 1)
+                    lora1 = mask_lora_params(lora1, c.rank, r_g)
+            # --- layer-wise editing (before aggregation, paper Fig. 3) ------
+            if fc.edit.enabled and fc.aggregator != "flora":
+                glob_prev = truncate_redistribute(self.server.prev_global, c.rank, r_g)
+                lora1, diag = edit_lora(lora1, glob_prev, fc.edit)
+                lora1 = mask_lora_params(lora1, c.rank, r_g)
+                edited_layers.append(int(jnp.argmax(diag["selected"])))
+            c.lora = lora1
+
+        # ---- aggregate --------------------------------------------------
+        stacked = jax.tree_util.tree_map(
+            lambda *xs: jnp.stack(xs), *[self.clients[k].lora for k in sampled])
+        ranks = jnp.asarray([self.clients[k].rank for k in sampled])
+        sizes = np.asarray([self.clients[k].size for k in sampled], np.float32)
+        p = jnp.asarray(sizes / sizes.sum())
+
+        self.server.prev_global = self.server.global_lora
+        if fc.aggregator == "fedavg":
+            self.server.global_lora = AG.fedavg(stacked, ranks, p)
+        elif fc.aggregator == "hetlora":
+            self.server.global_lora = AG.hetlora(stacked, ranks, p, fc.hetlora_beta)
+        elif fc.aggregator == "fedilora":
+            self.server.global_lora = AG.fedilora(stacked, ranks, p)
+        elif fc.aggregator == "fedilora_kernel":
+            # Pallas dimension-wise aggregation kernel (repro/kernels) —
+            # numerically identical to `fedilora` (tested), fused on TPU
+            from repro.kernels.ops import fedilora_aggregate_tree
+            self.server.global_lora = fedilora_aggregate_tree(stacked, ranks, p)
+        elif fc.aggregator == "flora":
+            delta = AG.flora_delta(stacked, ranks, p, self.lora_scale)
+            self.base_params = apply_weight_deltas(self.base_params, delta)
+            self.server.global_lora = init_lora_params(
+                jax.random.PRNGKey(self.server.round + 77), self.specs, self.lcfg)
+        else:
+            raise ValueError(fc.aggregator)
+        self.server.round += 1
+        rec = {"round": self.server.round, "sampled": list(map(int, sampled)),
+               "train_loss": float(np.mean(losses)),
+               "edited_layers": edited_layers}
+        self.history.append(rec)
+        return rec
+
+    # ------------------------------------------------------------------ eval
+    def _next_logits_impl(self, base_params, toks, lora, pos, image):
+        logits, _ = T.forward(self.mcfg, base_params, toks, lora=lora,
+                              lora_scale=self.lora_scale, vision=image)
+        return jnp.take_along_axis(
+            logits, pos[None, None, None].astype(jnp.int32), axis=1)[:, 0]
+
+    def _eval_loss_impl(self, base_params, lora, batch):
+        _, m = T.loss_fn(self.mcfg, base_params, lora, batch, self.lora_scale)
+        return m
+
+    def _eval_batch(self, data: dict, n: int = 64) -> dict:
+        sl = {k: jnp.asarray(v[:n]) for k, v in data.items()
+              if k in ("tokens", "labels", "loss_mask", "image", "audio")}
+        return sl
+
+    def evaluate_global(self, generate: bool = True, n: int = 32) -> dict:
+        m = self._eval_loss(self.base_params, self.server.global_lora,
+                            self._eval_batch(self.global_test))
+        out = {"loss": float(m["loss"]), "acc": float(m["acc"])}
+        if generate:
+            out.update(self.generation_scores(self.server.global_lora,
+                                              self.global_test, n))
+        return out
+
+    def evaluate_personalized(self, generate: bool = True, n: int = 16) -> dict:
+        """Size-weighted average of client-local performance (paper Sec. 2.2)."""
+        accs, losses, bleus, rsums, w = [], [], [], [], []
+        for c in self.clients:
+            m = self._eval_loss(self.base_params, c.lora, self._eval_batch(c.eval_data))
+            losses.append(float(m["loss"]));  accs.append(float(m["acc"]))
+            if generate:
+                g = self.generation_scores(c.lora, c.eval_data, n)
+                bleus.append(g["bleu"]);  rsums.append(g["rsum"])
+            w.append(c.size)
+        w = np.asarray(w, np.float64);  w = w / w.sum()
+        out = {"loss": float(np.dot(w, losses)), "acc": float(np.dot(w, accs))}
+        if generate:
+            out["bleu"] = float(np.dot(w, bleus))
+            out["rsum"] = float(np.dot(w, rsums))
+        return out
+
+    def generation_scores(self, lora, data: dict, n: int = 32) -> dict:
+        """Greedy caption generation → Google-BLEU / ROUGE-LSum (paper metrics)."""
+        cfg = self.mcfg
+        tokens = np.asarray(data["tokens"][:n])
+        labels = np.asarray(data["labels"][:n])
+        loss_mask = np.asarray(data["loss_mask"][:n])
+        image = jnp.asarray(data["image"][:n]) if "image" in data else None
+        # prompt = everything before the first supervised position
+        cap_start = int(np.argmax(loss_mask[0] > 0))  # position of SEP logits
+        gen_len = int(loss_mask[0].sum())
+        toks = np.array(tokens, copy=True)
+        toks[:, cap_start + 1:] = 0
+        toks = jnp.asarray(toks)
+
+        for t in range(gen_len):
+            pos = jnp.asarray(cap_start + t)
+            lg = self._next_logits(self.base_params, toks, lora, pos, image)
+            nxt = jnp.argmax(lg, -1)
+            toks = toks.at[:, cap_start + 1 + t].set(nxt.astype(toks.dtype))
+        hyps, refs = [], []
+        toks = np.asarray(toks)
+        for i in range(toks.shape[0]):
+            h = toks[i, cap_start + 1: cap_start + 1 + gen_len].tolist()
+            r = labels[i][loss_mask[i] > 0].tolist()
+            h = h[: h.index(EOS)] if EOS in h else h
+            r = [x for x in r if x != EOS]
+            hyps.append(h);  refs.append(r)
+        return corpus_scores(hyps, refs)
+
+
+def apply_weight_deltas(params: Pytree, deltas: dict) -> Pytree:
+    """Fold FLoRA dense deltas {spec_name: [L, out, in]} into base weights."""
+    params = jax.tree_util.tree_map(lambda x: x, params)  # shallow copy
+    for name, delta in deltas.items():
+        upd = jnp.swapaxes(delta, -1, -2)  # [L, in, out]
+        if name.startswith("enc."):
+            node = params["encoder"]["blocks"]["s0"]
+            path = name.split(".")[1:]
+        else:
+            sub, rest = name.split(".", 1)
+            node = params["blocks"][sub]
+            path = rest.split(".")
+        for p in path[:-1]:
+            node = node[p]
+        node[path[-1]] = node[path[-1]] + upd.astype(node[path[-1]].dtype)
+    return params

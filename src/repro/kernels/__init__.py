@@ -1,0 +1,24 @@
+"""Pallas TPU kernels for the framework's compute hot spots.
+
+* ``lora_matmul`` — fused base+LoRA projection ``y = x@W + s·(x@Aᵀ)@Bᵀ``:
+  the inner loop of every adapted q/v projection, every layer, both phases.
+  Fusing removes two HBM round-trips of the [M, r] low-rank activation and
+  the [M, N] delta.
+* ``dim_agg`` — FediLoRA's dimension-wise reweighted aggregation (paper
+  Eqs. 3-5) over K stacked client adapters: a masked weighted reduction
+  executed on-device at the end of every communication round.
+* ``flash_attention`` — online-softmax attention over VMEM KV tiles with
+  causal/sliding-window masking (the 32k-prefill compute hot spot;
+  §Roofline), GQA handled in the ops wrapper.
+
+Each kernel ships ``<name>.py`` (pl.pallas_call + BlockSpec VMEM tiling),
+``ref.py`` (pure-jnp oracle) and ``ops.py`` (jit'd dispatch wrappers);
+tests sweep shapes/dtypes in interpret mode against the oracles.
+"""
+
+from repro.kernels.ops import (  # noqa: F401
+    dimension_wise_aggregate,
+    fedilora_aggregate_tree,
+    flash_attention,
+    fused_lora_matmul,
+)

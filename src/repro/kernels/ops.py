@@ -1,0 +1,114 @@
+"""jit'd dispatch wrappers for the Pallas kernels.
+
+On this CPU container the kernels execute in interpret mode (the Pallas body
+runs in Python for correctness validation); on TPU the same call sites lower
+to Mosaic.  ``interpret=None`` auto-detects.  Inputs that don't tile exactly
+are zero-padded to the block grid and the result is sliced back.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ref
+from repro.kernels.dim_agg import dim_agg_pallas
+from repro.kernels.flash_attention import flash_attention_pallas
+from repro.kernels.lora_matmul import lora_matmul_pallas
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def _pad_to(x, axis: int, mult: int):
+    rem = (-x.shape[axis]) % mult
+    if rem == 0:
+        return x
+    pad = [(0, 0)] * x.ndim
+    pad[axis] = (0, rem)
+    return jnp.pad(x, pad)
+
+
+def fused_lora_matmul(x, w, a, b, *, scale: float = 1.0, bm: int = 256,
+                      bn: int = 256, bk: int = 512, interpret: bool | None = None):
+    """y = x@W + scale·(x@Aᵀ)@Bᵀ with arbitrary leading batch dims on x."""
+    if interpret is None:
+        interpret = not _on_tpu()
+    lead = x.shape[:-1]
+    K = x.shape[-1]
+    N = w.shape[1]
+    x2 = x.reshape(-1, K)
+    M = x2.shape[0]
+    bm_, bn_, bk_ = min(bm, M), min(bn, N), min(bk, K)
+    xp = _pad_to(_pad_to(x2, 0, bm_), 1, bk_)
+    wp = _pad_to(_pad_to(w, 0, bk_), 1, bn_)
+    ap = _pad_to(a, 1, bk_)
+    bp = _pad_to(b, 0, bn_)
+    y = lora_matmul_pallas(xp, wp, ap, bp, scale=scale, bm=bm_, bn=bn_, bk=bk_,
+                           interpret=interpret)
+    return y[:M, :N].reshape(*lead, N)
+
+
+def dimension_wise_aggregate(stacked, weights, *, bn: int = 512,
+                             interpret: bool | None = None):
+    """FediLoRA Eq. 5 over one stacked leaf [K, L, r, n] with w̃ [K, r]."""
+    if interpret is None:
+        interpret = not _on_tpu()
+    n = stacked.shape[-1]
+    bn_ = min(bn, n)
+    sp = _pad_to(stacked, 3, bn_)
+    out = dim_agg_pallas(sp, weights, bn=bn_, interpret=interpret)
+    return out[..., :n]
+
+
+def fedilora_aggregate_tree(stacked_tree, ranks, p, *, interpret: bool | None = None):
+    """Kernel-backed FediLoRA aggregation over a stacked LoRA pytree —
+    drop-in for ``repro.core.aggregation.fedilora`` (A rows / B cols)."""
+    from repro.core.aggregation import dimension_wise_weights
+
+    first = next(iter(stacked_tree.values()))
+    r_g = first["A"].shape[2]
+    w = dimension_wise_weights(ranks, p, r_g)     # [K, r_g]
+    out = {}
+    for name, entry in stacked_tree.items():
+        a = dimension_wise_aggregate(entry["A"], w, interpret=interpret)
+        bt = jnp.swapaxes(entry["B"], -1, -2)     # [K, L, r, m]
+        b = dimension_wise_aggregate(bt, w, interpret=interpret)
+        out[name] = {"A": a, "B": jnp.swapaxes(b, -1, -2)}
+    return out
+
+
+def flash_attention(q, k, v, *, causal: bool = True, window: int = 0,
+                    bq: int = 256, bk: int = 256,
+                    interpret: bool | None = None):
+    """q: [B,Sq,H,d]; k,v: [B,Sk,KV,d] (GQA) → [B,Sq,H,dv].  Folds heads
+    into the batch grid dim, repeats KV heads for GQA, pads Sq/Sk to the
+    tile grid and slices back."""
+    if interpret is None:
+        interpret = not _on_tpu()
+    B, Sq, H, d = q.shape
+    Sk, KV = k.shape[1], k.shape[2]
+    dv = v.shape[-1]
+    if KV != H:
+        rep = H // KV
+        k = jnp.repeat(k, rep, axis=2)
+        v = jnp.repeat(v, rep, axis=2)
+    qf = q.transpose(0, 2, 1, 3).reshape(B * H, Sq, d)
+    kf = k.transpose(0, 2, 1, 3).reshape(B * H, Sk, d)
+    vf = v.transpose(0, 2, 1, 3).reshape(B * H, Sk, dv)
+    bq_, bk_ = min(bq, Sq), min(bk, Sk)
+    qp = _pad_to(qf, 1, bq_)
+    kp = _pad_to(kf, 1, bk_)
+    vp = _pad_to(vf, 1, bk_)
+    # padded KV rows sit at positions >= Sk; causal masking with q_pos < Sk
+    # excludes them only if causal — guard non-causal via explicit Sk pad
+    # handling: padded keys produce scores masked by the causal/window test
+    # when q_pos < k_pos; for non-causal callers pad must be masked upstream.
+    out = flash_attention_pallas(qp, kp, vp, causal=causal, window=window,
+                                 bq=bq_, bk=bk_, interpret=interpret)
+    return out[:, :Sq].reshape(B, H, Sq, dv).transpose(0, 2, 1, 3)
+
+
+__all__ = ["fused_lora_matmul", "dimension_wise_aggregate",
+           "fedilora_aggregate_tree", "flash_attention", "ref"]

@@ -1,0 +1,40 @@
+"""Pure-jnp oracles for the Pallas kernels (test + fallback path)."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def lora_matmul_ref(x, w, a, b, *, scale: float = 1.0):
+    """y = x @ W + scale * (x @ Aᵀ) @ Bᵀ, accumulated in f32."""
+    base = jnp.dot(x.astype(jnp.float32), w.astype(jnp.float32))
+    xa = jnp.dot(x.astype(jnp.float32), a.astype(jnp.float32).T)
+    delta = jnp.dot(xa, b.astype(jnp.float32).T)
+    return (base + scale * delta).astype(x.dtype)
+
+
+def dim_agg_ref(stacked, weights):
+    """out[l,d,:] = Σ_k w[k,d]·x[k,l,d,:] in f32 (paper Eq. 5)."""
+    acc = jnp.einsum("kd,kldn->ldn", weights.astype(jnp.float32),
+                     stacked.astype(jnp.float32))
+    return acc.astype(stacked.dtype)
+
+
+def flash_attention_ref(q, k, v, *, causal: bool = True, window: int = 0):
+    """Plain softmax attention oracle.  q: [BH,Sq,d]; k,v: [BH,Sk,d*]."""
+    import math
+    d = q.shape[-1]
+    s = jnp.einsum("bqd,bkd->bqk", q.astype(jnp.float32),
+                   k.astype(jnp.float32)) / math.sqrt(d)
+    Sq, Sk = q.shape[1], k.shape[1]
+    qp = jnp.arange(Sq)[:, None]
+    kp = jnp.arange(Sk)[None, :]
+    ok = jnp.ones((Sq, Sk), bool)
+    if causal:
+        ok &= qp >= kp
+    if window and window > 0:
+        ok &= (qp - kp) < window
+    s = jnp.where(ok[None], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bqk,bkd->bqd", p, v.astype(jnp.float32)).astype(q.dtype)

@@ -1,0 +1,316 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run (deliverable e).
+
+For every (architecture × input shape × mesh) combination this lowers and
+compiles the appropriate step function against ShapeDtypeStruct inputs on the
+production mesh — 16×16 single pod and 2×16×16 two-pod — and records
+``memory_analysis()`` / ``cost_analysis()`` / collective traffic to JSON for
+the roofline report (deliverable g).  No arrays are allocated; the two lines
+above run before ANY other import because jax locks the device count at first
+initialisation.
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun --arch qwen2-72b --shape train_4k
+  PYTHONPATH=src python -m repro.launch.dryrun --arch all --shape all --mesh both
+"""
+
+import argparse
+import json
+import time
+import traceback
+
+import jax
+import jax.numpy as jnp
+
+from repro import sharding as SH
+from repro.configs import get_config, list_archs
+from repro.launch import hlo_analysis as HA
+from repro.launch.mesh import make_production_mesh
+from repro.launch.specs import (INPUT_SHAPES, abstract_cache, abstract_lora,
+                                abstract_params, batch_specs, supports_shape)
+from repro.launch.steps import make_prefill_step, make_serve_step, make_train_step
+from repro.optim import OptimizerConfig
+
+DEFAULT_RANK = 32
+RESULTS_DIR = os.path.join(os.path.dirname(__file__), "..", "..", "..",
+                           "benchmarks", "dryrun_results")
+
+
+def _mem_analysis(compiled):
+    try:
+        ma = compiled.memory_analysis()
+        return {
+            "argument_size_bytes": getattr(ma, "argument_size_in_bytes", None),
+            "output_size_bytes": getattr(ma, "output_size_in_bytes", None),
+            "temp_size_bytes": getattr(ma, "temp_size_in_bytes", None),
+            "generated_code_size_bytes": getattr(ma, "generated_code_size_in_bytes", None),
+            "repr": str(ma),
+        }
+    except Exception as e:  # CPU backend may not implement it fully
+        return {"error": repr(e)}
+
+
+def dryrun_one(arch: str, shape_name: str, *, multi_pod: bool,
+               rank: int = DEFAULT_RANK, sharding_mode: str = "baseline",
+               num_micro_override: int | None = None) -> dict:
+    """sharding_mode: baseline | ep | sp | ep_sp (+ optional microbatch
+    override) — the §Perf hillclimb levers."""
+    cfg = get_config(arch)
+    shape = INPUT_SHAPES[shape_name]
+    ok, why = supports_shape(cfg, shape)
+    rec = {"arch": arch, "shape": shape_name,
+           "mesh": "2x16x16" if multi_pod else "16x16",
+           "kind": shape.kind, "sharding_mode": sharding_mode}
+    if num_micro_override:
+        rec["num_micro_override"] = num_micro_override
+    if not ok:
+        rec["skipped"] = why
+        return rec
+
+    use_ep = "ep" in sharding_mode.split("_")
+    use_sp = "sp" in sharding_mode.split("_")
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    params_abs = abstract_params(cfg)
+    lora_abs = abstract_lora(cfg, rank)
+    p_shard = SH.tree_param_shardings(params_abs, mesh,
+                                      mode="ep" if use_ep else "baseline")
+    l_shard = SH.tree_replicated(lora_abs, mesh)
+    lora_scale = 16.0 / rank
+    from jax.sharding import PartitionSpec as P
+    act_spec = None
+    if use_sp and shape.kind == "train":
+        ba = SH.batch_axes(mesh)
+        act_spec = P(ba if ba and len(ba) > 1 else (ba[0] if ba else None),
+                     "model", None)
+    # dispatch buffers [E, C, d]: expert dim on "data", d replicated (d is
+    # the contraction dim of the expert matmuls; ff shards over "model")
+    moe_spec = P("data", None, None) if (use_ep and cfg.moe) else None
+
+    t0 = time.time()
+    with mesh:
+        if shape.kind == "train":
+            batch_abs = batch_specs(cfg, shape.global_batch, shape.seq_len,
+                                    with_labels=True)
+            b_shard = SH.tree_batch_shardings(batch_abs, mesh)
+            dp = 1
+            for a in SH.batch_axes(mesh) or ():
+                dp *= mesh.shape[a]
+            num_micro = num_micro_override or max(shape.global_batch // dp, 1)
+            opt_cfg = OptimizerConfig(peak_lr=1e-4, total_steps=1000)
+            step = make_train_step(cfg, opt_cfg, lora_scale=lora_scale,
+                                   num_microbatches=num_micro,
+                                   act_spec=act_spec, moe_spec=moe_spec)
+            from repro.optim import adamw_init
+            opt_abs = jax.eval_shape(adamw_init, lora_abs)
+            o_shard = SH.tree_replicated(opt_abs, mesh)
+            jitted = jax.jit(step, in_shardings=(p_shard, l_shard, o_shard, b_shard))
+            lowered = jitted.lower(params_abs, lora_abs, opt_abs, batch_abs)
+            rec["num_microbatches"] = num_micro
+        elif shape.kind == "prefill":
+            batch_abs = batch_specs(cfg, shape.global_batch, shape.seq_len,
+                                    with_labels=False)
+            b_shard = SH.tree_batch_shardings(batch_abs, mesh)
+            step = make_prefill_step(cfg, lora_scale=lora_scale)
+            jitted = jax.jit(step, in_shardings=(p_shard, l_shard, b_shard))
+            lowered = jitted.lower(params_abs, lora_abs, batch_abs)
+        else:  # decode
+            cache_abs = abstract_cache(cfg, params_abs, shape.global_batch,
+                                       shape.seq_len)
+            cache_mode = "seq" if "seq" in sharding_mode.split("_") else "baseline"
+            c_shard = SH.tree_cache_shardings(cache_abs, mesh, mode=cache_mode)
+            tok_abs = jax.ShapeDtypeStruct((shape.global_batch,), jnp.int32)
+            t_shard = SH.tree_batch_shardings(tok_abs, mesh)
+            pos_abs = jax.ShapeDtypeStruct((), jnp.int32)
+            # note: forcing a seq-sharded score constraint (seq_axis="model")
+            # was tried and REFUTED — it doubled the per-iter all-gather
+            # (EXPERIMENTS.md §Perf H1 iter 3); XLA's own schedule under the
+            # seq-sharded cache is better. Keep seq_axis=None.
+            seq_axis = "model" if "scoreshard" in sharding_mode else None
+            step = make_serve_step(cfg, lora_scale=lora_scale, moe_spec=moe_spec,
+                                   seq_axis=seq_axis)
+            jitted = jax.jit(step, in_shardings=(p_shard, l_shard, c_shard,
+                                                 t_shard, SH.replicated(mesh)))
+            lowered = jitted.lower(params_abs, lora_abs, cache_abs, tok_abs, pos_abs)
+        rec["lower_s"] = time.time() - t0
+
+        t1 = time.time()
+        compiled = lowered.compile()
+        rec["compile_s"] = time.time() - t1
+
+    cost = compiled.cost_analysis() or {}
+    rec["cost_analysis"] = {k: v for k, v in cost.items()
+                            if isinstance(v, (int, float)) and "{" not in k}
+    rec["memory_analysis"] = _mem_analysis(compiled)
+    text = compiled.as_text()
+    rec["collectives"] = HA.collective_bytes(text)
+    # HLO-derived terms: per-while-body-execution (XLA counts scan bodies
+    # once — see repro/launch/analytic.py); kept as schedule validation.
+    rec["roofline_hlo_periter"] = HA.roofline(cost, rec["collectives"]).as_dict()
+    rec["hlo_chars"] = len(text)
+
+    # primary §Roofline terms: analytic model (implementation-faithful)
+    from repro.launch.analytic import analytic_terms, mesh_info
+    opts = {}
+    if use_ep:
+        opts["expert_parallel"] = True
+    if use_sp:
+        opts["seq_parallel"] = True
+    at = analytic_terms(cfg, shape, mesh_info(multi_pod), rank=rank,
+                        num_micro=rec.get("num_microbatches"), opts=opts)
+    rec["roofline"] = at.roofline()
+
+    # model-level FLOPs for the usefulness ratio (DESIGN.md §6)
+    n_active = cfg.active_param_count()
+    if shape.kind == "train":
+        tokens = shape.global_batch * shape.seq_len
+        model_flops = 6 * n_active * tokens
+    elif shape.kind == "prefill":
+        tokens = shape.global_batch * shape.seq_len
+        model_flops = 2 * n_active * tokens
+    else:
+        tokens = shape.global_batch
+        model_flops = 2 * n_active * tokens
+    n_dev = 512 if multi_pod else 256
+    rec["model_flops_per_device"] = model_flops / n_dev
+    hlo_flops = rec["roofline"]["flops_per_device"]
+    rec["useful_flops_ratio"] = (rec["model_flops_per_device"] / hlo_flops
+                                 if hlo_flops else None)
+    return rec
+
+
+def dryrun_fedround(arch: str, *, multi_pod: bool, rank: int = DEFAULT_RANK,
+                    local_steps: int = 4, client_batch: int = 16,
+                    seq: int = 256) -> dict:
+    """Lower one federated ROUND as a single pjit program: K clients (= data
+    axis size) train LoRA in parallel, edit, and aggregate with FediLoRA's
+    dimension-wise reweighting — the paper's technique as mesh collectives
+    (repro/launch/fedround.py)."""
+    import numpy as np
+    from jax.sharding import NamedSharding, PartitionSpec as P
+
+    from repro.launch.fedround import make_fed_round_step
+    from repro.optim import OptimizerConfig
+
+    cfg = get_config(arch)
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    K = int(np.prod([mesh.shape[a] for a in SH.batch_axes(mesh)]))
+    ca = SH.batch_axes(mesh)
+    client_axis = ca if len(ca) > 1 else ca[0]
+    rec = {"arch": arch, "shape": f"fedround_K{K}",
+           "mesh": "2x16x16" if multi_pod else "16x16", "kind": "fedround",
+           "sharding_mode": "client-data-parallel"}
+
+    params_abs = abstract_params(cfg)
+    lora_abs = abstract_lora(cfg, rank)
+    stacked_abs = jax.tree_util.tree_map(
+        lambda x: jax.ShapeDtypeStruct((K,) + x.shape, x.dtype), lora_abs)
+    ranks_abs = jax.ShapeDtypeStruct((K,), jnp.int32)
+    p_abs = jax.ShapeDtypeStruct((K,), jnp.float32)
+    batch_one = batch_specs(cfg, client_batch, seq, with_labels=True)
+    batches_abs = {k: jax.ShapeDtypeStruct((K, local_steps) + v.shape, v.dtype)
+                   for k, v in batch_one.items()}
+
+    def client_sharded(tree):
+        return jax.tree_util.tree_map(
+            lambda x: NamedSharding(mesh, P(*((client_axis,) + (None,) * (len(x.shape) - 1)))),
+            tree)
+
+    step = make_fed_round_step(cfg, OptimizerConfig(peak_lr=1e-3, total_steps=100),
+                               lora_scale=16.0 / rank, r_g=rank)
+    t0 = time.time()
+    with mesh:
+        jitted = jax.jit(step, in_shardings=(
+            SH.tree_param_shardings(params_abs, mesh),
+            client_sharded(stacked_abs),
+            SH.tree_replicated(lora_abs, mesh),
+            SH.replicated(mesh), SH.replicated(mesh),
+            client_sharded(batches_abs)))
+        lowered = jitted.lower(params_abs, stacked_abs, lora_abs, ranks_abs,
+                               p_abs, batches_abs)
+        compiled = lowered.compile()
+    rec["compile_s"] = time.time() - t0
+    rec["memory_analysis"] = _mem_analysis(compiled)
+    rec["collectives"] = HA.collective_bytes(compiled.as_text())
+    cost = compiled.cost_analysis() or {}
+    rec["cost_analysis"] = {k: v for k, v in cost.items()
+                            if isinstance(v, (int, float)) and "{" not in k}
+    return rec
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="all")
+    ap.add_argument("--shape", default="all")
+    ap.add_argument("--mesh", default="single", choices=["single", "multi", "both"])
+    ap.add_argument("--rank", type=int, default=DEFAULT_RANK)
+    ap.add_argument("--sharding-mode", default="baseline")
+    ap.add_argument("--num-micro", type=int, default=0,
+                    help="override training microbatch count (hillclimb)")
+    ap.add_argument("--fedround", action="store_true",
+                    help="lower one federated round (K clients = data axis) "
+                         "instead of the per-shape steps")
+    ap.add_argument("--out", default=RESULTS_DIR)
+    args = ap.parse_args()
+
+    if args.fedround:
+        archs = ["fedbench-100m"] if args.arch == "all" else [args.arch]
+        meshes = {"single": [False], "multi": [True], "both": [False, True]}[args.mesh]
+        os.makedirs(args.out, exist_ok=True)
+        for arch in archs:
+            for mp in meshes:
+                tag = f"{arch}__fedround__{'2x16x16' if mp else '16x16'}"
+                print(f"== dryrun {tag}", flush=True)
+                try:
+                    rec = dryrun_fedround(arch, multi_pod=mp, rank=args.rank)
+                    print(f"   compile {rec['compile_s']:.1f}s | collectives "
+                          f"{ {k: round(v/2**20,1) for k, v in rec['collectives']['per_op'].items() if v} } MB",
+                          flush=True)
+                except Exception:
+                    rec = {"arch": arch, "error": traceback.format_exc()}
+                    print(rec["error"], flush=True)
+                with open(os.path.join(args.out, tag + ".json"), "w") as f:
+                    json.dump(rec, f, indent=2)
+        return
+
+    archs = list_archs() if args.arch == "all" else [args.arch]
+    shapes = list(INPUT_SHAPES) if args.shape == "all" else [args.shape]
+    meshes = {"single": [False], "multi": [True], "both": [False, True]}[args.mesh]
+
+    os.makedirs(args.out, exist_ok=True)
+    failures = 0
+    for arch in archs:
+        for shape in shapes:
+            for mp in meshes:
+                tag = f"{arch}__{shape}__{'2x16x16' if mp else '16x16'}"
+                if args.sharding_mode != "baseline":
+                    tag += f"__{args.sharding_mode}"
+                if args.num_micro:
+                    tag += f"__m{args.num_micro}"
+                print(f"== dryrun {tag}", flush=True)
+                try:
+                    rec = dryrun_one(arch, shape, multi_pod=mp, rank=args.rank,
+                                     sharding_mode=args.sharding_mode,
+                                     num_micro_override=args.num_micro or None)
+                except Exception:
+                    failures += 1
+                    rec = {"arch": arch, "shape": shape,
+                           "mesh": "2x16x16" if mp else "16x16",
+                           "error": traceback.format_exc()}
+                    print(rec["error"], flush=True)
+                with open(os.path.join(args.out, tag + ".json"), "w") as f:
+                    json.dump(rec, f, indent=2)
+                if "skipped" in rec:
+                    print(f"   skipped: {rec['skipped']}", flush=True)
+                elif "error" not in rec:
+                    r = rec["roofline"]
+                    print(f"   compile {rec['compile_s']:.1f}s | "
+                          f"compute {r['compute_s']*1e3:.2f}ms mem {r['memory_s']*1e3:.2f}ms "
+                          f"coll {r['collective_s']*1e3:.2f}ms → {r['dominant']}",
+                          flush=True)
+    raise SystemExit(1 if failures else 0)
+
+
+if __name__ == "__main__":
+    main()

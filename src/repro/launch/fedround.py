@@ -1,0 +1,91 @@
+"""Federated round as ONE pjit program — the paper's technique distributed
+TPU-natively (DESIGN.md §3: "clients → mesh data axis").
+
+A communication round is expressed as a single SPMD computation:
+
+    round_step(base_params, stacked_lora[K,...], ranks[K], p[K],
+               batches[K, steps, B, ...])
+        → (global_lora, edited_client_lora[K,...])
+
+* the client axis K shards over ``data`` — every sampled client's local
+  LoRA fine-tuning (a scanned AdamW loop) runs in parallel, one client
+  group per data slice, with NO cross-client communication during local
+  steps (base weights are read-only and tensor-parallel over ``model``);
+* layer-wise editing (paper Eqs. 6-8) runs vmapped per client against the
+  previous global adapter;
+* FediLoRA's dimension-wise aggregation (Eqs. 3-5) is then a *masked
+  weighted reduction over the data axis* — the parameter-server "upload +
+  average" of the paper becomes a reduce/all-reduce collective in the
+  compiled HLO, which the dry-run records.
+
+This is the lowering target behind the `--fedround` dry-run mode; the
+host-driven runtime (repro/federated) remains the reference loop for
+CPU-scale experiments.
+"""
+
+from __future__ import annotations
+
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.core import aggregation as AG
+from repro.core.editing import EditConfig, edit_lora
+from repro.core.lora import mask_lora_params
+from repro.models import transformer as T
+from repro.models.config import ModelConfig
+from repro.optim import OptimizerConfig, make_optimizer
+
+
+def make_fed_round_step(cfg: ModelConfig, opt_cfg: OptimizerConfig, *,
+                        lora_scale: float, r_g: int,
+                        edit: EditConfig | None = None,
+                        aggregator: str = "fedilora") -> Callable:
+    opt_init, opt_update = make_optimizer(opt_cfg)
+    edit = edit or EditConfig()
+
+    def local_train(base_params, lora0, rank, batches):
+        opt = opt_init(lora0)
+
+        def loss_of(lo, mb):
+            loss, _ = T.loss_fn(cfg, base_params, lo, mb, lora_scale)
+            return loss
+
+        def step(carry, mb):
+            lo, op = carry
+            loss, g = jax.value_and_grad(loss_of)(lo, mb)
+            g = mask_lora_params(g, rank, r_g)
+            lo, op = opt_update(lo, g, op)
+            lo = mask_lora_params(lo, rank, r_g)
+            return (lo, op), loss
+
+        (lora1, _), losses = lax.scan(step, (lora0, opt), batches)
+        return lora1, losses[-1]
+
+    def round_step(base_params, stacked_lora, prev_global, ranks, p, batches):
+        # --- parallel local fine-tuning: client axis on "data" -------------
+        lora1, last_loss = jax.vmap(
+            lambda lo, r, b: local_train(base_params, lo, r, b)
+        )(stacked_lora, ranks, batches)
+
+        # --- layer-wise editing vs previous global (per client) ------------
+        if edit.enabled:
+            def _edit(lo, rank):
+                glob = mask_lora_params(prev_global, rank, r_g)
+                edited, _ = edit_lora(lo, glob, edit)
+                return mask_lora_params(edited, rank, r_g)
+
+            lora1 = jax.vmap(_edit)(lora1, ranks)
+
+        # --- aggregation = reduction over the data (client) axis -----------
+        if aggregator == "fedilora":
+            global_new = AG.fedilora(lora1, ranks, p)
+        elif aggregator == "hetlora":
+            global_new = AG.hetlora(lora1, ranks, p)
+        else:
+            global_new = AG.fedavg(lora1, ranks, p)
+        return global_new, lora1, jnp.mean(last_loss)
+
+    return round_step

@@ -1,0 +1,102 @@
+"""Post-compile HLO analysis: collective-traffic accounting + roofline terms.
+
+``compiled.cost_analysis()`` gives FLOPs and bytes-accessed of the
+*partitioned per-device* module, but no collective traffic.  We parse the
+per-device HLO text and sum the result-shape bytes of every communication op
+(all-gather / all-reduce / reduce-scatter / all-to-all / collective-permute).
+Result shapes are per-device shards, so all three roofline terms are
+consistently per-chip (DESIGN.md §6).
+
+Hardware constants: TPU v5e — 197 TFLOP/s bf16, 819 GB/s HBM, ~50 GB/s/link ICI.
+"""
+
+from __future__ import annotations
+
+import re
+from dataclasses import dataclass
+
+PEAK_FLOPS = 197e12          # bf16 per chip
+HBM_BW = 819e9               # bytes/s per chip
+ICI_BW = 50e9                # bytes/s per link
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "f16": 2, "bf16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s64": 8, "u64": 8, "s32": 4, "u32": 4, "s16": 2, "u16": 2,
+    "s8": 1, "u8": 1, "pred": 1, "c64": 8, "c128": 16,
+}
+
+COLLECTIVE_OPS = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                  "collective-permute")
+
+_SHAPE_RE = re.compile(r"\b(" + "|".join(_DTYPE_BYTES) + r")\[([0-9,]*)\]")
+# e.g.:  %all-gather.5 = bf16[8,1024]{1,0} all-gather(%param.3), ...
+_OP_RE = re.compile(
+    r"^\s*(?:ROOT\s+)?%?[\w.\-]+\s*=\s*(\(?[^)=]*?\)?)\s+"
+    r"(" + "|".join(COLLECTIVE_OPS) + r")(?:-(?:start|done))?\(", re.M)
+
+
+def _shape_bytes(type_str: str) -> int:
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(type_str):
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                if d:
+                    n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def collective_bytes(hlo_text: str) -> dict:
+    """Per-op-kind result bytes of all collectives in a compiled HLO module.
+    ``-start`` ops counted, matching ``-done`` ops skipped (same transfer)."""
+    out = {k: 0 for k in COLLECTIVE_OPS}
+    counts = {k: 0 for k in COLLECTIVE_OPS}
+    for m in re.finditer(
+            r"^\s*(?:ROOT\s+)?%?[\w.\-]+\s*=\s*([^\n]*?)\s+"
+            r"(" + "|".join(COLLECTIVE_OPS) + r")(-start|-done)?\(",
+            hlo_text, re.M):
+        type_str, op, phase = m.group(1), m.group(2), m.group(3)
+        if phase == "-done":
+            continue
+        out[op] += _shape_bytes(type_str)
+        counts[op] += 1
+    out_total = sum(out.values())
+    return {"per_op": out, "counts": counts, "total_bytes": out_total}
+
+
+@dataclass
+class RooflineTerms:
+    compute_s: float
+    memory_s: float
+    collective_s: float
+    flops: float
+    hbm_bytes: float
+    coll_bytes: float
+
+    @property
+    def dominant(self) -> str:
+        terms = {"compute": self.compute_s, "memory": self.memory_s,
+                 "collective": self.collective_s}
+        return max(terms, key=terms.get)
+
+    def as_dict(self) -> dict:
+        return {
+            "compute_s": self.compute_s, "memory_s": self.memory_s,
+            "collective_s": self.collective_s, "dominant": self.dominant,
+            "flops_per_device": self.flops, "hbm_bytes_per_device": self.hbm_bytes,
+            "collective_bytes_per_device": self.coll_bytes,
+        }
+
+
+def roofline(cost_analysis: dict, coll: dict) -> RooflineTerms:
+    """All inputs per-device (post-SPMD module)."""
+    flops = float(cost_analysis.get("flops", 0.0))
+    hbm = float(cost_analysis.get("bytes accessed", 0.0))
+    cb = float(coll["total_bytes"])
+    return RooflineTerms(
+        compute_s=flops / PEAK_FLOPS,
+        memory_s=hbm / HBM_BW,
+        collective_s=cb / ICI_BW,
+        flops=flops, hbm_bytes=hbm, coll_bytes=cb,
+    )

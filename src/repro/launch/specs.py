@@ -1,0 +1,96 @@
+"""ShapeDtypeStruct input stand-ins for every (architecture × input shape).
+
+``input_specs`` returns weak-type-correct, shardable abstract inputs — no
+device allocation — for the dry-run's ``.lower()``.  Modality frontends are
+stubs per the assignment carve-out: VLM shapes include precomputed patch
+embeddings, audio shapes include precomputed frame embeddings.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import transformer as T
+from repro.models.config import ModelConfig
+
+SDS = jax.ShapeDtypeStruct
+
+
+@dataclasses.dataclass(frozen=True)
+class InputShape:
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str            # "train" | "prefill" | "decode"
+
+
+INPUT_SHAPES = {
+    "train_4k": InputShape("train_4k", 4_096, 256, "train"),
+    "prefill_32k": InputShape("prefill_32k", 32_768, 32, "prefill"),
+    "decode_32k": InputShape("decode_32k", 32_768, 128, "decode"),
+    "long_500k": InputShape("long_500k", 524_288, 1, "decode"),
+}
+
+
+def _audio_len(seq: int) -> int:
+    return max(seq // 4, 8)   # 4 tokens per frame (typical 40ms speech frames)
+
+
+def batch_specs(cfg: ModelConfig, batch: int, seq: int, *, with_labels: bool) -> dict:
+    """Abstract training / prefill batch for one architecture."""
+    sp: dict = {"tokens": SDS((batch, seq), jnp.int32)}
+    if with_labels:
+        sp["labels"] = SDS((batch, seq), jnp.int32)
+        sp["loss_mask"] = SDS((batch, seq), jnp.float32)
+    if cfg.family == "vlm":
+        sp["image"] = SDS((batch, cfg.num_vision_tokens, cfg.vision_dim), jnp.dtype(cfg.dtype))
+        if with_labels:
+            sp["image_mask"] = SDS((batch,), jnp.float32)
+    if cfg.family == "encdec":
+        sp["audio"] = SDS((batch, _audio_len(seq), cfg.audio_dim), jnp.dtype(cfg.dtype))
+    return sp
+
+
+def abstract_params(cfg: ModelConfig):
+    """Parameter ShapeDtypeStructs via eval_shape (no allocation)."""
+    return jax.eval_shape(lambda k: T.init_params(k, cfg), jax.random.PRNGKey(0))
+
+
+def abstract_lora(cfg: ModelConfig, rank: int):
+    from repro.core.lora import LoRAConfig, init_lora_params
+    lcfg = LoRAConfig(rank=rank)
+    specs = T.lora_specs(cfg)
+    return jax.eval_shape(lambda k: init_lora_params(k, specs, lcfg), jax.random.PRNGKey(0))
+
+
+def abstract_cache(cfg: ModelConfig, params_abs, batch: int, max_len: int):
+    """Decode-cache ShapeDtypeStructs.  Vision/audio stand-ins are supplied
+    abstractly; init_cache runs under eval_shape so nothing allocates."""
+    vision = audio = None
+    if cfg.family == "vlm":
+        vision = SDS((batch, cfg.num_vision_tokens, cfg.vision_dim), jnp.dtype(cfg.dtype))
+    if cfg.family == "encdec":
+        audio = SDS((batch, _audio_len(max_len), cfg.audio_dim), jnp.dtype(cfg.dtype))
+
+    def _mk(params, vision, audio):
+        return T.init_cache(cfg, params, batch, max_len, vision=vision, audio=audio)
+
+    args = [params_abs]
+    kw = {}
+    if vision is not None:
+        kw["vision"] = vision
+    if audio is not None:
+        kw["audio"] = audio
+    return jax.eval_shape(lambda p, **k: _mk(p, k.get("vision"), k.get("audio")), *args, **kw)
+
+
+def supports_shape(cfg: ModelConfig, shape: InputShape) -> tuple[bool, str]:
+    """Arch × shape applicability per DESIGN.md §4."""
+    if shape.name == "long_500k" and shape.kind == "decode":
+        if not cfg.supports_long_decode:
+            return False, ("pure full-attention arch: long_500k decode skipped "
+                           "(no sub-quadratic/bounded-state path; DESIGN.md §4)")
+    return True, ""

@@ -1,0 +1,97 @@
+"""jit-able step functions: train_step (LoRA fine-tuning with microbatched
+gradient accumulation + remat), prefill_step, serve_step (one-token decode).
+
+These are the lowering targets of the multi-pod dry-run and the bodies of the
+federated round: in FediLoRA only the LoRA adapters train — base weights are
+frozen inputs, so there is no base-gradient reduce-scatter and the optimizer
+state is adapter-sized.
+"""
+
+from __future__ import annotations
+
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.models import transformer as T
+from repro.models.config import ModelConfig
+from repro.optim import OptimizerConfig, make_optimizer
+
+
+def make_train_step(cfg: ModelConfig, opt_cfg: OptimizerConfig, *,
+                    lora_scale: float, num_microbatches: int = 1,
+                    remat: bool = True, act_spec=None, moe_spec=None) -> Callable:
+    """(params, lora, opt_state, batch) -> (lora', opt_state', metrics).
+
+    ``act_spec``: optional sequence-parallel residual-stream PartitionSpec
+    (hillclimb lever, see EXPERIMENTS.md §Perf)."""
+    _, update_fn = make_optimizer(opt_cfg)
+
+    def loss_of(lora, params, mb):
+        return T.loss_fn(cfg, params, lora, mb, lora_scale, remat=remat,
+                         act_spec=act_spec, moe_spec=moe_spec)
+
+    def train_step(params, lora, opt_state, batch):
+        if num_microbatches == 1:
+            (loss, metrics), grads = jax.value_and_grad(loss_of, has_aux=True)(
+                lora, params, batch)
+        else:
+            def split(x):
+                return x.reshape((num_microbatches, x.shape[0] // num_microbatches)
+                                 + x.shape[1:])
+
+            mb_batch = jax.tree_util.tree_map(split, batch)
+
+            def acc(carry, mb):
+                g_acc, l_acc = carry
+                (l, m), g = jax.value_and_grad(loss_of, has_aux=True)(lora, params, mb)
+                g_acc = jax.tree_util.tree_map(jnp.add, g_acc, g)
+                return (g_acc, l_acc + l), m
+
+            zeros = jax.tree_util.tree_map(jnp.zeros_like, lora)
+            (g_sum, loss_sum), ms = lax.scan(acc, (zeros, jnp.zeros((), jnp.float32)),
+                                             mb_batch)
+            grads = jax.tree_util.tree_map(lambda g: g / num_microbatches, g_sum)
+            loss = loss_sum / num_microbatches
+            metrics = jax.tree_util.tree_map(lambda x: jnp.mean(x, 0), ms)
+        lora_new, opt_new = update_fn(lora, grads, opt_state)
+        metrics = dict(metrics)
+        metrics["total_loss"] = loss
+        return lora_new, opt_new, metrics
+
+    return train_step
+
+
+def make_eval_step(cfg: ModelConfig, *, lora_scale: float) -> Callable:
+    def eval_step(params, lora, batch):
+        _, metrics = T.loss_fn(cfg, params, lora, batch, lora_scale)
+        return metrics
+
+    return eval_step
+
+
+def make_prefill_step(cfg: ModelConfig, *, lora_scale: float) -> Callable:
+    """(params, lora, batch) -> last-position logits [B, V] (f32).
+    The unembed runs on the final position only (no [B,S,V] materialisation)."""
+
+    def prefill_step(params, lora, batch):
+        logits, _ = T.forward(cfg, params, batch["tokens"], lora=lora,
+                              lora_scale=lora_scale, vision=batch.get("image"),
+                              audio=batch.get("audio"), last_only=True)
+        return logits[:, 0].astype(jnp.float32)
+
+    return prefill_step
+
+
+def make_serve_step(cfg: ModelConfig, *, lora_scale: float,
+                    moe_spec=None, seq_axis=None) -> Callable:
+    """(params, lora, cache, tokens, pos) -> (logits [B,V], cache')."""
+
+    def serve_step(params, lora, cache, tokens, pos):
+        return T.decode_step(cfg, params, cache, tokens, pos, lora=lora,
+                             lora_scale=lora_scale, moe_spec=moe_spec,
+                             seq_axis=seq_axis)
+
+    return serve_step

@@ -1,0 +1,1 @@
+from repro.metrics.text import google_bleu, rouge_lsum, corpus_scores  # noqa: F401

@@ -1,0 +1,16 @@
+from repro.optim.optimizers import (  # noqa: F401
+    AdamWState,
+    OptimizerConfig,
+    adamw_init,
+    adamw_update,
+    clip_by_global_norm,
+    make_optimizer,
+    sgdm_init,
+    sgdm_update,
+)
+from repro.optim.schedules import (  # noqa: F401
+    constant_schedule,
+    cosine_schedule,
+    make_schedule,
+    wsd_schedule,
+)

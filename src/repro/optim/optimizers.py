@@ -1,0 +1,123 @@
+"""Minimal, pytree-generic optimizers (no optax in this container).
+
+AdamW and SGD-momentum over arbitrary parameter pytrees, with global-norm
+gradient clipping.  States are pytrees of the same structure so they stack /
+vmap across federated clients and shard like the params they mirror.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+Pytree = Any
+
+
+@dataclasses.dataclass(frozen=True)
+class OptimizerConfig:
+    name: str = "adamw"          # adamw | sgdm
+    peak_lr: float = 1e-3
+    schedule: str = "constant"   # constant | cosine | wsd
+    total_steps: int = 1000
+    warmup_steps: int = 0
+    weight_decay: float = 0.0
+    b1: float = 0.9
+    b2: float = 0.999
+    eps: float = 1e-8
+    momentum: float = 0.9
+    grad_clip: float = 1.0       # 0 disables
+
+
+class AdamWState(NamedTuple):
+    step: jax.Array
+    mu: Pytree
+    nu: Pytree
+
+
+class SGDMState(NamedTuple):
+    step: jax.Array
+    mom: Pytree
+
+
+def clip_by_global_norm(grads: Pytree, max_norm: float) -> tuple[Pytree, jax.Array]:
+    leaves = jax.tree_util.tree_leaves(grads)
+    gnorm = jnp.sqrt(sum(jnp.sum(jnp.square(g.astype(jnp.float32))) for g in leaves))
+    scale = jnp.where(gnorm > max_norm, max_norm / jnp.maximum(gnorm, 1e-12), 1.0)
+    return jax.tree_util.tree_map(lambda g: (g * scale).astype(g.dtype), grads), gnorm
+
+
+def adamw_init(params: Pytree) -> AdamWState:
+    zeros = lambda p: jnp.zeros_like(p, dtype=jnp.float32)
+    return AdamWState(step=jnp.zeros((), jnp.int32),
+                      mu=jax.tree_util.tree_map(zeros, params),
+                      nu=jax.tree_util.tree_map(zeros, params))
+
+
+def adamw_update(params: Pytree, grads: Pytree, state: AdamWState, cfg: OptimizerConfig,
+                 lr_fn: Callable) -> tuple[Pytree, AdamWState]:
+    if cfg.grad_clip > 0:
+        grads, _ = clip_by_global_norm(grads, cfg.grad_clip)
+    step = state.step + 1
+    lr = lr_fn(step)
+    b1, b2 = cfg.b1, cfg.b2
+
+    def _upd(p, g, m, v):
+        g32 = g.astype(jnp.float32)
+        m = b1 * m + (1 - b1) * g32
+        v = b2 * v + (1 - b2) * jnp.square(g32)
+        mhat = m / (1 - b1 ** step.astype(jnp.float32))
+        vhat = v / (1 - b2 ** step.astype(jnp.float32))
+        upd = mhat / (jnp.sqrt(vhat) + cfg.eps) + cfg.weight_decay * p.astype(jnp.float32)
+        return (p.astype(jnp.float32) - lr * upd).astype(p.dtype), m, v
+
+    flat_p, treedef = jax.tree_util.tree_flatten(params)
+    flat_g = jax.tree_util.tree_leaves(grads)
+    flat_m = jax.tree_util.tree_leaves(state.mu)
+    flat_v = jax.tree_util.tree_leaves(state.nu)
+    new_p, new_m, new_v = [], [], []
+    for p, g, m, v in zip(flat_p, flat_g, flat_m, flat_v):
+        np_, nm, nv = _upd(p, g, m, v)
+        new_p.append(np_); new_m.append(nm); new_v.append(nv)
+    unflatten = treedef.unflatten
+    return unflatten(new_p), AdamWState(step, unflatten(new_m), unflatten(new_v))
+
+
+def sgdm_init(params: Pytree) -> SGDMState:
+    return SGDMState(step=jnp.zeros((), jnp.int32),
+                     mom=jax.tree_util.tree_map(lambda p: jnp.zeros_like(p, jnp.float32), params))
+
+
+def sgdm_update(params: Pytree, grads: Pytree, state: SGDMState, cfg: OptimizerConfig,
+                lr_fn: Callable) -> tuple[Pytree, SGDMState]:
+    if cfg.grad_clip > 0:
+        grads, _ = clip_by_global_norm(grads, cfg.grad_clip)
+    step = state.step + 1
+    lr = lr_fn(step)
+
+    def _upd(p, g, m):
+        m = cfg.momentum * m + g.astype(jnp.float32)
+        return (p.astype(jnp.float32) - lr * m).astype(p.dtype), m
+
+    flat_p, treedef = jax.tree_util.tree_flatten(params)
+    flat_g = jax.tree_util.tree_leaves(grads)
+    flat_m = jax.tree_util.tree_leaves(state.mom)
+    new_p, new_m = [], []
+    for p, g, m in zip(flat_p, flat_g, flat_m):
+        np_, nm = _upd(p, g, m)
+        new_p.append(np_); new_m.append(nm)
+    return treedef.unflatten(new_p), SGDMState(step, treedef.unflatten(new_m))
+
+
+def make_optimizer(cfg: OptimizerConfig):
+    """Returns (init_fn, update_fn(params, grads, state) -> (params, state))."""
+    from repro.optim.schedules import make_schedule
+
+    lr_fn = make_schedule(cfg.schedule, cfg.peak_lr, cfg.total_steps, cfg.warmup_steps)
+    if cfg.name == "adamw":
+        return adamw_init, lambda p, g, s: adamw_update(p, g, s, cfg, lr_fn)
+    if cfg.name == "sgdm":
+        return sgdm_init, lambda p, g, s: sgdm_update(p, g, s, cfg, lr_fn)
+    raise ValueError(f"unknown optimizer {cfg.name!r}")

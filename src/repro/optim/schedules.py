@@ -1,0 +1,60 @@
+"""Learning-rate schedules.
+
+Includes the WSD (Warmup-Stable-Decay) schedule used by MiniCPM
+(arXiv:2404.06395) — one of the assigned architectures — alongside the
+standard cosine and constant schedules.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def constant_schedule(peak_lr: float):
+    def lr(step):
+        return jnp.full((), peak_lr, jnp.float32)
+    return lr
+
+
+def cosine_schedule(peak_lr: float, total_steps: int, warmup_steps: int = 0,
+                    final_frac: float = 0.1):
+    """Linear warmup then cosine decay to ``final_frac * peak_lr``."""
+
+    def lr(step):
+        step = jnp.asarray(step, jnp.float32)
+        warm = peak_lr * step / jnp.maximum(warmup_steps, 1)
+        t = (step - warmup_steps) / jnp.maximum(total_steps - warmup_steps, 1)
+        t = jnp.clip(t, 0.0, 1.0)
+        cos = final_frac + (1 - final_frac) * 0.5 * (1 + jnp.cos(jnp.pi * t))
+        return jnp.where(step < warmup_steps, warm, peak_lr * cos)
+
+    return lr
+
+
+def wsd_schedule(peak_lr: float, total_steps: int, warmup_steps: int = 0,
+                 decay_frac: float = 0.1, final_frac: float = 0.01):
+    """MiniCPM's Warmup-Stable-Decay: linear warmup, long stable plateau at
+    ``peak_lr``, then a short exponential-ish (linear here in log space
+    approximated by cosine) decay over the final ``decay_frac`` of training."""
+    decay_steps = max(int(total_steps * decay_frac), 1)
+    stable_end = total_steps - decay_steps
+
+    def lr(step):
+        step = jnp.asarray(step, jnp.float32)
+        warm = peak_lr * step / jnp.maximum(warmup_steps, 1)
+        t = jnp.clip((step - stable_end) / decay_steps, 0.0, 1.0)
+        decay = peak_lr * jnp.exp(jnp.log(final_frac) * t)
+        out = jnp.where(step < warmup_steps, warm, peak_lr)
+        return jnp.where(step > stable_end, decay, out)
+
+    return lr
+
+
+def make_schedule(name: str, peak_lr: float, total_steps: int, warmup_steps: int = 0):
+    if name == "constant":
+        return constant_schedule(peak_lr)
+    if name == "cosine":
+        return cosine_schedule(peak_lr, total_steps, warmup_steps)
+    if name == "wsd":
+        return wsd_schedule(peak_lr, total_steps, warmup_steps)
+    raise ValueError(f"unknown schedule {name!r}")

@@ -1,0 +1,9 @@
+import os
+import sys
+
+# src-layout import without install
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+# Tests run on the single real CPU device; only the dry-run subprocess tests
+# request fake devices (via their own spawned-process XLA_FLAGS).
+os.environ.setdefault("JAX_PLATFORMS", "cpu")

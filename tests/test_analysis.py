@@ -1,0 +1,85 @@
+"""Tests for the HLO collective parser and the analytic roofline model."""
+
+import numpy as np
+import pytest
+
+from repro.launch import hlo_analysis as HA
+from repro.launch.analytic import analytic_terms, mesh_info
+from repro.launch.specs import INPUT_SHAPES
+from repro.configs import get_config
+
+HLO_SAMPLE = """
+HloModule test
+  %all-gather.5 = bf16[8,1024]{1,0} all-gather(%p0), replica_groups={}
+  %all-reduce.2 = f32[16,16]{1,0} all-reduce(%p1), to_apply=%add
+  %ar-start = (f32[4,4], f32[4,4]) all-reduce-start(%p2), to_apply=%add
+  %ar-done = f32[4,4] all-reduce-done(%ar-start)
+  %a2a = bf16[32]{0} all-to-all(%p3), dimensions={0}
+  ROOT %cp = u32[8]{0} collective-permute(%p4), source_target_pairs={{0,1}}
+"""
+
+
+def test_collective_parser_counts_and_bytes():
+    out = HA.collective_bytes(HLO_SAMPLE)
+    assert out["counts"]["all-gather"] == 1
+    assert out["per_op"]["all-gather"] == 8 * 1024 * 2
+    assert out["per_op"]["all-reduce"] == 16 * 16 * 4 + 2 * 4 * 4 * 4  # incl. start tuple
+    assert out["counts"]["all-reduce"] == 2          # -done skipped
+    assert out["per_op"]["all-to-all"] == 32 * 2
+    assert out["per_op"]["collective-permute"] == 8 * 4
+    assert out["total_bytes"] == sum(out["per_op"].values())
+
+
+def test_roofline_terms_math():
+    terms = HA.roofline({"flops": HA.PEAK_FLOPS, "bytes accessed": HA.HBM_BW},
+                        {"total_bytes": HA.ICI_BW * 2})
+    assert terms.compute_s == pytest.approx(1.0)
+    assert terms.memory_s == pytest.approx(1.0)
+    assert terms.collective_s == pytest.approx(2.0)
+    assert terms.dominant == "collective"
+
+
+def test_analytic_train_flops_scale_with_model():
+    mi = mesh_info(False)
+    small = analytic_terms(get_config("qwen2-0.5b"), INPUT_SHAPES["train_4k"], mi)
+    big = analytic_terms(get_config("qwen2-72b"), INPUT_SHAPES["train_4k"], mi)
+    assert big.flops_dev > 50 * small.flops_dev  # ~140x params
+
+
+def test_analytic_decode_window_bounds_attention():
+    """gemma3's sliding-window layers must cost less at long_500k decode than
+    a hypothetical full-attention equivalent — the windowing shows up in the
+    model."""
+    mi = mesh_info(False)
+    cfg = get_config("gemma3-12b")
+    t = analytic_terms(cfg, INPUT_SHAPES["long_500k"], mi)
+    import dataclasses
+    cfg_full = dataclasses.replace(cfg, pattern=("attn",) * 6)
+    t_full = analytic_terms(cfg_full, INPUT_SHAPES["long_500k"], mi)
+    assert t.flops_dev < t_full.flops_dev
+
+
+def test_analytic_seq_parallel_reduces_collective():
+    mi = mesh_info(False)
+    cfg = get_config("qwen2-72b")
+    base = analytic_terms(cfg, INPUT_SHAPES["train_4k"], mi)
+    sp = analytic_terms(cfg, INPUT_SHAPES["train_4k"], mi,
+                        opts={"seq_parallel": True})
+    assert sp.coll_bytes_dev < base.coll_bytes_dev
+
+
+def test_analytic_expert_parallel_removes_expert_gather():
+    mi = mesh_info(False)
+    cfg = get_config("deepseek-v2-236b")
+    base = analytic_terms(cfg, INPUT_SHAPES["decode_32k"], mi)
+    ep = analytic_terms(cfg, INPUT_SHAPES["decode_32k"], mi,
+                        opts={"expert_parallel": True})
+    assert ep.coll_bytes_dev < base.coll_bytes_dev / 5
+
+
+def test_moe_active_param_count():
+    cfg = get_config("deepseek-v2-236b")
+    full = cfg.param_count()
+    act = cfg.active_param_count()
+    assert 200e9 < full < 280e9       # ~236B
+    assert 15e9 < act < 35e9          # ~21B activated

@@ -1,0 +1,100 @@
+"""Data pipeline + metrics tests."""
+
+import numpy as np
+import pytest
+
+from repro.data.missing import apply_missing_modality
+from repro.data.partition import dirichlet_partition, heterogeneous_sizes
+from repro.data.synthetic import (PAD, SyntheticTaskConfig, batch_iterator,
+                                  make_federated_datasets, make_synthetic_dataset)
+from repro.metrics import corpus_scores, google_bleu, rouge_lsum
+
+
+def test_synthetic_determinism():
+    cfg = SyntheticTaskConfig(seed=3)
+    d1 = make_synthetic_dataset(cfg, 32, seed=1)
+    d2 = make_synthetic_dataset(cfg, 32, seed=1)
+    for k in d1:
+        np.testing.assert_array_equal(d1[k], d2[k])
+
+
+def test_labels_are_shifted_tokens():
+    cfg = SyntheticTaskConfig()
+    d = make_synthetic_dataset(cfg, 4, seed=0)
+    np.testing.assert_array_equal(d["labels"][:, :-1][:, :10], d["tokens"][:, 1:11])
+
+
+def test_ambiguity_groups_share_prefix():
+    """Captions within an ambiguity group share their prefix; the tail is
+    concept-specific — recoverable only from the image (the mechanism that
+    makes missing modalities hurt)."""
+    from repro.data.synthetic import make_synthetic_task
+    cfg = SyntheticTaskConfig(num_concepts=6, ambiguity=3)
+    task = make_synthetic_task(cfg)
+    t = task.templates
+    shared = cfg.caption_len - max(cfg.caption_len // 3, 2)
+    np.testing.assert_array_equal(t[0, :shared], t[1, :shared])
+    assert not np.array_equal(t[0, shared:], t[1, shared:])
+
+
+def test_missing_modality_masks():
+    cfg = SyntheticTaskConfig()
+    d = make_synthetic_dataset(cfg, 200, seed=0)
+    dm = apply_missing_modality(d, 0.6, cfg.prompt_len, seed=0)
+    miss = 1 - dm["image_mask"] * dm["text_mask"]
+    assert 0.45 < miss.mean() < 0.75
+    # image-dropped examples have zero embeddings
+    gone = np.flatnonzero(dm["image_mask"] == 0)
+    assert np.abs(dm["image"][gone]).sum() == 0.0
+    # text-dropped examples have PAD prompts
+    gone_t = np.flatnonzero(dm["text_mask"] == 0)
+    assert (dm["tokens"][gone_t, 1:1 + cfg.prompt_len] == PAD).all()
+    # original untouched
+    assert np.abs(d["image"]).sum() > 0
+
+
+def test_dirichlet_partition_covers_all():
+    labels = np.repeat(np.arange(8), 50)
+    parts = dirichlet_partition(labels, 5, alpha=0.5, seed=0)
+    allidx = np.concatenate(parts)
+    assert len(allidx) == len(labels)
+    assert len(np.unique(allidx)) == len(labels)
+
+
+def test_heterogeneous_sizes_spread():
+    s = heterogeneous_sizes(10, 1000, seed=0)
+    assert s.min() >= 8 and s.max() > 2 * s.min()
+
+
+def test_batch_iterator_shapes():
+    cfg = SyntheticTaskConfig()
+    d = make_synthetic_dataset(cfg, 40, seed=0)
+    it = batch_iterator(d, 16, np.random.default_rng(0))
+    b = next(it)
+    assert b["tokens"].shape == (16, cfg.seq_len)
+
+
+def test_gleu_extremes():
+    assert google_bleu([1, 2, 3, 4], [1, 2, 3, 4]) == 1.0
+    assert google_bleu([9, 9, 9], [1, 2, 3]) == 0.0
+    mid = google_bleu([1, 2, 9, 9], [1, 2, 3, 4])
+    assert 0.0 < mid < 1.0
+
+
+def test_rouge_lsum_extremes():
+    assert rouge_lsum([5, 6, 7, 2], [5, 6, 7, 2]) == 1.0
+    assert rouge_lsum([9, 9], [5, 6]) == 0.0
+    assert 0 < rouge_lsum([5, 9, 7], [5, 6, 7]) < 1
+
+
+def test_corpus_scores_scale():
+    s = corpus_scores([[1, 2, 3]], [[1, 2, 3]])
+    assert s["bleu"] == 100.0 and s["rsum"] == 100.0
+
+
+def test_federated_datasets_structure():
+    cfg = SyntheticTaskConfig()
+    clients, gtest = make_federated_datasets(cfg, 4, np.array([50, 60, 70, 80]))
+    assert len(clients) == 4
+    assert clients[2]["tokens"].shape[0] == 70
+    assert gtest["tokens"].shape[0] == 256

@@ -1,0 +1,115 @@
+"""Sharding + dry-run machinery on a small fake-device mesh.
+
+jax locks the device count at first initialisation, so multi-device tests run
+in a spawned subprocess with XLA_FLAGS set before import (the same pattern
+``repro.launch.dryrun`` uses for the 512-chip production mesh)."""
+
+import os
+import subprocess
+import sys
+import textwrap
+
+import pytest
+
+SRC = os.path.join(os.path.dirname(__file__), "..", "src")
+
+
+def run_sub(code: str) -> str:
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    env["PYTHONPATH"] = SRC
+    env["JAX_PLATFORMS"] = "cpu"
+    out = subprocess.run([sys.executable, "-c", textwrap.dedent(code)],
+                         capture_output=True, text=True, env=env, timeout=600)
+    assert out.returncode == 0, out.stdout + "\n" + out.stderr
+    return out.stdout
+
+
+@pytest.mark.slow
+def test_train_step_lowers_on_small_mesh():
+    out = run_sub("""
+        import jax, jax.numpy as jnp
+        from repro import sharding as SH
+        from repro.configs import get_reduced_config
+        from repro.launch.specs import abstract_params, abstract_lora, batch_specs
+        from repro.launch.steps import make_train_step
+        from repro.optim import OptimizerConfig, adamw_init
+        from repro.launch.hlo_analysis import collective_bytes
+
+        mesh = jax.make_mesh((4, 2), ("data", "model"))
+        cfg = get_reduced_config("qwen2-0.5b")
+        pa = abstract_params(cfg)
+        la = abstract_lora(cfg, 8)
+        ba = batch_specs(cfg, 8, 32, with_labels=True)
+        oa = jax.eval_shape(adamw_init, la)
+        step = make_train_step(cfg, OptimizerConfig(), lora_scale=0.5,
+                               num_microbatches=2)
+        with mesh:
+            jit = jax.jit(step, in_shardings=(
+                SH.tree_param_shardings(pa, mesh), SH.tree_replicated(la, mesh),
+                SH.tree_replicated(oa, mesh), SH.tree_batch_shardings(ba, mesh)))
+            comp = jit.lower(pa, la, oa, ba).compile()
+        cb = collective_bytes(comp.as_text())
+        assert cb["total_bytes"] > 0, "expected TP/DP collectives in HLO"
+        print("OK", cb["counts"])
+    """)
+    assert "OK" in out
+
+
+@pytest.mark.slow
+def test_serve_step_lowers_on_small_mesh_all_families():
+    out = run_sub("""
+        import jax, jax.numpy as jnp
+        from repro import sharding as SH
+        from repro.configs import get_reduced_config
+        from repro.launch.specs import abstract_params, abstract_lora, abstract_cache
+        from repro.launch.steps import make_serve_step
+
+        mesh = jax.make_mesh((4, 2), ("data", "model"))
+        for arch in ("gemma3-12b", "mamba2-130m", "jamba-v0.1-52b",
+                     "deepseek-v2-236b"):
+            cfg = get_reduced_config(arch)
+            pa = abstract_params(cfg)
+            la = abstract_lora(cfg, 8)
+            ca = abstract_cache(cfg, pa, 8, 64)
+            tok = jax.ShapeDtypeStruct((8,), jnp.int32)
+            pos = jax.ShapeDtypeStruct((), jnp.int32)
+            step = make_serve_step(cfg, lora_scale=0.5)
+            with mesh:
+                comp = jax.jit(step, in_shardings=(
+                    SH.tree_param_shardings(pa, mesh),
+                    SH.tree_replicated(la, mesh),
+                    SH.tree_cache_shardings(ca, mesh),
+                    SH.tree_batch_shardings(tok, mesh),
+                    SH.replicated(mesh))).lower(pa, la, ca, tok, pos).compile()
+            print("OK", arch)
+    """)
+    assert out.count("OK") == 4
+
+
+def test_mesh_factory_shapes():
+    out = run_sub("""
+        from repro.launch.mesh import make_debug_mesh
+        m = make_debug_mesh(4, 2)
+        assert m.shape == {"data": 4, "model": 2}
+        print("OK")
+    """)
+    assert "OK" in out
+
+
+def test_fit_spec_divisibility():
+    # pure-python unit (no devices needed beyond default)
+    import jax
+    from jax.sharding import PartitionSpec as P
+
+    sys.path.insert(0, SRC)
+    from repro.sharding import fit_spec
+    mesh = jax.make_mesh((1,), ("model",))
+
+    class FakeMesh:
+        shape = {"data": 16, "model": 16}
+        axis_names = ("data", "model")
+
+    m = FakeMesh()
+    assert fit_spec(m, (3352, 64), P("model", None)) == P(None, None)
+    assert fit_spec(m, (3200, 64), P("model", None)) == P("model", None)

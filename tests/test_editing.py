@@ -1,0 +1,125 @@
+"""Tests for layer-wise LoRA editing (paper Sec. 3.2, Eqs. 6-8)."""
+
+import hypothesis.strategies as st
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings
+
+from repro.core.editing import (EditConfig, edit_lora,
+                                module_cosine_similarities)
+from repro.core.lora import LoRAConfig, LoRASpec, init_lora_params
+
+SPECS = [LoRASpec("s0.attn.wq", 16, 24, 3), LoRASpec("s0.attn.wv", 16, 12, 3)]
+
+
+def make_pair(seed=0):
+    k = jax.random.PRNGKey(seed)
+    local = init_lora_params(k, SPECS, LoRAConfig(rank=8))
+    glob = init_lora_params(jax.random.fold_in(k, 1), SPECS, LoRAConfig(rank=8))
+    # randomize B too
+    rnd = lambda t, s: {n: {m: jax.random.normal(jax.random.fold_in(k, s + i * 2 + j), e[m].shape)
+                            for j, m in enumerate(("A", "B"))}
+                        for i, (n, e) in enumerate(sorted(t.items()))}
+    return rnd(local, 10), rnd(glob, 50)
+
+
+def test_cosine_similarity_definition():
+    local, glob = make_pair()
+    sims = module_cosine_similarities(local, glob, "A")
+    assert sims.shape == (6,)  # 2 specs × 3 layers
+    # manual check for module 0 (sorted: s0.attn.wq layer 0)
+    a_l = np.asarray(local["s0.attn.wq"]["A"][0]).ravel()
+    a_g = np.asarray(glob["s0.attn.wq"]["A"][0]).ravel()
+    want = a_l @ a_g / (np.linalg.norm(a_l) * np.linalg.norm(a_g))
+    np.testing.assert_allclose(float(sims[0]), want, rtol=1e-5)
+
+
+def test_identical_params_similarity_one_and_noop():
+    local, _ = make_pair()
+    sims = module_cosine_similarities(local, local, "A")
+    np.testing.assert_allclose(np.asarray(sims), 1.0, rtol=1e-5)
+    edited, diag = edit_lora(local, local, EditConfig())
+    for n in local:
+        # gamma = sim = 1 → blend is identity
+        np.testing.assert_allclose(np.asarray(edited[n]["A"]),
+                                   np.asarray(local[n]["A"]), atol=1e-5)
+
+
+def test_min1_edits_only_least_similar_module():
+    local, glob = make_pair()
+    cfg = EditConfig(k=1, matrices="A", gamma_mode="similarity")
+    edited, diag = edit_lora(local, glob, cfg)
+    sims = np.asarray(diag["sims"])
+    sel = int(np.argmin(sims))
+    assert int(jnp.argmax(diag["selected"])) == sel
+    names = sorted(local.keys())
+    idx = 0
+    for n in names:
+        L = local[n]["A"].shape[0]
+        for l in range(L):
+            a_loc = np.asarray(local[n]["A"][l])
+            a_ed = np.asarray(edited[n]["A"][l])
+            if idx == sel:
+                g = sims[sel]
+                want = g * a_loc + (1 - g) * np.asarray(glob[n]["A"][l])
+                np.testing.assert_allclose(a_ed, want, atol=1e-5)
+            else:
+                np.testing.assert_array_equal(a_ed, a_loc)
+            # B never edited in matrices="A" mode
+            np.testing.assert_array_equal(np.asarray(edited[n]["B"][l]),
+                                          np.asarray(local[n]["B"][l]))
+            idx += 1
+
+
+def test_full_editing_replaces_layer():
+    local, glob = make_pair(1)
+    edited, diag = edit_lora(local, glob, EditConfig(gamma_mode="full"))
+    sel = int(jnp.argmax(diag["selected"]))
+    names = sorted(local.keys())
+    idx = 0
+    for n in names:
+        for l in range(local[n]["A"].shape[0]):
+            if idx == sel:
+                np.testing.assert_allclose(np.asarray(edited[n]["A"][l]),
+                                           np.asarray(glob[n]["A"][l]), atol=1e-6)
+            idx += 1
+
+
+def test_none_editing_is_identity():
+    local, glob = make_pair(2)
+    edited, _ = edit_lora(local, glob, EditConfig(matrices="none"))
+    for n in local:
+        np.testing.assert_array_equal(np.asarray(edited[n]["A"]),
+                                      np.asarray(local[n]["A"]))
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.integers(1, 6), st.integers(0, 2 ** 31 - 1))
+def test_min_k_selects_k_smallest(k, seed):
+    local, glob = make_pair(seed)
+    edited, diag = edit_lora(local, glob, EditConfig(k=k))
+    sims = np.asarray(diag["sims"])
+    sel = np.asarray(diag["selected"]).astype(bool)
+    assert sel.sum() == min(k, sims.shape[0])
+    # selected are exactly the k smallest similarities
+    order = np.argsort(sims)
+    assert set(np.flatnonzero(sel)) == set(order[:min(k, len(order))])
+
+
+def test_both_matrices_editing_touches_b():
+    local, glob = make_pair(3)
+    edited, diag = edit_lora(local, glob, EditConfig(matrices="both",
+                                                     gamma_mode="half"))
+    sel = int(jnp.argmax(diag["selected"]))
+    names = sorted(local.keys())
+    idx = 0
+    for n in names:
+        for l in range(local[n]["A"].shape[0]):
+            if idx == sel:
+                for m in ("A", "B"):
+                    want = 0.5 * np.asarray(local[n][m][l]) + \
+                        0.5 * np.asarray(glob[n][m][l])
+                    np.testing.assert_allclose(np.asarray(edited[n][m][l]), want,
+                                               atol=1e-5)
+            idx += 1

@@ -1,0 +1,71 @@
+"""LoRA state invariants: padding equivalence, masking, truncation."""
+
+import hypothesis.strategies as st
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings
+
+from repro.core.lora import (LoRAConfig, LoRASpec, init_lora_params, lora_delta,
+                             lora_matmul, mask_lora_params, rank_mask,
+                             truncate_redistribute)
+
+
+def test_rank_mask():
+    m = np.asarray(rank_mask(3, 8))
+    np.testing.assert_array_equal(m, [1, 1, 1, 0, 0, 0, 0, 0])
+
+
+@settings(max_examples=25, deadline=None)
+@given(st.integers(1, 16), st.integers(0, 2 ** 31 - 1))
+def test_padded_equals_ragged_delta(rank, seed):
+    """Zero-padding to r_g never changes B@A — the SPMD-friendly equivalence
+    the whole heterogeneous design rests on (DESIGN.md §3)."""
+    r_g = 16
+    key = jax.random.PRNGKey(seed)
+    spec = [LoRASpec("w", 12, 20, 2)]
+    lora = init_lora_params(key, spec, LoRAConfig(rank=r_g))
+    lora = {"w": {"A": lora["w"]["A"],
+                  "B": jax.random.normal(jax.random.fold_in(key, 9),
+                                         lora["w"]["B"].shape)}}
+    padded = mask_lora_params(lora, rank, r_g)
+    full = np.asarray(lora_delta(padded["w"], 1.0))
+    ragged = np.einsum("lor,lri->loi",
+                       np.asarray(padded["w"]["B"][:, :, :rank]),
+                       np.asarray(padded["w"]["A"][:, :rank, :]))
+    np.testing.assert_allclose(full, ragged, atol=1e-5)
+
+
+def test_mask_idempotent_and_truncate():
+    key = jax.random.PRNGKey(0)
+    spec = [LoRASpec("w", 8, 8, 1)]
+    lora = init_lora_params(key, spec, LoRAConfig(rank=8))
+    m1 = mask_lora_params(lora, 4, 8)
+    m2 = mask_lora_params(m1, 4, 8)
+    for mat in ("A", "B"):
+        np.testing.assert_array_equal(np.asarray(m1["w"][mat]),
+                                      np.asarray(m2["w"][mat]))
+    tr = truncate_redistribute(lora, 2, 8)
+    assert float(jnp.abs(tr["w"]["A"][:, 2:, :]).sum()) == 0.0
+
+
+def test_lora_matmul_matches_manual():
+    key = jax.random.PRNGKey(1)
+    x = jax.random.normal(key, (5, 12))
+    w = jax.random.normal(jax.random.fold_in(key, 1), (12, 20))
+    a = jax.random.normal(jax.random.fold_in(key, 2), (4, 12))
+    b = jax.random.normal(jax.random.fold_in(key, 3), (20, 4))
+    y = lora_matmul(x, w, {"A": a, "B": b}, scale=0.5)
+    want = x @ w + 0.5 * (x @ a.T) @ b.T
+    np.testing.assert_allclose(np.asarray(y), np.asarray(want), atol=1e-4)
+
+
+def test_b_zero_init_means_identity_start():
+    """B = 0 at init → adapted model == base model at round 0."""
+    key = jax.random.PRNGKey(2)
+    spec = [LoRASpec("w", 6, 6, 1)]
+    lora = init_lora_params(key, spec, LoRAConfig(rank=4))
+    x = jax.random.normal(key, (3, 6))
+    w = jnp.eye(6)
+    y = lora_matmul(x, w, {k: v[0] for k, v in lora["w"].items()}, scale=2.0)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(x), atol=1e-6)

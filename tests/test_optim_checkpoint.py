@@ -1,0 +1,91 @@
+"""Optimizer + checkpoint substrate tests."""
+
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint import load_pytree, save_pytree
+from repro.optim import (OptimizerConfig, adamw_init, adamw_update,
+                         clip_by_global_norm, cosine_schedule, make_optimizer,
+                         make_schedule, wsd_schedule)
+
+
+def test_adamw_reduces_quadratic():
+    cfg = OptimizerConfig(peak_lr=0.1, total_steps=100, weight_decay=0.0)
+    init, upd = make_optimizer(cfg)
+    params = {"w": jnp.array([3.0, -2.0])}
+    state = init(params)
+    for _ in range(150):
+        grads = {"w": 2 * params["w"]}
+        params, state = upd(params, grads, state)
+    assert float(jnp.abs(params["w"]).max()) < 0.05
+
+
+def test_grad_clip():
+    g = {"a": jnp.array([30.0, 40.0])}
+    clipped, norm = clip_by_global_norm(g, 5.0)
+    assert abs(float(norm) - 50.0) < 1e-4
+    np.testing.assert_allclose(np.asarray(clipped["a"]), [3.0, 4.0], rtol=1e-5)
+
+
+def test_cosine_schedule_monotone_decay():
+    lr = cosine_schedule(1.0, 100, warmup_steps=10)
+    vals = [float(lr(s)) for s in range(0, 100, 10)]
+    assert vals[1] >= vals[2] >= vals[5] >= vals[-1]
+    assert float(lr(5)) == pytest.approx(0.5)
+
+
+def test_wsd_three_phases():
+    lr = wsd_schedule(2.0, 1000, warmup_steps=100, decay_frac=0.1)
+    assert float(lr(50)) == pytest.approx(1.0)        # warmup midpoint
+    assert float(lr(500)) == pytest.approx(2.0)       # stable
+    assert float(lr(999)) < 0.2                       # decayed
+
+
+def test_make_schedule_registry():
+    for name in ("constant", "cosine", "wsd"):
+        assert callable(make_schedule(name, 1.0, 10))
+    with pytest.raises(ValueError):
+        make_schedule("nope", 1.0, 10)
+
+
+def test_checkpoint_roundtrip(tmp_path):
+    tree = {"a": {"b": jnp.arange(6).reshape(2, 3).astype(jnp.float32)},
+            "c": jnp.array([1.5])}
+    p = os.path.join(tmp_path, "ck.npz")
+    save_pytree(p, tree)
+    back = load_pytree(p)
+    np.testing.assert_array_equal(np.asarray(back["a"]["b"]),
+                                  np.asarray(tree["a"]["b"]))
+    np.testing.assert_array_equal(np.asarray(back["c"]), np.asarray(tree["c"]))
+
+
+def test_federated_checkpoint_roundtrip(tmp_path):
+    from repro.checkpoint import load_federated, save_federated
+    from repro.configs import get_config
+    from repro.data.synthetic import SyntheticTaskConfig, make_federated_datasets
+    from repro.federated import FederatedConfig, FederatedTrainer
+
+    tcfg = SyntheticTaskConfig()
+    clients, gtest = make_federated_datasets(tcfg, 3, np.array([40, 40, 40]))
+    fcfg = FederatedConfig(num_clients=3, ranks=(4, 8, 8), local_steps=2,
+                           batch_size=4)
+    tr = FederatedTrainer(get_config("fedbench-tiny"), fcfg,
+                          OptimizerConfig(peak_lr=1e-3, total_steps=10),
+                          clients, clients, gtest)
+    tr.run_round()
+    d = os.path.join(tmp_path, "fed")
+    save_federated(d, tr)
+    glob_before = jax.tree_util.tree_map(np.asarray, tr.server.global_lora)
+    tr2 = FederatedTrainer(get_config("fedbench-tiny"), fcfg,
+                           OptimizerConfig(peak_lr=1e-3, total_steps=10),
+                           clients, clients, gtest)
+    load_federated(d, tr2)
+    assert tr2.server.round == 1
+    for (p1, l1), (p2, l2) in zip(
+            jax.tree_util.tree_leaves_with_path(glob_before),
+            jax.tree_util.tree_leaves_with_path(tr2.server.global_lora)):
+        np.testing.assert_array_equal(np.asarray(l1), np.asarray(l2))
