@@ -1,0 +1,191 @@
+"""Fused federated round: rounds/sec vs the sequential host-loop baseline,
+per-phase breakdown, and KV-cached vs uncached evaluation decode.
+
+The fused engine (``FederatedTrainer.run_round``) executes a whole round as
+one jit dispatch and, given a client mesh, shards the sampled-client axis
+over devices (``shard_map``); the sequential baseline
+(``run_round_reference``) is the pre-fusion engine: one jit dispatch plus a
+blocking ``float()`` sync per client and eager editing/pruning/stacking.
+
+Measurements run in a subprocess so the client mesh can be backed by forced
+host-platform devices (``XLA_FLAGS`` must be set before jax initialises);
+results are written to ``BENCH_fedround.json`` so the perf trajectory of the
+round engine is tracked from this PR onward.
+
+Scale: fedbench-tiny, K=10 clients, sampling rate 0.4 (the paper protocol),
+swept over local_steps; decode at gen_len 17 (≥16).
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import subprocess
+import sys
+import time
+
+_JSON_TAG = "BENCH_FEDROUND_JSON:"
+ROUND_STEPS = (2, 8)        # local_steps sweep; 8 = paper-protocol default
+TIMED_ROUNDS = 6
+DECODE_CAPTION_LEN = 16     # gen_len = caption_len + 1 = 17 >= 16
+DECODE_N = 16
+
+
+def _min_time(fn, reps):
+    ts = []
+    for _ in range(reps):
+        t0 = time.perf_counter()
+        fn()
+        ts.append(time.perf_counter() - t0)
+    return min(ts)
+
+
+def _measure() -> dict:
+    import jax
+    import jax.numpy as jnp
+    import numpy as np
+
+    from benchmarks.common import NUM_CLIENTS, build_trainer
+    from repro.data.synthetic import SyntheticTaskConfig
+
+    mesh = None
+    if jax.device_count() > 1:
+        from jax.sharding import Mesh
+        mesh = Mesh(np.array(jax.devices()), ("clients",))
+
+    out: dict = {"config": {"model": "fedbench-tiny", "num_clients": NUM_CLIENTS,
+                            "sample_rate": 0.4, "devices": jax.device_count(),
+                            "timed_rounds": TIMED_ROUNDS},
+                 "rounds": {}}
+
+    # ---- rounds/sec: fused vs sequential, local_steps sweep ---------------
+    for steps in ROUND_STEPS:
+        fused = build_trainer("samllava", aggregator="fedilora",
+                              local_steps=steps)
+        fused.client_mesh = mesh
+        seq = build_trainer("samllava", aggregator="fedilora",
+                            local_steps=steps)
+        fused.run_round()            # compile
+        seq.run_round_reference()
+        tf = _min_time(fused.run_round, TIMED_ROUNDS)
+        ts = _min_time(seq.run_round_reference, TIMED_ROUNDS)
+        out["rounds"][str(steps)] = {
+            "fused_s": tf, "sequential_s": ts,
+            "fused_rounds_per_sec": 1.0 / tf,
+            "sequential_rounds_per_sec": 1.0 / ts,
+            "speedup": ts / tf,
+        }
+    out["speedup_default_protocol"] = out["rounds"]["8"]["speedup"]
+    out["speedup"] = max(r["speedup"] for r in out["rounds"].values())
+
+    # ---- per-phase breakdown at the default protocol ----------------------
+    tr = build_trainer("samllava", aggregator="fedilora", local_steps=8)
+    tr.client_mesh = mesh
+    tr.run_round()
+    sampled = tr._sample_clients()
+    idx = jnp.asarray(sampled, jnp.int32)
+    ranks_s = tr._ranks_dev[idx]
+    lora_s = jax.tree_util.tree_map(lambda x: x[idx], tr.stacked_lora)
+    batch_idx = jnp.asarray(
+        np.stack([tr._batch_indices(tr.clients[k]) for k in sampled]), jnp.int32)
+    batches = {k: v[idx[:, None, None], batch_idx]
+               for k, v in tr._stacked_data.items()}
+
+    from repro.core import aggregation as AG
+    from repro.launch.fedround import (_make_local_train, _vmapped_edit)
+    lt = _make_local_train(tr.mcfg, tr.ocfg, lora_scale=tr.lora_scale,
+                           r_g=tr.lcfg.rank)
+    if mesh is not None:
+        # pre-shard the per-client inputs so the timed train phase runs
+        # client-parallel like the fused engine's shard_map section
+        from jax.sharding import NamedSharding, PartitionSpec as P
+        shard = NamedSharding(mesh, P("clients"))
+        lora_s, ranks_s, batches = jax.device_put(
+            (lora_s, ranks_s, batches), shard)
+    vtrain = jax.jit(lambda bp, lo, r, b: jax.vmap(
+        lambda l, rr, bb: lt(bp, l, rr, bb))(lo, r, b))
+    vedit = jax.jit(lambda lo, r, g: _vmapped_edit(
+        lo, r, g, tr.fcfg.edit, tr.lcfg.rank))
+    vagg = jax.jit(lambda lo, r, p: AG.aggregate(
+        "fedilora", lo, r, p)[0])
+    p = jnp.full((len(sampled),), 1.0 / len(sampled))
+
+    def timed(fn, *args):
+        o = fn(*args); jax.block_until_ready(o)      # compile
+        ts = []
+        for _ in range(3):
+            t0 = time.perf_counter()
+            o = fn(*args); jax.block_until_ready(o)
+            ts.append(time.perf_counter() - t0)
+        return min(ts), o
+
+    t_train, (lora1, _) = timed(vtrain, tr.base_params, lora_s, ranks_s, batches)
+    t_edit, (lora1, _) = timed(vedit, lora1, ranks_s, tr.server.prev_global)
+    t_agg, _ = timed(vagg, lora1, ranks_s, p)
+    out["phase_ms"] = {"local_train": t_train * 1e3, "edit": t_edit * 1e3,
+                       "aggregate": t_agg * 1e3}
+
+    # ---- evaluation decode: KV-cached vs per-token full forward -----------
+    tcfg = SyntheticTaskConfig(seed=29, caption_len=DECODE_CAPTION_LEN)
+    dec = build_trainer("samllava", aggregator="fedilora", local_steps=2,
+                        tcfg=tcfg)
+    dec.run_round()
+    lora = dec.server.global_lora
+    gtest = dec.global_test
+    dec.generation_scores(lora, gtest, n=DECODE_N, cached=True)    # compile
+    dec.generation_scores(lora, gtest, n=DECODE_N, cached=False)
+    tc = _min_time(lambda: dec.generation_scores(lora, gtest, n=DECODE_N,
+                                                 cached=True), 3)
+    tu = _min_time(lambda: dec.generation_scores(lora, gtest, n=DECODE_N,
+                                                 cached=False), 3)
+    out["decode"] = {"gen_len": DECODE_CAPTION_LEN + 1, "batch": DECODE_N,
+                     "cached_s": tc, "uncached_s": tu, "speedup": tu / tc}
+    out["phase_ms"]["eval_decode_cached"] = tc * 1e3
+    return out
+
+
+def main() -> list[str]:
+    """Spawn the measurement subprocess (forced host devices for the client
+    mesh), write BENCH_fedround.json, return CSV lines."""
+    n_sample = 4                    # round(0.4 * 10)
+    ndev = max(d for d in (1, 2, 4)
+               if d <= (os.cpu_count() or 1) and n_sample % d == 0)
+    env = dict(os.environ)
+    flags = env.get("XLA_FLAGS", "")
+    env["XLA_FLAGS"] = (flags + f" --xla_force_host_platform_device_count={ndev}").strip()
+    env.setdefault("PYTHONPATH", os.path.join(os.path.dirname(__file__), ".."))
+    code = ("import json; from benchmarks.bench_fedround import _measure, _JSON_TAG; "
+            "print(_JSON_TAG + json.dumps(_measure()))")
+    proc = subprocess.run([sys.executable, "-c", code], capture_output=True,
+                          text=True, env=env, timeout=1800)
+    if proc.returncode != 0:
+        raise RuntimeError(f"bench_fedround subprocess failed:\n{proc.stdout}"
+                           f"\n{proc.stderr}")
+    payload = next(l for l in proc.stdout.splitlines()
+                   if l.startswith(_JSON_TAG))
+    res = json.loads(payload[len(_JSON_TAG):])
+    with open("BENCH_fedround.json", "w") as f:
+        json.dump(res, f, indent=2)
+
+    lines = []
+    for steps, r in sorted(res["rounds"].items()):
+        lines.append(f"fedround/steps{steps}/fused,{r['fused_s'] * 1e6:.1f},"
+                     f"{r['fused_rounds_per_sec']:.2f} rounds/s")
+        lines.append(f"fedround/steps{steps}/sequential,"
+                     f"{r['sequential_s'] * 1e6:.1f},"
+                     f"{r['sequential_rounds_per_sec']:.2f} rounds/s")
+        lines.append(f"fedround/steps{steps}/speedup,0.0,{r['speedup']:.2f}x")
+    for phase, ms in res["phase_ms"].items():
+        lines.append(f"fedround/phase/{phase},{ms * 1e3:.1f},ms={ms:.2f}")
+    d = res["decode"]
+    lines.append(f"fedround/decode/cached,{d['cached_s'] * 1e6:.1f},"
+                 f"gen_len={d['gen_len']}")
+    lines.append(f"fedround/decode/uncached,{d['uncached_s'] * 1e6:.1f},"
+                 f"gen_len={d['gen_len']}")
+    lines.append(f"fedround/decode/speedup,0.0,{d['speedup']:.2f}x")
+    lines.append(f"fedround/devices,0.0,{res['config']['devices']}")
+    return lines
+
+
+if __name__ == "__main__":
+    print("\n".join(main()))

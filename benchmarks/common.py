@@ -39,9 +39,10 @@ def build_trainer(dataset: str = "samllava", *, aggregator: str = "fedilora",
                   missing: float = 0.6, edit: EditConfig | None = None,
                   ranks: tuple = RANKS, local_steps: int = 8,
                   sample_rate: float = 0.4, seed: int = 0,
-                  examples: int = 700) -> FederatedTrainer:
+                  examples: int = 700,
+                  tcfg: SyntheticTaskConfig | None = None) -> FederatedTrainer:
     tseed = DATASETS[dataset]
-    tcfg = SyntheticTaskConfig(seed=tseed)
+    tcfg = tcfg or SyntheticTaskConfig(seed=tseed)
     sizes = heterogeneous_sizes(NUM_CLIENTS, examples, seed=tseed)
     clients, gtest = make_federated_datasets(tcfg, NUM_CLIENTS, sizes, seed=tseed)
     ctrain, ceval = [], []

@@ -71,5 +71,11 @@ def load_federated(dirpath: str, trainer) -> None:
     trainer.server.global_lora = load_pytree(os.path.join(dirpath, "global_lora.npz"))
     trainer.server.prev_global = load_pytree(os.path.join(dirpath, "prev_global.npz"))
     trainer.server.round = meta["round"]
-    for i, c in enumerate(trainer.clients):
-        c.lora = load_pytree(os.path.join(dirpath, f"client_{i}.npz"))
+    # client adapters live stacked [K, ...] on the trainer (client .lora is a
+    # read-only view) — restore by restacking the per-client snapshots
+    loras = [load_pytree(os.path.join(dirpath, f"client_{i}.npz"))
+             for i in range(len(trainer.clients))]
+    trainer.stacked_lora = jax.tree_util.tree_map(
+        lambda *xs: jnp.stack(xs), *loras)
+    trainer.client_ranks = np.asarray(meta["ranks"], np.int32)
+    trainer._ranks_dev = jnp.asarray(trainer.client_ranks)

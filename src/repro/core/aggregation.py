@@ -166,8 +166,53 @@ def fedilora(stacked: Pytree, ranks: jax.Array, p: jax.Array) -> Pytree:
     return out
 
 
+def fedilora_kernel(stacked: Pytree, ranks: jax.Array, p: jax.Array) -> Pytree:
+    """Pallas dimension-wise aggregation (repro/kernels/dim_agg.py) —
+    numerically identical to :func:`fedilora` (tested); on TPU the per-leaf
+    reduction lowers to a fused Mosaic kernel, on CPU it runs in interpret
+    mode.  Imported lazily to keep core free of a kernels dependency."""
+    from repro.kernels.ops import fedilora_aggregate_tree
+
+    return fedilora_aggregate_tree(stacked, ranks, p)
+
+
+# ---------------------------------------------------------------------------
+# registry — the single dispatch point for every round driver
+# ---------------------------------------------------------------------------
+#
+# Every entry shares the normalised signature
+#     fn(stacked, ranks, p, *, hetlora_beta, lora_scale) -> (global_lora, base_delta)
+# where exactly one of the outputs is non-None: LoRA-space strategies return
+# a new global adapter; FLoRA returns dense weight deltas for the caller to
+# fold into the base parameters (and re-initialise the global adapter).
+# Both the host-driven reference loop (repro/federated/runtime.py) and the
+# fused SPMD round (repro/launch/fedround.py) dispatch through here — there
+# is deliberately no other if/elif chain over aggregator names.
+
 AGGREGATORS: dict[str, Callable] = {
-    "fedavg": fedavg,
-    "hetlora": hetlora,
-    "fedilora": fedilora,
+    "fedavg": lambda s, r, p, *, hetlora_beta, lora_scale: (fedavg(s, r, p), None),
+    "hetlora": lambda s, r, p, *, hetlora_beta, lora_scale: (
+        hetlora(s, r, p, hetlora_beta), None),
+    "fedilora": lambda s, r, p, *, hetlora_beta, lora_scale: (fedilora(s, r, p), None),
+    "fedilora_kernel": lambda s, r, p, *, hetlora_beta, lora_scale: (
+        fedilora_kernel(s, r, p), None),
+    "flora": lambda s, r, p, *, hetlora_beta, lora_scale: (
+        None, flora_delta(s, r, p, lora_scale)),
 }
+
+
+def aggregate(name: str, stacked: Pytree, ranks: jax.Array, p: jax.Array, *,
+              hetlora_beta: float = 1.0, lora_scale: float = 1.0
+              ) -> tuple[Pytree | None, Pytree | None]:
+    """Dispatch one server aggregation through :data:`AGGREGATORS`.
+
+    Returns ``(global_lora, base_delta)``; see the registry comment above.
+    Pure and jit-able for every strategy (the kernel path runs Pallas in
+    interpret mode off-TPU).
+    """
+    try:
+        fn = AGGREGATORS[name]
+    except KeyError:
+        raise ValueError(
+            f"unknown aggregator {name!r}; have {sorted(AGGREGATORS)}") from None
+    return fn(stacked, ranks, p, hetlora_beta=hetlora_beta, lora_scale=lora_scale)

@@ -11,17 +11,46 @@ One communication round (paper Fig. 3):
 3. **LoRA editing** (FediLoRA Sec. 3.2) runs at the end of local fine-tuning
    and *before* aggregation: cosine-similarity vs. the previous round's
    global A, argmin layer, soft blend;
-4. the server stacks the sampled clients' padded adapters and aggregates
-   with the configured strategy (FedAvg / HetLoRA / FLoRA / FediLoRA).
+4. the server aggregates the sampled clients' padded adapters with the
+   configured strategy (FedAvg / HetLoRA / FLoRA / FediLoRA), dispatched
+   through ``repro.core.aggregation.AGGREGATORS``.
 
 Clients keep their post-edit adapters for the *personalized* evaluation; the
 aggregated adapter is the *global* evaluation target (paper Table 1).
+
+Fused round engine
+------------------
+
+``run_round`` executes the whole round as ONE jit-compiled, buffer-donated
+program (``repro.launch.fedround.make_round_engine``):
+
+* client adapters live as persistently *stacked* device arrays
+  ``[K, ...]`` (plus ``ranks[K]``) — sampled-client gather/scatter happens
+  on device, never as per-client host pytrees;
+* local AdamW training, HetLoRA self-pruning and layer-wise editing are
+  vmapped over the client axis; aggregation dispatches through the shared
+  registry (the ``fedilora_kernel`` entry lowers to the Pallas ``dim_agg``
+  kernel on TPU);
+* batches are gathered/stacked device-side from per-client device-resident
+  shards; the only host synchronisation is one deferred metrics fetch per
+  round (losses + edited layers + post-pruning ranks);
+* the stacked state is donated into the step, and the input global adapter
+  is snapshotted through the program as the next ``prev_global`` — donation
+  therefore cannot invalidate it (the use-after-donate hazard the old
+  ``prev_global = global_lora`` aliasing would have caused).
+
+``run_round_reference`` preserves the host-driven per-client loop — the
+numerical reference for the fused path and the sequential baseline measured
+by ``benchmarks/bench_fedround.py``.  Evaluation decode
+(``generation_scores``) is KV-cached O(T) via
+``repro.launch.steps.make_greedy_generate``; pass ``cached=False`` for the
+O(T²) full-re-forward-per-token reference.
 """
 
 from __future__ import annotations
 
 import dataclasses
-from functools import partial
+import warnings
 from typing import Any
 
 import jax
@@ -29,17 +58,24 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import aggregation as AG
-from repro.core.editing import EditConfig, edit_lora
+from repro.core.editing import edit_lora
 from repro.core.lora import (LoRAConfig, init_lora_params, mask_lora_params,
                              truncate_redistribute)
-from repro.data.synthetic import EOS, SEP, batch_iterator
+from repro.data.synthetic import EOS
 from repro.federated.config import FederatedConfig
+from repro.launch.fedround import apply_weight_deltas, make_round_engine
+from repro.launch.steps import make_greedy_generate
 from repro.metrics import corpus_scores
 from repro.models import transformer as T
 from repro.models.config import ModelConfig
 from repro.optim import OptimizerConfig, make_optimizer
 
 Pytree = Any
+
+# batch keys that ride the training step (everything else, e.g. raw concept
+# ids, stays on the host)
+_BATCH_KEYS = ("tokens", "labels", "loss_mask", "image", "image_mask",
+               "audio", "text_mask")
 
 
 @dataclasses.dataclass
@@ -50,24 +86,46 @@ class ServerState:
     flora_delta: Pytree | None = None
 
 
-@dataclasses.dataclass
 class ClientState:
-    rank: int
-    lora: Pytree                 # padded to r_g, masked to rank
-    data: dict                   # training shard (possibly modality-dropped)
-    eval_data: dict              # local test split (complete modalities)
-    size: int
-    rng: np.random.Generator
+    """One client's private data plus a *view* of its slice of the trainer's
+    stacked device state — ``lora``/``rank`` read through to
+    ``trainer.stacked_lora[k]`` / ``trainer.client_ranks[k]`` so the
+    persistent representation stays a single ``[K, ...]`` array."""
+
+    def __init__(self, trainer: "FederatedTrainer", index: int, data: dict,
+                 eval_data: dict, size: int, rng: np.random.Generator):
+        self._trainer = trainer
+        self._index = index
+        self.data = data
+        self.eval_data = eval_data
+        self.size = size
+        self.rng = rng
+
+    @property
+    def rank(self) -> int:
+        return int(self._trainer.client_ranks[self._index])
+
+    @property
+    def lora(self) -> Pytree:
+        k = self._index
+        return jax.tree_util.tree_map(lambda x: x[k],
+                                      self._trainer.stacked_lora)
 
 
 class FederatedTrainer:
     def __init__(self, model_cfg: ModelConfig, fed_cfg: FederatedConfig,
                  opt_cfg: OptimizerConfig, client_train: list[dict],
                  client_eval: list[dict], global_test: dict,
-                 base_params: Pytree | None = None, seed: int = 0):
+                 base_params: Pytree | None = None, seed: int = 0,
+                 client_mesh: "jax.sharding.Mesh | None" = None):
+        """``client_mesh``: optional 1-D mesh whose single axis the sampled
+        client batches shard over — the fused round then runs the local
+        fine-tuning of different clients on different devices in parallel
+        (clients → mesh data axis, DESIGN.md §3).  ``None`` = single device."""
         self.mcfg = model_cfg
         self.fcfg = fed_cfg
         self.ocfg = opt_cfg
+        self.client_mesh = client_mesh
         self.global_test = global_test
         key = jax.random.PRNGKey(seed)
         self.base_params = base_params if base_params is not None \
@@ -79,16 +137,47 @@ class FederatedTrainer:
         g0 = init_lora_params(jax.random.fold_in(key, 1), self.specs, self.lcfg)
         self.server = ServerState(global_lora=g0,
                                   prev_global=jax.tree_util.tree_map(jnp.copy, g0))
+        # ---- persistent stacked client state [K, ...] --------------------
+        loras = [init_lora_params(jax.random.fold_in(key, 100 + k), self.specs,
+                                  self.lcfg, client_rank=fed_cfg.ranks[k])
+                 for k in range(fed_cfg.num_clients)]
+        self.stacked_lora: Pytree = jax.tree_util.tree_map(
+            lambda *xs: jnp.stack(xs), *loras)
+        self.client_ranks = np.asarray(fed_cfg.ranks, np.int32)   # host mirror
+        self._ranks_dev = jnp.asarray(self.client_ranks)
+        sizes = np.asarray([d["tokens"].shape[0] for d in client_train],
+                           np.float32)
+        self._sizes_dev = jnp.asarray(sizes)
         self.clients: list[ClientState] = []
         for k in range(fed_cfg.num_clients):
-            lora_k = init_lora_params(jax.random.fold_in(key, 100 + k), self.specs,
-                                      self.lcfg, client_rank=fed_cfg.ranks[k])
             self.clients.append(ClientState(
-                rank=fed_cfg.ranks[k], lora=lora_k, data=client_train[k],
-                eval_data=client_eval[k], size=client_train[k]["tokens"].shape[0],
+                self, k, data=client_train[k], eval_data=client_eval[k],
+                size=int(sizes[k]),
                 rng=np.random.default_rng(seed + 7 * k + 1)))
+        # device-resident training corpus [K, N_max, ...] (zero-padded to the
+        # longest shard; batch indices never reach the padding) — the fused
+        # round gathers its minibatches from this in-program
+        keys = [kk for kk in _BATCH_KEYS
+                if all(kk in d for d in client_train)]
+        partial = [kk for kk in _BATCH_KEYS
+                   if kk not in keys and any(kk in d for d in client_train)]
+        if partial:
+            raise ValueError(
+                f"batch keys {partial} present in only some client shards; "
+                "the stacked corpus needs uniform keys (add the key — e.g. an "
+                "all-ones mask — to every client or drop it everywhere)")
+        n_max = max(d["tokens"].shape[0] for d in client_train)
+        self._stacked_data = {
+            kk: jnp.stack([
+                np.pad(np.asarray(d[kk]),
+                       [(0, n_max - d[kk].shape[0])]
+                       + [(0, 0)] * (np.asarray(d[kk]).ndim - 1))
+                for d in client_train])
+            for kk in keys}
         self._opt_init, self._opt_update = make_optimizer(opt_cfg)
-        self._local_train = jax.jit(self._local_train_impl)
+        self._round_step = None        # fused engine, built on first round
+        self._local_train = None       # reference per-client jit, lazy
+        self._gen_cache: dict = {}     # jitted cached-decode fns per shape
         self._eval_loss = jax.jit(self._eval_loss_impl)
         self._next_logits = jax.jit(self._next_logits_impl)
         self.rng = np.random.default_rng(seed)
@@ -116,79 +205,168 @@ class FederatedTrainer:
         (lora, _), losses = jax.lax.scan(step, (lora, opt_state), batches)
         return lora, losses
 
+    def _batch_indices(self, client: ClientState) -> np.ndarray:
+        """[local_steps, batch_size] example indices, drawn exactly like
+        ``batch_iterator`` (shuffled epochs from the client's PRNG) — shared
+        by the fused and reference paths so both see identical batches."""
+        B, steps = self.fcfg.batch_size, self.fcfg.local_steps
+        n = client.data["tokens"].shape[0]
+        if n < B:
+            raise ValueError(
+                f"client shard has {n} examples < batch_size {B}; "
+                "an epoch yields no batches")
+        out: list[np.ndarray] = []
+        while len(out) < steps:
+            perm = client.rng.permutation(n)
+            for i in range(0, n - B + 1, B):
+                out.append(perm[i: i + B])
+                if len(out) == steps:
+                    break
+        return np.stack(out)
+
     def _prefetch(self, client: ClientState) -> dict:
-        it = batch_iterator(client.data, self.fcfg.batch_size, client.rng)
-        bs = [next(it) for _ in range(self.fcfg.local_steps)]
-        stacked = {k: np.stack([b[k] for b in bs]) for k in bs[0]}
-        return {k: jnp.asarray(v) for k, v in stacked.items()
-                if k in ("tokens", "labels", "loss_mask", "image", "image_mask",
-                         "audio", "text_mask")}
+        """Reference-path prefetch: host-side gather of the same batch
+        indices the fused path uses, one transfer per key — fused and
+        reference engines train on identical batches by construction."""
+        ix = self._batch_indices(client)
+        return {k: jnp.asarray(v[ix]) for k, v in client.data.items()
+                if k in _BATCH_KEYS}
+
+    @property
+    def _n_sample(self) -> int:
+        """Clients per round — also the jitted engine's static client-axis
+        size, so host sampling and the compiled program must agree."""
+        fc = self.fcfg
+        return max(int(round(fc.sample_rate * fc.num_clients)), 1)
+
+    def _sample_clients(self) -> list[int]:
+        return sorted(self.rng.choice(self.fcfg.num_clients, self._n_sample,
+                                      replace=False))
 
     # ------------------------------------------------------------------ round
+    def _get_round_step(self):
+        if self._round_step is None:
+            fc = self.fcfg
+            step = make_round_engine(
+                self.mcfg, self.ocfg, specs=self.specs,
+                lora_scale=self.lora_scale, r_g=self.lcfg.rank,
+                edit=fc.edit, aggregator=fc.aggregator,
+                hetlora_beta=fc.hetlora_beta,
+                hetlora_prune_gamma=fc.hetlora_prune_gamma,
+                mesh=self.client_mesh, n_sample=self._n_sample)
+            # donate the persistent stacked state (in-place update on TPU);
+            # base params too for FLoRA, which folds deltas into them
+            donate = (1, 2, 3, 4) + ((0,) if fc.aggregator == "flora" else ())
+            self._round_step = jax.jit(step, donate_argnums=donate)
+        return self._round_step
+
     def run_round(self) -> dict:
+        """One communication round = ONE fused jit dispatch (see module
+        docstring).  Exactly one host sync: the deferred metrics fetch."""
+        sampled = self._sample_clients()
+        batch_idx = np.stack([self._batch_indices(self.clients[k])
+                              for k in sampled])
+        with warnings.catch_warnings():
+            # donation is a no-op off TPU/GPU; silence only this dispatch
+            warnings.filterwarnings(
+                "ignore", message="Some donated buffers were not usable")
+            out = self._get_round_step()(
+                self.base_params, self.stacked_lora, self.server.global_lora,
+                self.server.prev_global, self._ranks_dev, self._sizes_dev,
+                self._stacked_data, jnp.asarray(sampled, jnp.int32),
+                jnp.asarray(batch_idx, jnp.int32),
+                jnp.asarray(self.server.round, jnp.int32))
+        self.stacked_lora = out["stacked_lora"]
+        self.server.prev_global = out["prev_global"]
+        self.server.global_lora = out["global_lora"]
+        self._ranks_dev = out["ranks"]
+        if "base_params" in out:           # flora folded deltas into base
+            self.base_params = out["base_params"]
+        self.server.round += 1
+        # ---- ONE deferred fetch for everything the host needs ------------
+        fetched = jax.device_get({"metrics": out["metrics"],
+                                  "ranks": out["ranks"]})
+        self.client_ranks = np.asarray(fetched["ranks"])
+        edited = fetched["metrics"].get("edited")
+        rec = {"round": self.server.round, "sampled": list(map(int, sampled)),
+               "train_loss": float(np.mean(fetched["metrics"]["last_loss"])),
+               "edited_layers": [] if edited is None
+               else [int(e) for e in edited]}
+        self.history.append(rec)
+        return rec
+
+    def run_round_reference(self) -> dict:
+        """Host-driven per-client loop (the pre-fusion engine): one jit
+        dispatch and one blocking ``float()`` sync per client, eager editing
+        and pruning.  Kept as the numerical reference for
+        fused-vs-reference tests and as the sequential benchmark baseline."""
         fc = self.fcfg
-        n_sample = max(int(round(fc.sample_rate * fc.num_clients)), 1)
-        sampled = sorted(self.rng.choice(fc.num_clients, n_sample, replace=False))
+        sampled = self._sample_clients()
         r_g = self.lcfg.rank
+        if self._local_train is None:
+            self._local_train = jax.jit(self._local_train_impl)
 
         edited_layers, losses = [], []
+        client_lora: dict[int, Pytree] = {}
         for k in sampled:
             c = self.clients[k]
+            rank_k = int(self.client_ranks[k])
             if fc.aggregator == "flora":
                 # FLoRA: server folded delta into base; clients restart LoRA
                 lora0 = init_lora_params(
                     jax.random.PRNGKey(1000 * self.server.round + k),
-                    self.specs, self.lcfg, client_rank=c.rank)
+                    self.specs, self.lcfg, client_rank=rank_k)
             else:
-                lora0 = truncate_redistribute(self.server.global_lora, c.rank, r_g)
+                lora0 = truncate_redistribute(self.server.global_lora, rank_k, r_g)
             batches = self._prefetch(c)
-            lora1, ls = self._local_train(self.base_params, lora0, c.rank, batches)
+            lora1, ls = self._local_train(self.base_params, lora0, rank_k, batches)
             losses.append(float(ls[-1]))
             # HetLoRA rank self-pruning (Cho et al. 2024): clients shrink
             # their rank when trailing dims carry negligible mass
             if fc.aggregator == "hetlora" and fc.hetlora_prune_gamma > 0:
-                pruned = c.rank
+                pruned = rank_k
                 for entry in lora1.values():
-                    pr = AG.hetlora_self_prune(entry, c.rank, r_g,
+                    pr = AG.hetlora_self_prune(entry, rank_k, r_g,
                                                fc.hetlora_prune_gamma)
                     pruned = min(pruned, int(pr))
-                if pruned < c.rank:
-                    c.rank = max(pruned, 1)
-                    lora1 = mask_lora_params(lora1, c.rank, r_g)
+                if pruned < rank_k:
+                    rank_k = max(pruned, 1)
+                    self.client_ranks[k] = rank_k
+                    lora1 = mask_lora_params(lora1, rank_k, r_g)
             # --- layer-wise editing (before aggregation, paper Fig. 3) ------
             if fc.edit.enabled and fc.aggregator != "flora":
-                glob_prev = truncate_redistribute(self.server.prev_global, c.rank, r_g)
+                glob_prev = truncate_redistribute(self.server.prev_global,
+                                                  rank_k, r_g)
                 lora1, diag = edit_lora(lora1, glob_prev, fc.edit)
-                lora1 = mask_lora_params(lora1, c.rank, r_g)
+                lora1 = mask_lora_params(lora1, rank_k, r_g)
                 edited_layers.append(int(jnp.argmax(diag["selected"])))
-            c.lora = lora1
+            client_lora[k] = lora1
 
-        # ---- aggregate --------------------------------------------------
+        # ---- stack once: aggregation input + one batched scatter ---------
         stacked = jax.tree_util.tree_map(
-            lambda *xs: jnp.stack(xs), *[self.clients[k].lora for k in sampled])
-        ranks = jnp.asarray([self.clients[k].rank for k in sampled])
+            lambda *xs: jnp.stack(xs), *[client_lora[k] for k in sampled])
+        ks = np.asarray(sampled)
+        self.stacked_lora = jax.tree_util.tree_map(
+            lambda s, u: s.at[ks].set(u), self.stacked_lora, stacked)
+        self._ranks_dev = jnp.asarray(self.client_ranks)
+
+        # ---- aggregate (through the shared registry) ---------------------
+        ranks = jnp.asarray([int(self.client_ranks[k]) for k in sampled])
         sizes = np.asarray([self.clients[k].size for k in sampled], np.float32)
         p = jnp.asarray(sizes / sizes.sum())
 
-        self.server.prev_global = self.server.global_lora
-        if fc.aggregator == "fedavg":
-            self.server.global_lora = AG.fedavg(stacked, ranks, p)
-        elif fc.aggregator == "hetlora":
-            self.server.global_lora = AG.hetlora(stacked, ranks, p, fc.hetlora_beta)
-        elif fc.aggregator == "fedilora":
-            self.server.global_lora = AG.fedilora(stacked, ranks, p)
-        elif fc.aggregator == "fedilora_kernel":
-            # Pallas dimension-wise aggregation kernel (repro/kernels) —
-            # numerically identical to `fedilora` (tested), fused on TPU
-            from repro.kernels.ops import fedilora_aggregate_tree
-            self.server.global_lora = fedilora_aggregate_tree(stacked, ranks, p)
-        elif fc.aggregator == "flora":
-            delta = AG.flora_delta(stacked, ranks, p, self.lora_scale)
-            self.base_params = apply_weight_deltas(self.base_params, delta)
-            self.server.global_lora = init_lora_params(
+        # explicit snapshot — assigning the live global here would alias the
+        # buffers the fused path donates (use-after-donate)
+        self.server.prev_global = jax.tree_util.tree_map(
+            jnp.copy, self.server.global_lora)
+        global_new, base_delta = AG.aggregate(
+            fc.aggregator, stacked, ranks, p,
+            hetlora_beta=fc.hetlora_beta, lora_scale=self.lora_scale)
+        if base_delta is not None:         # flora
+            self.base_params = apply_weight_deltas(self.base_params, base_delta)
+            global_new = init_lora_params(
                 jax.random.PRNGKey(self.server.round + 77), self.specs, self.lcfg)
-        else:
-            raise ValueError(fc.aggregator)
+        self.server.global_lora = global_new
         self.server.round += 1
         rec = {"round": self.server.round, "sampled": list(map(int, sampled)),
                "train_loss": float(np.mean(losses)),
@@ -225,10 +403,11 @@ class FederatedTrainer:
         """Size-weighted average of client-local performance (paper Sec. 2.2)."""
         accs, losses, bleus, rsums, w = [], [], [], [], []
         for c in self.clients:
-            m = self._eval_loss(self.base_params, c.lora, self._eval_batch(c.eval_data))
+            lora_k = c.lora            # one gather from the stacked state
+            m = self._eval_loss(self.base_params, lora_k, self._eval_batch(c.eval_data))
             losses.append(float(m["loss"]));  accs.append(float(m["acc"]))
             if generate:
-                g = self.generation_scores(c.lora, c.eval_data, n)
+                g = self.generation_scores(lora_k, c.eval_data, n)
                 bleus.append(g["bleu"]);  rsums.append(g["rsum"])
             w.append(c.size)
         w = np.asarray(w, np.float64);  w = w / w.sum()
@@ -238,9 +417,26 @@ class FederatedTrainer:
             out["rsum"] = float(np.dot(w, rsums))
         return out
 
-    def generation_scores(self, lora, data: dict, n: int = 32) -> dict:
-        """Greedy caption generation → Google-BLEU / ROUGE-LSum (paper metrics)."""
-        cfg = self.mcfg
+    def _generate_cached(self, lora, tokens: np.ndarray, image,
+                         cap_start: int, gen_len: int) -> np.ndarray:
+        """KV-cached greedy decode — one jit dispatch per generation call
+        (prompt prefill + all decode steps are scanned inside the program)."""
+        key = (tokens.shape[0], cap_start, gen_len, image is not None)
+        fn = self._gen_cache.get(key)
+        if fn is None:
+            fn = jax.jit(make_greedy_generate(
+                self.mcfg, lora_scale=self.lora_scale,
+                cap_start=cap_start, gen_len=gen_len))
+            self._gen_cache[key] = fn
+        toks = jnp.asarray(tokens[:, : cap_start + 1])
+        return np.asarray(fn(self.base_params, lora, toks, image))
+
+    def generation_scores(self, lora, data: dict, n: int = 32,
+                          cached: bool = True) -> dict:
+        """Greedy caption generation → Google-BLEU / ROUGE-LSum (paper
+        metrics).  ``cached=True`` uses the O(T) KV-cached decode;
+        ``cached=False`` keeps the O(T²) full-forward-per-token reference
+        (token-for-token identical, tested)."""
         tokens = np.asarray(data["tokens"][:n])
         labels = np.asarray(data["labels"][:n])
         loss_mask = np.asarray(data["loss_mask"][:n])
@@ -248,39 +444,25 @@ class FederatedTrainer:
         # prompt = everything before the first supervised position
         cap_start = int(np.argmax(loss_mask[0] > 0))  # position of SEP logits
         gen_len = int(loss_mask[0].sum())
-        toks = np.array(tokens, copy=True)
-        toks[:, cap_start + 1:] = 0
-        toks = jnp.asarray(toks)
 
-        for t in range(gen_len):
-            pos = jnp.asarray(cap_start + t)
-            lg = self._next_logits(self.base_params, toks, lora, pos, image)
-            nxt = jnp.argmax(lg, -1)
-            toks = toks.at[:, cap_start + 1 + t].set(nxt.astype(toks.dtype))
+        if cached:
+            gen = self._generate_cached(lora, tokens, image, cap_start, gen_len)
+        else:
+            toks = np.array(tokens, copy=True)
+            toks[:, cap_start + 1:] = 0
+            toks = jnp.asarray(toks)
+            for t in range(gen_len):
+                pos = jnp.asarray(cap_start + t)
+                lg = self._next_logits(self.base_params, toks, lora, pos, image)
+                nxt = jnp.argmax(lg, -1)
+                toks = toks.at[:, cap_start + 1 + t].set(nxt.astype(toks.dtype))
+            gen = np.asarray(toks)[:, cap_start + 1: cap_start + 1 + gen_len]
+
         hyps, refs = [], []
-        toks = np.asarray(toks)
-        for i in range(toks.shape[0]):
-            h = toks[i, cap_start + 1: cap_start + 1 + gen_len].tolist()
+        for i in range(gen.shape[0]):
+            h = gen[i].tolist()
             r = labels[i][loss_mask[i] > 0].tolist()
             h = h[: h.index(EOS)] if EOS in h else h
             r = [x for x in r if x != EOS]
             hyps.append(h);  refs.append(r)
         return corpus_scores(hyps, refs)
-
-
-def apply_weight_deltas(params: Pytree, deltas: dict) -> Pytree:
-    """Fold FLoRA dense deltas {spec_name: [L, out, in]} into base weights."""
-    params = jax.tree_util.tree_map(lambda x: x, params)  # shallow copy
-    for name, delta in deltas.items():
-        upd = jnp.swapaxes(delta, -1, -2)  # [L, in, out]
-        if name.startswith("enc."):
-            node = params["encoder"]["blocks"]["s0"]
-            path = name.split(".")[1:]
-        else:
-            sub, rest = name.split(".", 1)
-            node = params["blocks"][sub]
-            path = rest.split(".")
-        for p in path[:-1]:
-            node = node[p]
-        node[path[-1]] = node[path[-1]] + upd.astype(node[path[-1]].dtype)
-    return params

