@@ -1,16 +1,25 @@
-"""Fused federated round: rounds/sec vs the sequential host-loop baseline,
-per-phase breakdown, and KV-cached vs uncached evaluation decode.
+"""Fused federated round: rounds/sec (blocking vs pipelined vs async vs the
+sequential host-loop baseline), per-phase breakdown, KV-cached vs uncached
+evaluation decode, and the looped vs vmapped personalized-evaluation sweep.
 
 The fused engine (``FederatedTrainer.run_round``) executes a whole round as
-one jit dispatch and, given a client mesh, shards the sampled-client axis
-over devices (``shard_map``); the sequential baseline
-(``run_round_reference``) is the pre-fusion engine: one jit dispatch plus a
-blocking ``float()`` sync per client and eager editing/pruning/stacking.
+one jit dispatch; ``run_round_pipelined`` overlaps the next round's host-side
+sampling/batch-index build with the previous round's device execution
+(metrics one round stale); ``run_round_async`` is the buffered FedBuff-style
+timeline (client-update dispatch + staleness-weighted buffer merge).  The
+sequential baseline (``run_round_reference``) is the pre-fusion engine: one
+jit dispatch plus a blocking ``float()`` sync per client.
 
 Measurements run in a subprocess so the client mesh can be backed by forced
-host-platform devices (``XLA_FLAGS`` must be set before jax initialises);
-results are written to ``BENCH_fedround.json`` so the perf trajectory of the
-round engine is tracked from this PR onward.
+host-platform devices (``XLA_FLAGS`` must be set before jax initialises).
+Results go to ``BENCH_fedround.json``: the latest run at the top level, plus
+a ``history`` list (one entry per run, keyed by git SHA + timestamp) so the
+perf trajectory is tracked across PRs instead of overwritten.
+
+``--quick`` skips all wall-clock timing and instead checks the *dispatch
+counts* of every round driver and of the one-dispatch evaluation sweep — the
+regression signal (extra host syncs per round) without timing flakiness.
+The tier-2 smoke test (``pytest -m slow``) asserts on these counters.
 
 Scale: fedbench-tiny, K=10 clients, sampling rate 0.4 (the paper protocol),
 swept over local_steps; decode at gen_len 17 (≥16).
@@ -18,6 +27,8 @@ swept over local_steps; decode at gen_len 17 (≥16).
 
 from __future__ import annotations
 
+import argparse
+import datetime
 import json
 import os
 import subprocess
@@ -29,6 +40,7 @@ ROUND_STEPS = (2, 8)        # local_steps sweep; 8 = paper-protocol default
 TIMED_ROUNDS = 6
 DECODE_CAPTION_LEN = 16     # gen_len = caption_len + 1 = 17 >= 16
 DECODE_N = 16
+EVAL_SWEEP_N = 8            # generation rows per client in the eval sweep
 
 
 def _min_time(fn, reps):
@@ -58,7 +70,7 @@ def _measure() -> dict:
                             "timed_rounds": TIMED_ROUNDS},
                  "rounds": {}}
 
-    # ---- rounds/sec: fused vs sequential, local_steps sweep ---------------
+    # ---- rounds/sec: fused blocking vs pipelined vs sequential ------------
     for steps in ROUND_STEPS:
         fused = build_trainer("samllava", aggregator="fedilora",
                               local_steps=steps)
@@ -68,15 +80,45 @@ def _measure() -> dict:
         fused.run_round()            # compile
         seq.run_round_reference()
         tf = _min_time(fused.run_round, TIMED_ROUNDS)
+        # pipelined vs blocking: BOTH as sustained loops (total/N).  A
+        # per-call min would undercount the pipeline (a call only pays
+        # fetch(t-1) + enqueue(t); the device cost of t lands in the NEXT
+        # call) and min-vs-mean would bias the comparison, so time N
+        # blocking rounds and N pipelined rounds + tail flush identically.
+        t0 = time.perf_counter()
+        for _ in range(TIMED_ROUNDS):
+            fused.run_round()
+        tb = (time.perf_counter() - t0) / TIMED_ROUNDS
+        # drain the entering round before the timer so the timed window
+        # covers exactly N rounds of device work (N calls + tail flush)
+        fused.run_round_pipelined()  # enter the pipeline (returns None)
+        fused.flush_rounds()
+        t0 = time.perf_counter()
+        for _ in range(TIMED_ROUNDS):
+            fused.run_round_pipelined()
+        fused.flush_rounds()
+        tp = (time.perf_counter() - t0) / TIMED_ROUNDS
         ts = _min_time(seq.run_round_reference, TIMED_ROUNDS)
         out["rounds"][str(steps)] = {
-            "fused_s": tf, "sequential_s": ts,
+            "fused_s": tf, "blocking_sustained_s": tb, "pipelined_s": tp,
+            "sequential_s": ts,
             "fused_rounds_per_sec": 1.0 / tf,
+            "pipelined_rounds_per_sec": 1.0 / tp,
             "sequential_rounds_per_sec": 1.0 / ts,
             "speedup": ts / tf,
+            "pipeline_speedup_vs_blocking": tb / tp,
         }
     out["speedup_default_protocol"] = out["rounds"]["8"]["speedup"]
     out["speedup"] = max(r["speedup"] for r in out["rounds"].values())
+
+    # ---- buffered async (fedbuff) rounds/sec ------------------------------
+    asy = build_trainer("samllava", aggregator="fedbuff", local_steps=8)
+    asy.client_mesh = mesh           # cohort axis shard_map, like the fused
+    asy.run_round_async()            # compile (update + merge)
+    ta = _min_time(asy.run_round_async, TIMED_ROUNDS)
+    out["async"] = {"async_s": ta, "async_rounds_per_sec": 1.0 / ta,
+                    "buffer_size": asy._n_sample,
+                    "staleness_decay": asy.fcfg.staleness_decay}
 
     # ---- per-phase breakdown at the default protocol ----------------------
     tr = build_trainer("samllava", aggregator="fedilora", local_steps=8)
@@ -141,12 +183,121 @@ def _measure() -> dict:
     out["decode"] = {"gen_len": DECODE_CAPTION_LEN + 1, "batch": DECODE_N,
                      "cached_s": tc, "uncached_s": tu, "speedup": tu / tc}
     out["phase_ms"]["eval_decode_cached"] = tc * 1e3
+
+    # ---- personalized eval sweep: per-client loop vs ONE vmapped dispatch
+    # (client axis sharded over a mesh whose size divides K — possibly
+    # smaller than the round mesh, which only has to divide n_sample) ------
+    emesh = mesh
+    if mesh is not None and NUM_CLIENTS % mesh.devices.size != 0:
+        from jax.sharding import Mesh
+        ed = max(d for d in range(1, mesh.devices.size + 1)
+                 if NUM_CLIENTS % d == 0)
+        emesh = Mesh(np.array(jax.devices()[:ed]), ("clients",)) \
+            if ed > 1 else None
+    dec.client_mesh = emesh
+    dec.evaluate_personalized(n=EVAL_SWEEP_N, vmapped=True)        # compile
+    dec.evaluate_personalized(n=EVAL_SWEEP_N, vmapped=False)
+    tv = _min_time(lambda: dec.evaluate_personalized(n=EVAL_SWEEP_N,
+                                                     vmapped=True), 3)
+    tl = _min_time(lambda: dec.evaluate_personalized(n=EVAL_SWEEP_N,
+                                                     vmapped=False), 3)
+    out["eval_sweep_s"] = {"clients": NUM_CLIENTS, "gen_rows": EVAL_SWEEP_N,
+                           "looped_s": tl, "vmapped_s": tv,
+                           "speedup": tl / tv}
     return out
 
 
-def main() -> list[str]:
+def quick_check() -> dict:
+    """Dispatch-count regression check — no wall clock, just the jit-call
+    counters of every round driver and of the evaluation sweep on a tiny
+    3-client setup.  An extra host sync / dispatch per round shows up here
+    deterministically; the tier-2 smoke test asserts on the result."""
+    import numpy as np
+
+    from repro.configs import get_config
+    from repro.core.editing import EditConfig
+    from repro.data.synthetic import (SyntheticTaskConfig,
+                                      make_federated_datasets)
+    from repro.federated import FederatedConfig, FederatedTrainer
+    from repro.optim import OptimizerConfig
+
+    def mk(aggregator):
+        tcfg = SyntheticTaskConfig(caption_len=8)
+        clients, gtest = make_federated_datasets(tcfg, 3,
+                                                 np.array([24, 24, 24]))
+        fcfg = FederatedConfig(num_clients=3, sample_rate=1.0,
+                               ranks=(4, 8, 16), local_steps=1, batch_size=4,
+                               aggregator=aggregator,
+                               edit=EditConfig(enabled=True))
+        return FederatedTrainer(get_config("fedbench-tiny"), fcfg,
+                                OptimizerConfig(peak_lr=3e-3, total_steps=20),
+                                clients, clients, gtest, seed=0)
+
+    out = {}
+    tr = mk("fedilora")
+    for _ in range(3):
+        tr.run_round()
+    tr.evaluate_personalized(generate=True, n=4)
+    out["sync"] = dict(tr.dispatch_count)
+
+    tp = mk("fedilora")
+    for _ in range(3):
+        tp.run_round_pipelined()
+    tp.flush_rounds()
+    out["pipelined"] = dict(tp.dispatch_count)
+
+    ta = mk("fedbuff")
+    for _ in range(3):
+        ta.run_round_async()
+    out["async"] = dict(ta.dispatch_count)
+    return out
+
+
+def _append_history(res: dict, path: str = "BENCH_fedround.json") -> dict:
+    """Merge ``res`` into the benchmark artifact: latest run at the top
+    level, every run (including migrated pre-history artifacts) appended to
+    ``history`` keyed by git SHA + timestamp."""
+    history = []
+    if os.path.exists(path):
+        with open(path) as f:
+            prev = json.load(f)
+        history = prev.pop("history", [])
+        if not history and prev:      # migrate a pre-history artifact
+            history.append({"sha": None, "timestamp": None, "results": prev})
+    try:
+        sha = subprocess.run(["git", "rev-parse", "--short", "HEAD"],
+                             capture_output=True, text=True,
+                             cwd=os.path.dirname(os.path.abspath(__file__)),
+                             timeout=10).stdout.strip() or None
+    except (OSError, subprocess.SubprocessError):
+        sha = None
+    ts = datetime.datetime.now(datetime.timezone.utc).isoformat(
+        timespec="seconds")
+    history.append({"sha": sha, "timestamp": ts, "results": res})
+    doc = dict(res)
+    doc["history"] = history
+    with open(path, "w") as f:
+        json.dump(doc, f, indent=2)
+    return doc
+
+
+def main(argv: list[str] | None = None) -> list[str]:
     """Spawn the measurement subprocess (forced host devices for the client
-    mesh), write BENCH_fedround.json, return CSV lines."""
+    mesh), append to BENCH_fedround.json's history, return CSV lines.
+    ``--quick``: dispatch-count check only, in-process, nothing written.
+    ``argv=None`` (the ``benchmarks.run`` harness, which leaves the suite
+    name in ``sys.argv``) means no flags — only ``__main__`` passes argv."""
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--quick", action="store_true",
+                    help="dispatch-count check only (no timing, no JSON)")
+    args = ap.parse_args([] if argv is None else argv)
+
+    if args.quick:
+        counts = quick_check()
+        return [f"fedround/dispatch/{mode}/{name},0.0,{cnt}"
+                for mode, cc in sorted(counts.items())
+                for name, cnt in sorted(cc.items())]
+
     n_sample = 4                    # round(0.4 * 10)
     ndev = max(d for d in (1, 2, 4)
                if d <= (os.cpu_count() or 1) and n_sample % d == 0)
@@ -157,24 +308,29 @@ def main() -> list[str]:
     code = ("import json; from benchmarks.bench_fedround import _measure, _JSON_TAG; "
             "print(_JSON_TAG + json.dumps(_measure()))")
     proc = subprocess.run([sys.executable, "-c", code], capture_output=True,
-                          text=True, env=env, timeout=1800)
+                          text=True, env=env, timeout=2400)
     if proc.returncode != 0:
         raise RuntimeError(f"bench_fedround subprocess failed:\n{proc.stdout}"
                            f"\n{proc.stderr}")
     payload = next(l for l in proc.stdout.splitlines()
                    if l.startswith(_JSON_TAG))
     res = json.loads(payload[len(_JSON_TAG):])
-    with open("BENCH_fedround.json", "w") as f:
-        json.dump(res, f, indent=2)
+    _append_history(res)
 
     lines = []
     for steps, r in sorted(res["rounds"].items()):
         lines.append(f"fedround/steps{steps}/fused,{r['fused_s'] * 1e6:.1f},"
                      f"{r['fused_rounds_per_sec']:.2f} rounds/s")
+        lines.append(f"fedround/steps{steps}/pipelined,"
+                     f"{r['pipelined_s'] * 1e6:.1f},"
+                     f"{r['pipelined_rounds_per_sec']:.2f} rounds/s")
         lines.append(f"fedround/steps{steps}/sequential,"
                      f"{r['sequential_s'] * 1e6:.1f},"
                      f"{r['sequential_rounds_per_sec']:.2f} rounds/s")
         lines.append(f"fedround/steps{steps}/speedup,0.0,{r['speedup']:.2f}x")
+    a = res["async"]
+    lines.append(f"fedround/async,{a['async_s'] * 1e6:.1f},"
+                 f"{a['async_rounds_per_sec']:.2f} rounds/s")
     for phase, ms in res["phase_ms"].items():
         lines.append(f"fedround/phase/{phase},{ms * 1e3:.1f},ms={ms:.2f}")
     d = res["decode"]
@@ -183,9 +339,15 @@ def main() -> list[str]:
     lines.append(f"fedround/decode/uncached,{d['uncached_s'] * 1e6:.1f},"
                  f"gen_len={d['gen_len']}")
     lines.append(f"fedround/decode/speedup,0.0,{d['speedup']:.2f}x")
+    e = res["eval_sweep_s"]
+    lines.append(f"fedround/eval_sweep/looped,{e['looped_s'] * 1e6:.1f},"
+                 f"K={e['clients']}")
+    lines.append(f"fedround/eval_sweep/vmapped,{e['vmapped_s'] * 1e6:.1f},"
+                 f"K={e['clients']}")
+    lines.append(f"fedround/eval_sweep/speedup,0.0,{e['speedup']:.2f}x")
     lines.append(f"fedround/devices,0.0,{res['config']['devices']}")
     return lines
 
 
 if __name__ == "__main__":
-    print("\n".join(main()))
+    print("\n".join(main(sys.argv[1:])))

@@ -19,6 +19,14 @@ Implemented:
 * ``fedilora``   — the paper's dimension-wise reweighting (Eqs. 3-5): row d of
                    the global A (col d of B) is averaged only over clients
                    whose rank covers d, with weights renormalised per-dimension.
+* ``fedbuff``    — buffered *asynchronous* aggregation (Nguyen et al., 2022,
+                   composed with FediLoRA's dimension-wise reweighting): each
+                   buffered client delta carries a staleness s_k (server
+                   versions elapsed since its global was snapshot) and is
+                   discounted by ``(1+s_k)^-decay``; the per-dimension weight
+                   mass lost to the discount stays on the *current* global
+                   (the anchor), so the merge is a convex per-dimension blend.
+                   At staleness 0 it is exactly ``fedilora``.
 """
 
 from __future__ import annotations
@@ -166,6 +174,91 @@ def fedilora(stacked: Pytree, ranks: jax.Array, p: jax.Array) -> Pytree:
     return out
 
 
+# ---------------------------------------------------------------------------
+# FedBuff (Nguyen et al. 2022) × FediLoRA: staleness-discounted buffered merge
+# ---------------------------------------------------------------------------
+
+def staleness_discount(staleness: jax.Array, decay: float) -> jax.Array:
+    """FedBuff's polynomial staleness discount ``(1 + s)^-decay`` → [K].
+
+    ``staleness[k]`` counts server versions elapsed between the global the
+    client trained against and the global at merge time; ``decay=0`` (or
+    all-zero staleness) disables the discount entirely.
+    """
+    return (1.0 + staleness) ** (-decay)
+
+
+def fedbuff(stacked: Pytree, ranks: jax.Array, p: jax.Array,
+            staleness: jax.Array | None = None, anchor: Pytree | None = None,
+            decay: float = 0.5) -> Pytree:
+    """Buffered-async merge of K stacked client adapters with per-delta
+    staleness discounting, composed with the paper's dimension-wise
+    reweighting (Eqs. 3-5).
+
+    Per dimension d the effective client weight is
+
+        ŵ_k^(d) = p~_k^(d) · (1+s_k)^-decay          (p~ = paper Eq. 4)
+
+    i.e. the *undiscounted* dimension-wise normalisation, then the discount —
+    so the weight mass a stale client forfeits is NOT renormalised over the
+    buffer but retained by the current global (``anchor``):
+
+        out^(d) = Σ_k ŵ_k^(d) A_k^(d) + (1 − Σ_k ŵ_k^(d)) · anchor^(d)
+
+    on dimensions covered by ≥1 buffered client; uncovered dimensions stay
+    zero exactly like :func:`fedilora`.  With ``staleness == 0`` every
+    discount is 1, Σ ŵ = 1 on covered dimensions, and the merge is *exactly*
+    :func:`fedilora` (tested).  ``anchor=None`` drops the residual term.
+
+    Uncovered-dimension semantics are a deliberate choice: zeroing matches
+    the synchronous counterpart in EVERY case (paper Eq. 4 zeroes dimensions
+    no sampled client covers, every round, at any sample rate), which is
+    what keeps the zero-staleness async timeline bitwise-equivalent to
+    ``fedilora``.  The flip side: a small merge batch (``buffer_size`` ≪ K)
+    containing only low-rank clients wipes the global's high dimensions
+    until a covering delta arrives — if that matters for a deployment,
+    size the buffer so merges span the rank distribution.
+    """
+    r_g = None
+    for entry in stacked.values():
+        r_g = entry["A"].shape[2]
+        break
+    assert r_g is not None, "empty LoRA tree"
+    pt = dimension_wise_weights(ranks, p, r_g)           # [K, r_g], Eq. 4
+    if staleness is None:
+        disc = jnp.ones((pt.shape[0],), pt.dtype)
+    else:
+        disc = staleness_discount(staleness.astype(pt.dtype), decay)
+    w = pt * disc[:, None]                               # [K, r_g]
+    covered = (jnp.sum(pt, axis=0) > 0).astype(pt.dtype)  # [r_g]
+    resid = covered * (1.0 - jnp.sum(w, axis=0))          # [r_g]
+
+    out = {}
+    for name, entry in stacked.items():
+        a, b = entry["A"], entry["B"]
+        wk = w.astype(a.dtype)
+        ga = jnp.einsum("kd,kldn->ldn", wk, a)
+        gb = jnp.einsum("kd,klmd->lmd", wk, b)
+        if anchor is not None:
+            r = resid.astype(a.dtype)
+            ga = ga + r[None, :, None] * anchor[name]["A"]
+            gb = gb + r[None, None, :] * anchor[name]["B"]
+        out[name] = {"A": ga, "B": gb}
+    return out
+
+
+def fedbuff_kernel(stacked: Pytree, ranks: jax.Array, p: jax.Array,
+                   staleness: jax.Array | None = None,
+                   anchor: Pytree | None = None, decay: float = 0.5) -> Pytree:
+    """Pallas path of :func:`fedbuff`: the staleness-scaled dimension-wise
+    reduction lowers to the ``dim_agg`` kernel (weights × per-client scale
+    fused in-kernel).  Numerically identical to :func:`fedbuff` (tested)."""
+    from repro.kernels.ops import fedbuff_aggregate_tree
+
+    return fedbuff_aggregate_tree(stacked, ranks, p, staleness, anchor,
+                                  decay=decay)
+
+
 def fedilora_kernel(stacked: Pytree, ranks: jax.Array, p: jax.Array) -> Pytree:
     """Pallas dimension-wise aggregation (repro/kernels/dim_agg.py) —
     numerically identical to :func:`fedilora` (tested); on TPU the per-leaf
@@ -181,28 +274,38 @@ def fedilora_kernel(stacked: Pytree, ranks: jax.Array, p: jax.Array) -> Pytree:
 # ---------------------------------------------------------------------------
 #
 # Every entry shares the normalised signature
-#     fn(stacked, ranks, p, *, hetlora_beta, lora_scale) -> (global_lora, base_delta)
+#     fn(stacked, ranks, p, *, hetlora_beta, lora_scale, staleness, anchor,
+#        staleness_decay) -> (global_lora, base_delta)
 # where exactly one of the outputs is non-None: LoRA-space strategies return
 # a new global adapter; FLoRA returns dense weight deltas for the caller to
 # fold into the base parameters (and re-initialise the global adapter).
+# The async keywords (staleness / anchor / staleness_decay) are consumed by
+# the fedbuff entries and ignored by the synchronous strategies.
 # Both the host-driven reference loop (repro/federated/runtime.py) and the
-# fused SPMD round (repro/launch/fedround.py) dispatch through here — there
-# is deliberately no other if/elif chain over aggregator names.
+# fused SPMD round + buffer merge (repro/launch/fedround.py) dispatch through
+# here — there is deliberately no other if/elif chain over aggregator names.
 
 AGGREGATORS: dict[str, Callable] = {
-    "fedavg": lambda s, r, p, *, hetlora_beta, lora_scale: (fedavg(s, r, p), None),
-    "hetlora": lambda s, r, p, *, hetlora_beta, lora_scale: (
+    "fedavg": lambda s, r, p, **kw: (fedavg(s, r, p), None),
+    "hetlora": lambda s, r, p, *, hetlora_beta=1.0, **kw: (
         hetlora(s, r, p, hetlora_beta), None),
-    "fedilora": lambda s, r, p, *, hetlora_beta, lora_scale: (fedilora(s, r, p), None),
-    "fedilora_kernel": lambda s, r, p, *, hetlora_beta, lora_scale: (
-        fedilora_kernel(s, r, p), None),
-    "flora": lambda s, r, p, *, hetlora_beta, lora_scale: (
+    "fedilora": lambda s, r, p, **kw: (fedilora(s, r, p), None),
+    "fedilora_kernel": lambda s, r, p, **kw: (fedilora_kernel(s, r, p), None),
+    "flora": lambda s, r, p, *, lora_scale=1.0, **kw: (
         None, flora_delta(s, r, p, lora_scale)),
+    "fedbuff": lambda s, r, p, *, staleness=None, anchor=None,
+    staleness_decay=0.5, **kw: (
+        fedbuff(s, r, p, staleness, anchor, staleness_decay), None),
+    "fedbuff_kernel": lambda s, r, p, *, staleness=None, anchor=None,
+    staleness_decay=0.5, **kw: (
+        fedbuff_kernel(s, r, p, staleness, anchor, staleness_decay), None),
 }
 
 
 def aggregate(name: str, stacked: Pytree, ranks: jax.Array, p: jax.Array, *,
-              hetlora_beta: float = 1.0, lora_scale: float = 1.0
+              hetlora_beta: float = 1.0, lora_scale: float = 1.0,
+              staleness: jax.Array | None = None, anchor: Pytree | None = None,
+              staleness_decay: float = 0.5
               ) -> tuple[Pytree | None, Pytree | None]:
     """Dispatch one server aggregation through :data:`AGGREGATORS`.
 
@@ -215,4 +318,6 @@ def aggregate(name: str, stacked: Pytree, ranks: jax.Array, p: jax.Array, *,
     except KeyError:
         raise ValueError(
             f"unknown aggregator {name!r}; have {sorted(AGGREGATORS)}") from None
-    return fn(stacked, ranks, p, hetlora_beta=hetlora_beta, lora_scale=lora_scale)
+    return fn(stacked, ranks, p, hetlora_beta=hetlora_beta,
+              lora_scale=lora_scale, staleness=staleness, anchor=anchor,
+              staleness_decay=staleness_decay)

@@ -16,13 +16,24 @@ class FederatedConfig:
     local_steps: int = 10
     batch_size: int = 8
     aggregator: str = "fedilora"             # fedavg | hetlora | flora |
-    #                                          fedilora | fedilora_kernel
+    #                                          fedilora | fedilora_kernel |
+    #                                          fedbuff | fedbuff_kernel
     edit: EditConfig = dataclasses.field(default_factory=EditConfig)
     lora_alpha: float = 16.0
     missing_ratio: float = 0.0
     seed: int = 0
     hetlora_beta: float = 1.0
     hetlora_prune_gamma: float = 0.0         # >0 enables rank self-pruning
+    # ---- buffered asynchronous FL (run_round_async, FedBuff-style) --------
+    buffer_size: int = 0                     # client deltas per server merge
+    #                                          (M); 0 → one sampled cohort
+    staleness_decay: float = 0.5             # (1+s)^-decay discount exponent
+    # simulated rounds-to-finish per client (len == num_clients); () = all 0,
+    # i.e. every cohort retires the tick it was dispatched.  Slow clients
+    # keep training against the global they were handed — their deltas arrive
+    # late and stale, and the fedbuff merge discounts them instead of the
+    # round stalling (the paper's heterogeneous-client setting).
+    async_delays: tuple = ()
 
     @property
     def global_rank(self) -> int:

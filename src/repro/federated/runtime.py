@@ -45,10 +45,60 @@ by ``benchmarks/bench_fedround.py``.  Evaluation decode
 (``generation_scores``) is KV-cached O(T) via
 ``repro.launch.steps.make_greedy_generate``; pass ``cached=False`` for the
 O(T²) full-re-forward-per-token reference.
+
+Async pipeline (execution model)
+--------------------------------
+
+``run_round`` is synchronous at the *timeline* level: it dispatches round t
+and immediately blocks on that round's deferred metrics fetch, so the host
+work of round t+1 (client sampling, per-client batch-index builds, dispatch)
+only starts after the device finishes round t.  Two async drivers remove
+that barrier:
+
+* ``run_round_pipelined`` — double-buffers the engine.  Each call performs
+  round t+1's host-side sampling + batch-index build while round t still
+  executes on device, fetches round t's metrics (blocking only on t, whose
+  execution the host work just overlapped — never on the round about to be
+  dispatched), then *enqueues* round t+1 (JAX dispatch is asynchronous).
+  WHAT IS OVERLAPPED: host sampling/index-build of round t+1 with
+  device execution of round t.  WHAT IS ONE ROUND STALE: everything the
+  host reads — the returned record (losses, edited layers) and the
+  ``client_ranks`` host mirror describe round t when round t+1 is already
+  in flight; the first call returns ``None``.  Device-side state
+  (``stacked_lora``, ``global_lora``, ``ranks``) is always current — only
+  *fetches* lag, never the computation.  ``flush_rounds()`` drains the last
+  pending fetch (call it before reading final metrics or mixing drivers;
+  ``run_round`` auto-flushes).
+* ``run_round_async`` — buffered asynchronous FL (FedBuff-style) on top of
+  the same stacked state: each tick dispatches a ``client_update_step``
+  cohort against the *current* global (no aggregation), retires cohorts
+  whose simulated delay (``FederatedConfig.async_delays``) has elapsed into
+  a device-resident buffer of per-client deltas, and merges exactly
+  ``buffer_size`` (M) deltas through the ``fedbuff`` registry entry whenever
+  the buffer fills — slow clients never stall fast ones; their late deltas
+  arrive with staleness = (server versions elapsed) and are discounted
+  ``(1+s)^-staleness_decay``, with the forfeited weight mass staying on the
+  current global.  With zero delays and ``M = n_sample`` every tick is
+  dispatch → retire → merge and the timeline is *exactly* the synchronous
+  ``fedilora`` round (tested).
+
+``dispatch_count`` (a ``collections.Counter``) tallies every jitted dispatch
+by name (``round_step``, ``client_update``, ``buffer_merge``,
+``population_eval``, ``eval_loss``, ``generate``) — the benchmark's
+``--quick`` mode and the tier-2 smoke test assert on it to catch dispatch-
+count regressions without timing flakiness.
+
+``evaluate_personalized`` runs the whole K-client sweep as ONE jitted
+dispatch by default (``vmapped=True``): eval loss and the KV-cached greedy
+decode are vmapped over the stacked ``[K, ...]`` adapter state
+(``repro.launch.steps.make_population_eval``), replacing the ~2K-dispatch
+per-client host loop (kept as ``vmapped=False`` — the reference and the
+benchmark baseline).
 """
 
 from __future__ import annotations
 
+import collections
 import dataclasses
 import warnings
 from typing import Any
@@ -63,8 +113,10 @@ from repro.core.lora import (LoRAConfig, init_lora_params, mask_lora_params,
                              truncate_redistribute)
 from repro.data.synthetic import EOS
 from repro.federated.config import FederatedConfig
-from repro.launch.fedround import apply_weight_deltas, make_round_engine
-from repro.launch.steps import make_greedy_generate
+from repro.launch.fedround import (apply_weight_deltas,
+                                   make_buffer_merge_step,
+                                   make_client_update_step, make_round_engine)
+from repro.launch.steps import make_greedy_generate, make_population_eval
 from repro.metrics import corpus_scores
 from repro.models import transformer as T
 from repro.models.config import ModelConfig
@@ -76,6 +128,46 @@ Pytree = Any
 # ids, stays on the host)
 _BATCH_KEYS = ("tokens", "labels", "loss_mask", "image", "image_mask",
                "audio", "text_mask")
+
+# keys an evaluation batch may carry (loss + generation)
+_EVAL_KEYS = ("tokens", "labels", "loss_mask", "image", "audio")
+
+
+def _mask_decode_bounds(loss_mask: np.ndarray) -> tuple[int, int]:
+    """Derive the shared greedy-decode window (``cap_start``, ``gen_len``)
+    from a supervised-position mask, asserting the mask is uniform across
+    rows.  The decode compiles ONE static window for the whole batch; a
+    non-uniform mask (rows whose caption starts elsewhere) would silently
+    generate at the wrong positions, so fail loudly instead."""
+    lm = np.asarray(loss_mask) > 0
+    if lm.ndim != 2:
+        raise ValueError(f"loss_mask must be [rows, seq], got {lm.shape}")
+    if not (lm == lm[0]).all():
+        bad = int(np.argmax((lm != lm[0]).any(axis=1)))
+        raise ValueError(
+            "loss_mask is not uniform across rows (first mismatch at row "
+            f"{bad}): greedy decode derives one static (cap_start, gen_len) "
+            "window from row 0 and would silently mis-decode rows with a "
+            "different supervised span.  Evaluate such corpora per-row or "
+            "regenerate them with a shared caption position (the synthetic "
+            "corpora are uniform by construction).")
+    cap_start = int(np.argmax(lm[0]))
+    gen_len = int(lm[0].sum())
+    return cap_start, gen_len
+
+
+def _score_generated(gen: np.ndarray, labels: np.ndarray,
+                     loss_mask: np.ndarray) -> dict:
+    """Token-id generations → Google-BLEU / ROUGE-LSum (EOS-truncated)."""
+    hyps, refs = [], []
+    for i in range(gen.shape[0]):
+        h = np.asarray(gen)[i].tolist()
+        r = np.asarray(labels)[i][np.asarray(loss_mask)[i] > 0].tolist()
+        h = h[: h.index(EOS)] if EOS in h else h
+        r = [x for x in r if x != EOS]
+        hyps.append(h)
+        refs.append(r)
+    return corpus_scores(hyps, refs)
 
 
 @dataclasses.dataclass
@@ -178,10 +270,24 @@ class FederatedTrainer:
         self._round_step = None        # fused engine, built on first round
         self._local_train = None       # reference per-client jit, lazy
         self._gen_cache: dict = {}     # jitted cached-decode fns per shape
+        self._pop_eval_cache: dict = {}  # jitted population sweeps per shape
         self._eval_loss = jax.jit(self._eval_loss_impl)
         self._next_logits = jax.jit(self._next_logits_impl)
         self.rng = np.random.default_rng(seed)
         self.history: list[dict] = []
+        # every jitted dispatch is tallied here by name — the benchmark's
+        # --quick mode and the tier-2 smoke test assert on these counts
+        self.dispatch_count: collections.Counter = collections.Counter()
+        # ---- pipelined rounds: the in-flight (round, sampled, out) whose
+        # metrics have not been fetched yet (one round of lag by design)
+        self._pending: tuple | None = None
+        # ---- buffered async (fedbuff) state ------------------------------
+        self._client_update_step = None
+        self._merge_step = None
+        self._inflight: list[dict] = []   # dispatched cohorts not yet retired
+        self._buffer: list[dict] = []     # retired per-client deltas (device)
+        self._async_tick = 0
+        self._global_version = 0          # server merges applied so far
 
     # ------------------------------------------------------------------ local
     def _local_train_impl(self, base_params, lora, rank, batches):
@@ -260,17 +366,31 @@ class FederatedTrainer:
             self._round_step = jax.jit(step, donate_argnums=donate)
         return self._round_step
 
-    def run_round(self) -> dict:
-        """One communication round = ONE fused jit dispatch (see module
-        docstring).  Exactly one host sync: the deferred metrics fetch."""
+    def _dispatch(self, name: str, fn, *args):
+        """Invoke a jitted callable, tallying it in ``dispatch_count``."""
+        self.dispatch_count[name] += 1
+        return fn(*args)
+
+    def _build_round_inputs(self) -> tuple[list[int], np.ndarray]:
+        """Host-side client sampling + per-client batch-index build — pure
+        host work, free to overlap the device execution of an in-flight
+        round."""
         sampled = self._sample_clients()
         batch_idx = np.stack([self._batch_indices(self.clients[k])
                               for k in sampled])
+        return sampled, batch_idx
+
+    def _enqueue_round(self, sampled: list[int],
+                       batch_idx: np.ndarray) -> dict:
+        """ENQUEUE the fused round dispatch (no host sync — JAX dispatch is
+        async) and swap device state references to the new (in-flight)
+        buffers."""
         with warnings.catch_warnings():
             # donation is a no-op off TPU/GPU; silence only this dispatch
             warnings.filterwarnings(
                 "ignore", message="Some donated buffers were not usable")
-            out = self._get_round_step()(
+            out = self._dispatch(
+                "round_step", self._get_round_step(),
                 self.base_params, self.stacked_lora, self.server.global_lora,
                 self.server.prev_global, self._ranks_dev, self._sizes_dev,
                 self._stacked_data, jnp.asarray(sampled, jnp.int32),
@@ -283,15 +403,188 @@ class FederatedTrainer:
         if "base_params" in out:           # flora folded deltas into base
             self.base_params = out["base_params"]
         self.server.round += 1
-        # ---- ONE deferred fetch for everything the host needs ------------
+        return out
+
+    def _fetch_round_record(self, round_no: int, sampled: list[int],
+                            out: dict) -> dict:
+        """The one blocking host sync per round: metrics + post-prune ranks."""
         fetched = jax.device_get({"metrics": out["metrics"],
                                   "ranks": out["ranks"]})
         self.client_ranks = np.asarray(fetched["ranks"])
         edited = fetched["metrics"].get("edited")
-        rec = {"round": self.server.round, "sampled": list(map(int, sampled)),
+        rec = {"round": round_no, "sampled": list(map(int, sampled)),
                "train_loss": float(np.mean(fetched["metrics"]["last_loss"])),
                "edited_layers": [] if edited is None
                else [int(e) for e in edited]}
+        self.history.append(rec)
+        return rec
+
+    def run_round(self) -> dict:
+        """One communication round = ONE fused jit dispatch (see module
+        docstring).  Exactly one host sync: the deferred metrics fetch."""
+        self.flush_rounds()                # drain any pipelined round first
+        sampled, batch_idx = self._build_round_inputs()
+        out = self._enqueue_round(sampled, batch_idx)
+        return self._fetch_round_record(self.server.round, sampled, out)
+
+    def run_round_pipelined(self) -> dict | None:
+        """Pipelined round: build round t's host inputs (sampling + batch
+        indices — this is the work that overlaps round t-1's device
+        execution), drain round t-1's metrics fetch, then enqueue round t.
+        The returned record is one round stale by design (``None`` on the
+        first call; ``flush_rounds()`` drains the last one).  The fetch
+        never blocks on the round dispatched in the same call — only on the
+        previous one, which the host work just overlapped.  See the module
+        docstring."""
+        sampled, batch_idx = self._build_round_inputs()
+        rec = self.flush_rounds()
+        out = self._enqueue_round(sampled, batch_idx)
+        self._pending = (self.server.round, sampled, out)
+        return rec
+
+    def flush_rounds(self) -> dict | None:
+        """Drain the pending pipelined metrics fetch (no-op when none)."""
+        rec = None
+        if self._pending is not None:
+            rec = self._fetch_round_record(*self._pending)
+            self._pending = None
+        return rec
+
+    # ------------------------------------------------------------- async/buff
+    def _get_client_update_step(self):
+        if self._client_update_step is None:
+            fc = self.fcfg
+            step = make_client_update_step(
+                self.mcfg, self.ocfg, lora_scale=self.lora_scale,
+                r_g=self.lcfg.rank, edit=fc.edit, aggregator=fc.aggregator,
+                hetlora_prune_gamma=fc.hetlora_prune_gamma,
+                mesh=self.client_mesh, n_sample=self._n_sample)
+            # donate the stacked adapters + ranks (scattered in-place);
+            # global/prev_global stay live for later in-flight cohorts
+            self._client_update_step = jax.jit(step, donate_argnums=(1, 4))
+        return self._client_update_step
+
+    def _get_merge_step(self):
+        if self._merge_step is None:
+            fc = self.fcfg
+            step = make_buffer_merge_step(
+                aggregator=fc.aggregator,
+                staleness_decay=fc.staleness_decay,
+                hetlora_beta=fc.hetlora_beta, lora_scale=self.lora_scale)
+            self._merge_step = jax.jit(step)
+        return self._merge_step
+
+    def run_round_async(self) -> dict:
+        """One tick of the buffered asynchronous (FedBuff-style) timeline:
+
+        1. dispatch a fresh cohort of ``n_sample`` idle clients against the
+           CURRENT global (tagged with the server version it saw);
+        2. retire in-flight cohorts whose simulated delay
+           (``FederatedConfig.async_delays``) has elapsed into the delta
+           buffer — per client, as device-resident rows of the cohort's
+           stacked update (no host round-trip);
+        3. whenever ≥ M (= ``buffer_size`` or ``n_sample``) deltas are
+           buffered, merge the M oldest through the ``fedbuff`` registry
+           entry with per-delta staleness = current version − dispatch
+           version, bumping the server version.
+
+        With all delays 0 and M = n_sample this reduces tick-for-tick to the
+        synchronous ``fedilora`` round (tested)."""
+        fc = self.fcfg
+        if fc.aggregator not in ("fedbuff", "fedbuff_kernel"):
+            raise ValueError(
+                f"run_round_async needs aggregator 'fedbuff' or "
+                f"'fedbuff_kernel', got {fc.aggregator!r} (synchronous "
+                "strategies cannot weight stale deltas)")
+        delays = fc.async_delays or (0,) * fc.num_clients
+        if len(delays) != fc.num_clients:
+            raise ValueError(
+                f"async_delays has {len(delays)} entries for "
+                f"{fc.num_clients} clients")
+        # drain a pending pipelined round before donating its buffers into
+        # the client-update dispatch (same guard as run_round)
+        self.flush_rounds()
+        tick = self._async_tick
+        n_s = self._n_sample
+        rec: dict = {"tick": tick, "sampled": [], "merges": 0,
+                     "staleness": [], "version": self._global_version}
+
+        # ---- 1. dispatch a new cohort of idle clients --------------------
+        busy = {e["client"] for e in self._inflight}
+        avail = [k for k in range(fc.num_clients) if k not in busy]
+        if len(avail) >= n_s:
+            sampled = sorted(self.rng.choice(np.asarray(avail), n_s,
+                                             replace=False))
+            batch_idx = np.stack([self._batch_indices(self.clients[k])
+                                  for k in sampled])
+            out = self._dispatch(
+                "client_update", self._get_client_update_step(),
+                self.base_params, self.stacked_lora, self.server.global_lora,
+                self.server.prev_global, self._ranks_dev, self._sizes_dev,
+                self._stacked_data, jnp.asarray(sampled, jnp.int32),
+                jnp.asarray(batch_idx, jnp.int32))
+            self.stacked_lora = out["stacked_lora"]
+            self._ranks_dev = out["ranks"]
+            # the buffer holds (cohort, row) references — hold only the
+            # update halves so superseded stacked_lora buffers can free
+            cohort = {"update": out["update"], "ranks": out["update_ranks"],
+                      "sizes": out["update_sizes"],
+                      "loss": out["metrics"]["last_loss"]}
+            for i, k in enumerate(sampled):
+                self._inflight.append({
+                    "client": int(k), "row": i, "cohort": cohort,
+                    "version": self._global_version,
+                    "finish": tick + int(delays[k])})
+            rec["sampled"] = list(map(int, sampled))
+
+        # ---- 2. retire finished deltas into the buffer (arrival order) ---
+        done = [e for e in self._inflight if e["finish"] <= tick]
+        self._inflight = [e for e in self._inflight if e["finish"] > tick]
+        self._buffer.extend(done)
+
+        # ---- 3. merge M-delta batches through the fedbuff registry -------
+        M = fc.buffer_size or n_s
+        merged_losses = []
+        while len(self._buffer) >= M:
+            batch, self._buffer = self._buffer[:M], self._buffer[M:]
+            c0 = batch[0]["cohort"]
+            if (M == int(c0["ranks"].shape[0])
+                    and all(b["cohort"] is c0 for b in batch)
+                    and [b["row"] for b in batch] == list(range(M))):
+                # common case (zero delays, M = cohort): the WHOLE cohort's
+                # stacked update passes through unsliced
+                stacked, ranks_b, sizes_b = (c0["update"], c0["ranks"],
+                                             c0["sizes"])
+            else:                           # mixed cohorts: gather rows
+                stacked = jax.tree_util.tree_map(
+                    lambda *xs: jnp.stack(xs),
+                    *[jax.tree_util.tree_map(lambda x, i=b["row"]: x[i],
+                                             b["cohort"]["update"])
+                      for b in batch])
+                ranks_b = jnp.stack([b["cohort"]["ranks"][b["row"]]
+                                     for b in batch])
+                sizes_b = jnp.stack([b["cohort"]["sizes"][b["row"]]
+                                     for b in batch])
+            stal = np.asarray([self._global_version - b["version"]
+                               for b in batch], np.float32)
+            mo = self._dispatch(
+                "buffer_merge", self._get_merge_step(), stacked, ranks_b,
+                sizes_b, jnp.asarray(stal), self.server.global_lora)
+            self.server.prev_global = mo["prev_global"]
+            self.server.global_lora = mo["global_lora"]
+            self._global_version += 1
+            self.server.round += 1
+            rec["merges"] += 1
+            rec["staleness"].extend(float(s) for s in stal)
+            merged_losses.extend(b["cohort"]["loss"][b["row"]]
+                                 for b in batch)
+        if merged_losses:
+            fetched = jax.device_get({"losses": merged_losses,
+                                      "ranks": self._ranks_dev})
+            self.client_ranks = np.asarray(fetched["ranks"])
+            rec["train_loss"] = float(np.mean(fetched["losses"]))
+        rec["buffer_fill"] = len(self._buffer)
+        self._async_tick += 1
         self.history.append(rec)
         return rec
 
@@ -391,28 +684,123 @@ class FederatedTrainer:
         return sl
 
     def evaluate_global(self, generate: bool = True, n: int = 32) -> dict:
-        m = self._eval_loss(self.base_params, self.server.global_lora,
-                            self._eval_batch(self.global_test))
+        m = self._dispatch("eval_loss", self._eval_loss, self.base_params,
+                           self.server.global_lora,
+                           self._eval_batch(self.global_test))
         out = {"loss": float(m["loss"]), "acc": float(m["acc"])}
         if generate:
             out.update(self.generation_scores(self.server.global_lora,
                                               self.global_test, n))
         return out
 
-    def evaluate_personalized(self, generate: bool = True, n: int = 16) -> dict:
-        """Size-weighted average of client-local performance (paper Sec. 2.2)."""
-        accs, losses, bleus, rsums, w = [], [], [], [], []
-        for c in self.clients:
-            lora_k = c.lora            # one gather from the stacked state
-            m = self._eval_loss(self.base_params, lora_k, self._eval_batch(c.eval_data))
-            losses.append(float(m["loss"]));  accs.append(float(m["acc"]))
+    def evaluate_personalized(self, generate: bool = True, n: int = 16,
+                              loss_n: int = 64, vmapped: bool = True) -> dict:
+        """Size-weighted average of client-local performance (paper Sec. 2.2).
+
+        ``vmapped=True`` (default): the whole K-client sweep — eval loss AND
+        KV-cached greedy decode on every client's personalized adapter — is
+        ONE jitted dispatch, vmapped over the persistent stacked ``[K, ...]``
+        state.  ``vmapped=False`` keeps the per-client host loop (~2
+        dispatches per client) as the numerical reference and benchmark
+        baseline.  Per-client row counts match the loop exactly: client k
+        contributes ``min(loss_n, |shard_k|)`` loss rows and
+        ``min(n, |shard_k|)`` generation rows; shorter shards are
+        zero-padded in the rectangular stack, which is exact because the
+        loss/acc are loss_mask-normalised (padded rows carry zero mask) and
+        padded generation rows are sliced off before scoring."""
+        w = np.asarray([c.size for c in self.clients], np.float64)
+        w = w / w.sum()
+
+        if not vmapped:
+            accs, losses, bleus, rsums = [], [], [], []
+            for c in self.clients:
+                lora_k = c.lora        # one gather from the stacked state
+                m = self._dispatch("eval_loss", self._eval_loss,
+                                   self.base_params, lora_k,
+                                   self._eval_batch(c.eval_data, loss_n))
+                losses.append(float(m["loss"]));  accs.append(float(m["acc"]))
+                if generate:
+                    g = self.generation_scores(lora_k, c.eval_data, n)
+                    bleus.append(g["bleu"]);  rsums.append(g["rsum"])
+            out = {"loss": float(np.dot(w, losses)),
+                   "acc": float(np.dot(w, accs))}
             if generate:
-                g = self.generation_scores(lora_k, c.eval_data, n)
-                bleus.append(g["bleu"]);  rsums.append(g["rsum"])
-            w.append(c.size)
-        w = np.asarray(w, np.float64);  w = w / w.sum()
-        out = {"loss": float(np.dot(w, losses)), "acc": float(np.dot(w, accs))}
+                out["bleu"] = float(np.dot(w, bleus))
+                out["rsum"] = float(np.dot(w, rsums))
+            return out
+
+        # ---- one-dispatch population sweep over the stacked client axis --
+        shard_rows = [c.eval_data["tokens"].shape[0] for c in self.clients]
+        rows = min(max(n, loss_n), max(shard_rows))
+        keys = [k for k in _EVAL_KEYS
+                if all(k in c.eval_data for c in self.clients)]
+        partial = [k for k in _EVAL_KEYS
+                   if k not in keys and any(k in c.eval_data
+                                            for c in self.clients)]
+        if partial:
+            raise ValueError(
+                f"eval batch keys {partial} present in only some client "
+                "shards; the stacked population eval needs uniform keys — "
+                "add the key to every client or use vmapped=False")
+
+        def _pad(x):
+            # zero rows past a short shard: zero loss_mask ⇒ no metric
+            # weight; padded generation rows are sliced off when scoring
+            x = np.asarray(x)[:rows]
+            if x.shape[0] < rows:
+                x = np.pad(x, [(0, rows - x.shape[0])]
+                           + [(0, 0)] * (x.ndim - 1))
+            return x
+
+        batch = {k: jnp.stack([jnp.asarray(_pad(c.eval_data[k]))
+                               for c in self.clients]) for k in keys}
+        gen_rows = [min(n, r) for r in shard_rows]
+        cap_start = gen_len = None
         if generate:
+            lm = np.concatenate(
+                [np.asarray(c.eval_data["loss_mask"])[:gen_rows[k]]
+                 for k, c in enumerate(self.clients)])
+            # uniformity across ALL clients' real rows: one static window
+            cap_start, gen_len = _mask_decode_bounds(lm)
+        # shard the client axis over the client mesh when one is configured —
+        # the K personalized evals then run device-parallel inside the single
+        # dispatch (the per-client loop has no analogue of this)
+        stacked = self.stacked_lora
+        mesh = self.client_mesh
+        sharded = (mesh is not None and len(mesh.axis_names) == 1
+                   and len(self.clients) % mesh.devices.size == 0)
+        if mesh is not None and not sharded:
+            warnings.warn(
+                f"client mesh {mesh} unusable for the population eval (need "
+                f"a 1-D mesh whose size divides K={len(self.clients)}); "
+                "running unsharded", stacklevel=2)
+        if sharded:
+            from jax.sharding import NamedSharding, PartitionSpec
+            spec = NamedSharding(mesh, PartitionSpec(mesh.axis_names[0]))
+            batch = jax.device_put(batch, spec)
+            stacked = jax.device_put(stacked, spec)
+        key = (len(self.clients), rows, loss_n, n, cap_start, gen_len,
+               "image" in keys, sharded)
+        fn = self._pop_eval_cache.get(key)
+        if fn is None:
+            fn = jax.jit(make_population_eval(
+                self.mcfg, lora_scale=self.lora_scale, cap_start=cap_start,
+                gen_len=gen_len, loss_rows=min(loss_n, rows),
+                gen_rows=min(n, rows), generate=generate))
+            self._pop_eval_cache[key] = fn
+        fetched = jax.device_get(self._dispatch(
+            "population_eval", fn, self.base_params, stacked, batch))
+        out = {"loss": float(np.dot(w, fetched["loss"])),
+               "acc": float(np.dot(w, fetched["acc"]))}
+        if generate:
+            bleus, rsums = [], []
+            for k, c in enumerate(self.clients):
+                nk = gen_rows[k]           # drop padded generation rows
+                sc = _score_generated(
+                    fetched["gen"][k][:nk],
+                    np.asarray(c.eval_data["labels"][:nk]),
+                    np.asarray(c.eval_data["loss_mask"][:nk]))
+                bleus.append(sc["bleu"]);  rsums.append(sc["rsum"])
             out["bleu"] = float(np.dot(w, bleus))
             out["rsum"] = float(np.dot(w, rsums))
         return out
@@ -429,7 +817,8 @@ class FederatedTrainer:
                 cap_start=cap_start, gen_len=gen_len))
             self._gen_cache[key] = fn
         toks = jnp.asarray(tokens[:, : cap_start + 1])
-        return np.asarray(fn(self.base_params, lora, toks, image))
+        return np.asarray(self._dispatch("generate", fn, self.base_params,
+                                         lora, toks, image))
 
     def generation_scores(self, lora, data: dict, n: int = 32,
                           cached: bool = True) -> dict:
@@ -441,9 +830,9 @@ class FederatedTrainer:
         labels = np.asarray(data["labels"][:n])
         loss_mask = np.asarray(data["loss_mask"][:n])
         image = jnp.asarray(data["image"][:n]) if "image" in data else None
-        # prompt = everything before the first supervised position
-        cap_start = int(np.argmax(loss_mask[0] > 0))  # position of SEP logits
-        gen_len = int(loss_mask[0].sum())
+        # prompt = everything before the first supervised position; the
+        # window must be shared by every row (asserted, decode is static)
+        cap_start, gen_len = _mask_decode_bounds(loss_mask)
 
         if cached:
             gen = self._generate_cached(lora, tokens, image, cap_start, gen_len)
@@ -453,16 +842,10 @@ class FederatedTrainer:
             toks = jnp.asarray(toks)
             for t in range(gen_len):
                 pos = jnp.asarray(cap_start + t)
-                lg = self._next_logits(self.base_params, toks, lora, pos, image)
+                lg = self._dispatch("next_logits", self._next_logits,
+                                    self.base_params, toks, lora, pos, image)
                 nxt = jnp.argmax(lg, -1)
                 toks = toks.at[:, cap_start + 1 + t].set(nxt.astype(toks.dtype))
             gen = np.asarray(toks)[:, cap_start + 1: cap_start + 1 + gen_len]
 
-        hyps, refs = [], []
-        for i in range(gen.shape[0]):
-            h = gen[i].tolist()
-            r = labels[i][loss_mask[i] > 0].tolist()
-            h = h[: h.index(EOS)] if EOS in h else h
-            r = [x for x in r if x != EOS]
-            hyps.append(h);  refs.append(r)
-        return corpus_scores(hyps, refs)
+        return _score_generated(gen, labels, loss_mask)

@@ -14,6 +14,12 @@ FedAvg-family servers run every communication round, fused.
 
 The same kernel aggregates B matrices by passing them transposed to
 [K, L, r_g, m] layout (ops.py handles the transpose).
+
+An optional per-client ``scale`` [K, 1] operand multiplies the weight row of
+each client inside the kernel — the FedBuff staleness discount
+``(1+s_k)^-decay`` rides the same VMEM-resident reduction instead of
+materialising a staleness-scaled [K, r_g] weight matrix in HBM first
+(ops.py's ``fedbuff_aggregate_tree`` is the caller).
 """
 
 from __future__ import annotations
@@ -33,22 +39,40 @@ def _kernel(x_ref, w_ref, o_ref):
     o_ref[...] = acc.astype(o_ref.dtype)
 
 
+def _kernel_scaled(x_ref, w_ref, s_ref, o_ref):
+    x = x_ref[...]                    # [K, 1, r, bn]
+    w = w_ref[...].astype(jnp.float32) * s_ref[...].astype(jnp.float32)
+    acc = jnp.sum(x.astype(jnp.float32) * w[:, None, :, None], axis=0)
+    o_ref[...] = acc.astype(o_ref.dtype)
+
+
 @functools.partial(jax.jit, static_argnames=("bn", "interpret"))
-def dim_agg_pallas(stacked, weights, *, bn: int = 512, interpret: bool = False):
-    """stacked: [K, L, r, n]; weights: [K, r] → [L, r, n]."""
+def dim_agg_pallas(stacked, weights, scale=None, *, bn: int = 512,
+                   interpret: bool = False):
+    """stacked: [K, L, r, n]; weights: [K, r]; scale: optional [K, 1]
+    per-client multiplier (FedBuff staleness discount) → [L, r, n]."""
     K, L, r, n = stacked.shape
     assert weights.shape == (K, r), (stacked.shape, weights.shape)
     bn = min(bn, n)
     assert n % bn == 0, (n, bn)
 
+    in_specs = [
+        pl.BlockSpec((K, 1, r, bn), lambda l, j: (0, l, 0, j)),
+        pl.BlockSpec((K, r), lambda l, j: (0, 0)),
+    ]
+    operands = (stacked, weights)
+    kernel = _kernel
+    if scale is not None:
+        assert scale.shape == (K, 1), scale.shape
+        in_specs.append(pl.BlockSpec((K, 1), lambda l, j: (0, 0)))
+        operands = operands + (scale,)
+        kernel = _kernel_scaled
+
     return pl.pallas_call(
-        _kernel,
+        kernel,
         grid=(L, n // bn),
-        in_specs=[
-            pl.BlockSpec((K, 1, r, bn), lambda l, j: (0, l, 0, j)),
-            pl.BlockSpec((K, r), lambda l, j: (0, 0)),
-        ],
+        in_specs=in_specs,
         out_specs=pl.BlockSpec((1, r, bn), lambda l, j: (l, 0, j)),
         out_shape=jax.ShapeDtypeStruct((L, r, n), stacked.dtype),
         interpret=interpret,
-    )(stacked, weights)
+    )(*operands)

@@ -50,15 +50,19 @@ def fused_lora_matmul(x, w, a, b, *, scale: float = 1.0, bm: int = 256,
     return y[:M, :N].reshape(*lead, N)
 
 
-def dimension_wise_aggregate(stacked, weights, *, bn: int = 512,
+def dimension_wise_aggregate(stacked, weights, scale=None, *, bn: int = 512,
                              interpret: bool | None = None):
-    """FediLoRA Eq. 5 over one stacked leaf [K, L, r, n] with w̃ [K, r]."""
+    """FediLoRA Eq. 5 over one stacked leaf [K, L, r, n] with w̃ [K, r];
+    ``scale`` [K] optionally multiplies each client's weight row in-kernel
+    (the FedBuff staleness discount)."""
     if interpret is None:
         interpret = not _on_tpu()
     n = stacked.shape[-1]
     bn_ = min(bn, n)
     sp = _pad_to(stacked, 3, bn_)
-    out = dim_agg_pallas(sp, weights, bn=bn_, interpret=interpret)
+    if scale is not None:
+        scale = scale.reshape(-1, 1).astype(weights.dtype)
+    out = dim_agg_pallas(sp, weights, scale, bn=bn_, interpret=interpret)
     return out[..., :n]
 
 
@@ -76,6 +80,41 @@ def fedilora_aggregate_tree(stacked_tree, ranks, p, *, interpret: bool | None = 
         bt = jnp.swapaxes(entry["B"], -1, -2)     # [K, L, r, m]
         b = dimension_wise_aggregate(bt, w, interpret=interpret)
         out[name] = {"A": a, "B": jnp.swapaxes(b, -1, -2)}
+    return out
+
+
+def fedbuff_aggregate_tree(stacked_tree, ranks, p, staleness=None, anchor=None,
+                           *, decay: float = 0.5,
+                           interpret: bool | None = None):
+    """Kernel-backed FedBuff merge over a stacked LoRA pytree — drop-in for
+    ``repro.core.aggregation.fedbuff``: the staleness-discounted
+    dimension-wise reduction runs in the ``dim_agg`` kernel (discount fused
+    as the per-client ``scale`` operand); the residual anchor blend
+    ``(1 - Σ_k ŵ_k^(d)) · anchor`` is a cheap [r_g]-vector epilogue."""
+    from repro.core.aggregation import (dimension_wise_weights,
+                                        staleness_discount)
+
+    first = next(iter(stacked_tree.values()))
+    r_g = first["A"].shape[2]
+    w = dimension_wise_weights(ranks, p, r_g)                 # [K, r_g]
+    if staleness is None:
+        disc = jnp.ones((w.shape[0],), w.dtype)
+    else:
+        disc = staleness_discount(staleness.astype(w.dtype), decay)
+    covered = (jnp.sum(w, axis=0) > 0).astype(w.dtype)        # [r_g]
+    resid = covered * (1.0 - jnp.sum(w * disc[:, None], axis=0))
+
+    out = {}
+    for name, entry in stacked_tree.items():
+        a = dimension_wise_aggregate(entry["A"], w, disc, interpret=interpret)
+        bt = jnp.swapaxes(entry["B"], -1, -2)                 # [K, L, r, m]
+        b = dimension_wise_aggregate(bt, w, disc, interpret=interpret)
+        b = jnp.swapaxes(b, -1, -2)
+        if anchor is not None:
+            r = resid.astype(a.dtype)
+            a = a + r[None, :, None] * anchor[name]["A"]
+            b = b + r[None, None, :] * anchor[name]["B"]
+        out[name] = {"A": a, "B": b}
     return out
 
 
@@ -111,4 +150,5 @@ def flash_attention(q, k, v, *, causal: bool = True, window: int = 0,
 
 
 __all__ = ["fused_lora_matmul", "dimension_wise_aggregate",
-           "fedilora_aggregate_tree", "flash_attention", "ref"]
+           "fedilora_aggregate_tree", "fedbuff_aggregate_tree",
+           "flash_attention", "ref"]

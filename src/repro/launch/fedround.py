@@ -48,6 +48,28 @@ just a dry-run lowering target.  Differences from the plain
 The host-driven loop survives as
 ``FederatedTrainer.run_round_reference`` — the numerical reference and the
 sequential baseline that ``benchmarks/bench_fedround.py`` measures against.
+
+Async / buffered engines
+------------------------
+
+Two further step builders decompose the fused round for the buffered
+asynchronous (FedBuff-style) timeline driven by
+``FederatedTrainer.run_round_async``:
+
+* :func:`make_client_update_step` — the client half of ``round_step``
+  (redistribute → gather batches → train/prune/edit → scatter back), WITHOUT
+  server aggregation; it returns the sampled cohort's stacked update so the
+  server can buffer it.  Each dispatch snapshots the global it trained
+  against via its ``round_idx``/version tag on the host.
+* :func:`make_buffer_merge_step` — the server half: merge a device-resident
+  buffer of exactly ``M`` client deltas (stacked ``[M, ...]`` with ranks,
+  sizes and per-delta staleness) into the current global through the
+  ``fedbuff`` registry entry; the input global passes through as the new
+  ``prev_global`` snapshot, exactly like the fused round.
+
+Both halves share :func:`_make_client_phases` with ``make_round_engine`` —
+the vmapped train → prune → edit pipeline (and its optional ``shard_map``
+client-axis parallelism) is built once and reused.
 """
 
 from __future__ import annotations
@@ -122,6 +144,52 @@ def _vmapped_edit(lora, ranks, prev_global, edit: EditConfig, r_g: int):
     return jax.vmap(_edit_one)(lora, ranks)
 
 
+def _make_client_phases(cfg: ModelConfig, opt_cfg: OptimizerConfig, *,
+                        lora_scale: float, r_g: int, edit: EditConfig,
+                        edit_active: bool, prune_active: bool,
+                        hetlora_prune_gamma: float,
+                        mesh=None, n_sample: int | None = None) -> Callable:
+    """Build the per-client half shared by the fused round and the async
+    client-update step: ``(base_params, prev_global, lora0, ranks_s,
+    batches) -> (lora1, ranks_s, metrics)``, vmapped over the client axis
+    and optionally ``shard_map``-parallel over a 1-D client mesh."""
+    local_train = _make_local_train(cfg, opt_cfg, lora_scale=lora_scale,
+                                    r_g=r_g)
+    use_mesh = (mesh is not None and n_sample is not None
+                and len(mesh.axis_names) == 1
+                and n_sample % mesh.devices.size == 0)
+    if mesh is not None and not use_mesh:
+        import warnings
+        warnings.warn(
+            f"client mesh {mesh} unusable (need a 1-D mesh whose size divides "
+            f"n_sample={n_sample}); falling back to single-device execution",
+            stacklevel=3)
+
+    def _client_phases(base_params, prev_global, lora0, ranks_s, batches):
+        """train → prune → edit, vmapped over the (local) client axis."""
+        lora1, losses = jax.vmap(
+            lambda lo, r, b: local_train(base_params, lo, r, b)
+        )(lora0, ranks_s, batches)
+        metrics = {"last_loss": losses[:, -1]}
+        if prune_active:
+            lora1, ranks_s = _vmapped_self_prune(lora1, ranks_s, r_g,
+                                                 hetlora_prune_gamma)
+        if edit_active:
+            lora1, edited = _vmapped_edit(lora1, ranks_s, prev_global, edit, r_g)
+            metrics["edited"] = edited
+        return lora1, ranks_s, metrics
+
+    if use_mesh:
+        from jax.experimental.shard_map import shard_map
+        from jax.sharding import PartitionSpec as P
+        ax = mesh.axis_names[0]
+        return shard_map(
+            _client_phases, mesh,
+            in_specs=(P(), P(), P(ax), P(ax), P(ax)),
+            out_specs=(P(ax), P(ax), P(ax)), check_rep=False)
+    return _client_phases
+
+
 def make_fed_round_step(cfg: ModelConfig, opt_cfg: OptimizerConfig, *,
                         lora_scale: float, r_g: int,
                         edit: EditConfig | None = None,
@@ -187,44 +255,14 @@ def make_round_engine(cfg: ModelConfig, opt_cfg: OptimizerConfig, *,
     parallel with zero cross-device traffic until aggregation.
     """
     edit = edit or EditConfig()
-    local_train = _make_local_train(cfg, opt_cfg, lora_scale=lora_scale, r_g=r_g)
     lcfg = LoRAConfig(rank=r_g)
     edit_active = edit.enabled and aggregator != "flora"
     prune_active = aggregator == "hetlora" and hetlora_prune_gamma > 0
-    use_mesh = (mesh is not None and n_sample is not None
-                and len(mesh.axis_names) == 1
-                and n_sample % mesh.devices.size == 0)
-    if mesh is not None and not use_mesh:
-        import warnings
-        warnings.warn(
-            f"client mesh {mesh} unusable (need a 1-D mesh whose size divides "
-            f"n_sample={n_sample}); falling back to single-device execution",
-            stacklevel=2)
-
-    def _client_phases(base_params, prev_global, lora0, ranks_s, batches):
-        """train → prune → edit, vmapped over the (local) client axis."""
-        lora1, losses = jax.vmap(
-            lambda lo, r, b: local_train(base_params, lo, r, b)
-        )(lora0, ranks_s, batches)
-        metrics = {"last_loss": losses[:, -1]}
-        if prune_active:
-            lora1, ranks_s = _vmapped_self_prune(lora1, ranks_s, r_g,
-                                                 hetlora_prune_gamma)
-        if edit_active:
-            lora1, edited = _vmapped_edit(lora1, ranks_s, prev_global, edit, r_g)
-            metrics["edited"] = edited
-        return lora1, ranks_s, metrics
-
-    if use_mesh:
-        from jax.experimental.shard_map import shard_map
-        from jax.sharding import PartitionSpec as P
-        ax = mesh.axis_names[0]
-        client_phases = shard_map(
-            _client_phases, mesh,
-            in_specs=(P(), P(), P(ax), P(ax), P(ax)),
-            out_specs=(P(ax), P(ax), P(ax)), check_rep=False)
-    else:
-        client_phases = _client_phases
+    client_phases = _make_client_phases(
+        cfg, opt_cfg, lora_scale=lora_scale, r_g=r_g, edit=edit,
+        edit_active=edit_active, prune_active=prune_active,
+        hetlora_prune_gamma=hetlora_prune_gamma, mesh=mesh,
+        n_sample=n_sample)
 
     def round_step(base_params, stacked_lora, global_lora, prev_global,
                    ranks, sizes, data, idx, batch_idx, round_idx):
@@ -276,6 +314,97 @@ def make_round_engine(cfg: ModelConfig, opt_cfg: OptimizerConfig, *,
         return out
 
     return round_step
+
+
+def make_client_update_step(cfg: ModelConfig, opt_cfg: OptimizerConfig, *,
+                            lora_scale: float, r_g: int,
+                            edit: EditConfig | None = None,
+                            aggregator: str = "fedbuff",
+                            hetlora_prune_gamma: float = 0.0,
+                            mesh=None, n_sample: int | None = None) -> Callable:
+    """Client half of the fused round for the buffered-async timeline::
+
+        client_update_step(base_params, stacked_lora[K,...], global_lora,
+                           prev_global, ranks[K], sizes[K],
+                           data {key: [K, N, ...]}, idx[n_s],
+                           batch_idx[n_s, steps, B]) -> dict
+
+    Redistributes the (possibly stale) global to the sampled cohort, gathers
+    minibatches in-program, runs the shared train → prune → edit pipeline and
+    scatters the personalized adapters back — but performs NO aggregation:
+    the cohort's stacked ``update`` (plus ``update_ranks``/``update_sizes``)
+    is returned for the server to buffer, and the merge happens later in
+    :func:`make_buffer_merge_step` once ``M`` deltas have accumulated.
+    FLoRA's fresh re-init is deliberately unsupported here (it rewrites base
+    weights synchronously, which has no buffered-async analogue).  Pruning
+    and editing are gated exactly like :func:`make_round_engine` so the
+    zero-staleness timeline stays equivalent to the synchronous round.
+    """
+    edit = edit or EditConfig()
+    if aggregator == "flora":
+        raise ValueError("flora updates base weights; it has no "
+                         "buffered-async client half")
+    client_phases = _make_client_phases(
+        cfg, opt_cfg, lora_scale=lora_scale, r_g=r_g, edit=edit,
+        edit_active=edit.enabled,
+        prune_active=aggregator == "hetlora" and hetlora_prune_gamma > 0,
+        hetlora_prune_gamma=hetlora_prune_gamma, mesh=mesh,
+        n_sample=n_sample)
+
+    def client_update_step(base_params, stacked_lora, global_lora,
+                           prev_global, ranks, sizes, data, idx, batch_idx):
+        ranks_s = ranks[idx]
+        sizes_s = sizes[idx]
+        batches = {k: v[idx[:, None, None], batch_idx] for k, v in data.items()}
+        lora0 = jax.vmap(
+            lambda r: truncate_redistribute(global_lora, r, r_g))(ranks_s)
+        lora1, ranks_s, metrics = client_phases(
+            base_params, prev_global, lora0, ranks_s, batches)
+        return {
+            "stacked_lora": jax.tree_util.tree_map(
+                lambda s, u: s.at[idx].set(u), stacked_lora, lora1),
+            "ranks": ranks.at[idx].set(ranks_s),
+            "update": lora1,              # [n_s, ...] cohort delta to buffer
+            "update_ranks": ranks_s,
+            "update_sizes": sizes_s,
+            "metrics": metrics,
+        }
+
+    return client_update_step
+
+
+def make_buffer_merge_step(*, aggregator: str = "fedbuff",
+                           staleness_decay: float = 0.5,
+                           hetlora_beta: float = 1.0,
+                           lora_scale: float = 1.0) -> Callable:
+    """Server half of the buffered-async round::
+
+        merge_step(buffer_lora[M,...], buf_ranks[M], buf_sizes[M],
+                   buf_staleness[M] f32, global_lora) -> dict
+
+    Merges exactly ``M`` buffered client deltas into the current global
+    through the :data:`repro.core.aggregation.AGGREGATORS` registry
+    (``fedbuff`` / ``fedbuff_kernel`` consume the per-delta staleness and
+    anchor on the current global; synchronous entries ignore them).  The
+    input global passes through as the new ``prev_global`` snapshot —
+    donation-safe exactly like ``round_step``.  ``M`` is static (jit once
+    per buffer size).
+    """
+    if aggregator == "flora":
+        raise ValueError("flora has no buffered-async merge (dense base "
+                         "deltas cannot be staleness-discounted in LoRA space)")
+
+    def merge_step(buffer_lora, buf_ranks, buf_sizes, buf_staleness,
+                   global_lora):
+        p = buf_sizes / jnp.maximum(jnp.sum(buf_sizes), 1e-12)
+        global_new, _ = AG.aggregate(
+            aggregator, buffer_lora, buf_ranks, p,
+            hetlora_beta=hetlora_beta, lora_scale=lora_scale,
+            staleness=buf_staleness, anchor=global_lora,
+            staleness_decay=staleness_decay)
+        return {"global_lora": global_new, "prev_global": global_lora}
+
+    return merge_step
 
 
 def apply_weight_deltas(params, deltas: dict):

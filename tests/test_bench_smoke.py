@@ -1,0 +1,72 @@
+"""Tier-2 smoke: the benchmark's --quick dispatch-count check.
+
+Runs ``benchmarks.bench_fedround.quick_check()`` and asserts the jit-call
+counters of every round driver — a regression here means an extra host sync
+or dispatch crept into the round/eval hot path.  Counting dispatches is
+deterministic, unlike wall-clock timing, so this can gate CI.
+"""
+
+import os
+import sys
+
+import pytest
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
+
+
+@pytest.mark.slow
+def test_bench_quick_dispatch_counts():
+    from benchmarks.bench_fedround import quick_check
+
+    counts = quick_check()
+
+    # synchronous driver: one fused dispatch per round; the K-client
+    # personalized evaluation is ONE population dispatch, never the
+    # per-client eval-loss/generate loop
+    assert counts["sync"]["round_step"] == 3
+    assert counts["sync"]["population_eval"] == 1
+    assert counts["sync"].get("eval_loss", 0) == 0
+    assert counts["sync"].get("generate", 0) == 0
+    assert counts["sync"].get("next_logits", 0) == 0
+
+    # pipelined driver: same single dispatch per round (the pipeline only
+    # reorders the metrics fetch, it must not add dispatches)
+    assert counts["pipelined"]["round_step"] == 3
+    assert counts["pipelined"].get("eval_loss", 0) == 0
+
+    # buffered async: one client-update and (zero delay, M = cohort) one
+    # buffer merge per tick — nothing else
+    assert counts["async"]["client_update"] == 3
+    assert counts["async"]["buffer_merge"] == 3
+    assert counts["async"].get("round_step", 0) == 0
+
+
+def test_bench_quick_cli_lines(monkeypatch):
+    """--quick CSV formatting (quick_check stubbed — no compile cost)."""
+    import benchmarks.bench_fedround as B
+
+    monkeypatch.setattr(B, "quick_check", lambda: {
+        "sync": {"round_step": 3, "population_eval": 1}})
+    lines = B.main(["--quick"])
+    assert "fedround/dispatch/sync/round_step,0.0,3" in lines
+    assert "fedround/dispatch/sync/population_eval,0.0,1" in lines
+
+
+def test_bench_history_appends(tmp_path, monkeypatch):
+    """BENCH_fedround.json accumulates a history entry per run (and
+    migrates a pre-history artifact) instead of overwriting."""
+    import json
+
+    from benchmarks.bench_fedround import _append_history
+
+    path = str(tmp_path / "BENCH_fedround.json")
+    with open(path, "w") as f:
+        json.dump({"speedup": 1.5, "rounds": {}}, f)   # pre-history artifact
+    doc1 = _append_history({"speedup": 1.7}, path)
+    assert doc1["speedup"] == 1.7
+    assert len(doc1["history"]) == 2                   # migrated + new
+    assert doc1["history"][0]["results"]["speedup"] == 1.5
+    doc2 = _append_history({"speedup": 1.9}, path)
+    assert len(doc2["history"]) == 3
+    assert doc2["history"][-1]["results"]["speedup"] == 1.9
+    assert doc2["history"][-1]["timestamp"] is not None

@@ -1,6 +1,7 @@
 """Fused round engine: fused-vs-reference equivalence, single-dispatch
-guarantee, prev_global snapshot regression, registry dispatch, and the
-KV-cached evaluation decode."""
+guarantee, prev_global snapshot regression, registry dispatch, the KV-cached
+evaluation decode, the pipelined/buffered-async round drivers (fedbuff), and
+the one-dispatch vmapped population evaluation."""
 
 import os
 import subprocess
@@ -145,7 +146,8 @@ def _stack(key, ranks, r_g=16):
 
 def test_registry_covers_all_strategies():
     assert set(AG.AGGREGATORS) == {"fedavg", "hetlora", "fedilora",
-                                   "fedilora_kernel", "flora"}
+                                   "fedilora_kernel", "flora",
+                                   "fedbuff", "fedbuff_kernel"}
 
 
 def test_registry_dispatch_contract():
@@ -172,6 +174,240 @@ def test_registry_kernel_matches_reference():
                                    np.asarray(ker[n]["A"]), atol=2e-5)
         np.testing.assert_allclose(np.asarray(ref[n]["B"]),
                                    np.asarray(ker[n]["B"]), atol=2e-5)
+
+
+# ---------------------------------------------------------------------------
+# fedbuff: staleness-discounted buffered aggregation (tentpole)
+# ---------------------------------------------------------------------------
+
+def test_fedbuff_staleness_zero_equals_fedilora_registry():
+    """At staleness 0 the fedbuff merge (incl. the anchor residual term)
+    must be exactly the synchronous fedilora aggregation."""
+    ranks = jnp.asarray([4, 8, 16])
+    p = jnp.asarray([0.2, 0.3, 0.5])
+    stack = _stack(jax.random.PRNGKey(2), [4, 8, 16])
+    anchor = jax.tree_util.tree_map(lambda x: x[0] + 1.0, stack)
+    ref, _ = AG.aggregate("fedilora", stack, ranks, p)
+    for name in ("fedbuff", "fedbuff_kernel"):
+        fb, _ = AG.aggregate(name, stack, ranks, p,
+                             staleness=jnp.zeros(3), anchor=anchor)
+        for n in ref:
+            np.testing.assert_allclose(np.asarray(fb[n]["A"]),
+                                       np.asarray(ref[n]["A"]), atol=2e-6)
+            np.testing.assert_allclose(np.asarray(fb[n]["B"]),
+                                       np.asarray(ref[n]["B"]), atol=2e-6)
+
+
+def test_fedbuff_kernel_matches_reference_with_staleness():
+    ranks = jnp.asarray([4, 8, 16])
+    p = jnp.asarray([0.2, 0.3, 0.5])
+    stack = _stack(jax.random.PRNGKey(3), [4, 8, 16])
+    anchor = jax.tree_util.tree_map(lambda x: x[0] + 0.5, stack)
+    s = jnp.asarray([3.0, 0.0, 1.0])
+    ref, _ = AG.aggregate("fedbuff", stack, ranks, p, staleness=s,
+                          anchor=anchor, staleness_decay=0.7)
+    ker, _ = AG.aggregate("fedbuff_kernel", stack, ranks, p, staleness=s,
+                          anchor=anchor, staleness_decay=0.7)
+    for n in ref:
+        np.testing.assert_allclose(np.asarray(ref[n]["A"]),
+                                   np.asarray(ker[n]["A"]), atol=2e-5)
+        np.testing.assert_allclose(np.asarray(ref[n]["B"]),
+                                   np.asarray(ker[n]["B"]), atol=2e-5)
+
+
+def test_fedbuff_stale_deltas_pull_toward_anchor():
+    """With positive staleness a client's per-dimension weight shrinks and
+    the forfeited mass lands on the anchor (convex blend)."""
+    ranks = jnp.asarray([16, 16])
+    p = jnp.asarray([0.5, 0.5])
+    stack = _stack(jax.random.PRNGKey(4), [16, 16])
+    anchor = jax.tree_util.tree_map(jnp.zeros_like,
+                                    jax.tree_util.tree_map(lambda x: x[0], stack))
+    fresh, _ = AG.aggregate("fedbuff", stack, ranks, p,
+                            staleness=jnp.zeros(2), anchor=anchor)
+    stale, _ = AG.aggregate("fedbuff", stack, ranks, p,
+                            staleness=jnp.asarray([4.0, 4.0]), anchor=anchor)
+    for n in fresh:
+        # zero anchor: staleness uniformly shrinks the merged adapter
+        a_fresh = np.abs(np.asarray(fresh[n]["A"])).sum()
+        a_stale = np.abs(np.asarray(stale[n]["A"])).sum()
+        assert a_stale < a_fresh
+
+
+def test_async_fedbuff_zero_delay_equals_sync_fedilora():
+    """Buffered-async timeline with zero delays and M = n_sample must be
+    tick-for-tick identical to the synchronous fedilora round: same
+    sampling, same losses, same stacked adapters, same global."""
+    ts = _mk("fedilora")     # synchronous fused engine
+    ta = _mk("fedbuff")      # async: dispatch → retire → merge each tick
+    for _ in range(3):
+        rs = ts.run_round()
+        ra = ta.run_round_async()
+        assert ra["sampled"] == rs["sampled"]
+        assert ra["merges"] == 1 and ra["buffer_fill"] == 0
+        assert ra["staleness"] == [0.0] * len(rs["sampled"])
+        assert abs(ra["train_loss"] - rs["train_loss"]) < 1e-6
+    assert _tree_err(ts.server.global_lora, ta.server.global_lora) < 1e-6
+    assert _tree_err(ts.stacked_lora, ta.stacked_lora) < 1e-6
+    assert _tree_err(ts.server.prev_global, ta.server.prev_global) < 1e-6
+
+
+def test_async_fedbuff_delays_produce_staleness():
+    """Slow clients retire late: their deltas carry positive staleness and
+    the fast clients' merges are never blocked on them."""
+    ta = _mk("fedbuff", buffer_size=2,
+             async_delays=(0, 2, 0), staleness_decay=0.5)
+    stal, merges = [], 0
+    for _ in range(6):
+        rec = ta.run_round_async()
+        stal.extend(rec["staleness"])
+        merges += rec["merges"]
+    assert merges > 0
+    assert any(s > 0 for s in stal), stal
+    # in-flight slow client is never resampled while training
+    for rec in ta.history:
+        assert len(set(rec["sampled"])) == len(rec["sampled"])
+
+
+def test_async_small_buffer_splits_cohort_correctly():
+    """buffer_size smaller than the cohort: each merge must take exactly M
+    deltas (rows sliced out of the cohort), never the whole cohort — and
+    every delta is merged exactly once."""
+    ta = _mk("fedbuff", buffer_size=2)          # cohort n_s = 3
+    merged = 0
+    for _ in range(4):
+        rec = ta.run_round_async()
+        merged += 2 * rec["merges"]
+        assert rec["buffer_fill"] < 2
+    dispatched = sum(len(r["sampled"]) for r in ta.history)
+    assert merged == dispatched - ta.history[-1]["buffer_fill"]
+    # buffer_size=1: three single-delta merges per tick, no double-merge
+    tb = _mk("fedbuff", buffer_size=1)
+    rec = tb.run_round_async()
+    assert rec["merges"] == 3 and rec["buffer_fill"] == 0
+    assert len(rec["staleness"]) == 3
+
+
+def test_async_requires_fedbuff_aggregator():
+    tr = _mk("fedilora")
+    with pytest.raises(ValueError, match="fedbuff"):
+        tr.run_round_async()
+
+
+# ---------------------------------------------------------------------------
+# pipelined rounds: overlap + one-round metrics lag (tentpole)
+# ---------------------------------------------------------------------------
+
+def test_pipelined_rounds_match_blocking_with_one_round_lag():
+    """run_round_pipelined must compute exactly what run_round computes; the
+    only difference is WHEN metrics arrive: record t is returned while round
+    t+1 is in flight (first call → None), and flush_rounds drains the tail."""
+    tb = _mk("fedilora")
+    tp = _mk("fedilora")
+    recs_b = [tb.run_round() for _ in range(3)]
+    recs_p = [tp.run_round_pipelined() for _ in range(3)]
+    assert recs_p[0] is None                      # nothing to report yet
+    assert recs_p[1:] == recs_b[:2]               # one round stale
+    assert tp.flush_rounds() == recs_b[2]         # drained tail
+    assert tp.flush_rounds() is None
+    assert tp.history == recs_b                   # history is complete
+    assert _tree_err(tb.server.global_lora, tp.server.global_lora) == 0.0
+    assert _tree_err(tb.stacked_lora, tp.stacked_lora) == 0.0
+
+
+def test_run_round_flushes_pending_pipelined_round():
+    """Mixing drivers: a blocking round after pipelined rounds first drains
+    the pending fetch so history stays ordered."""
+    tr = _mk("fedilora")
+    tr.run_round_pipelined()
+    tr.run_round()
+    assert [r["round"] for r in tr.history] == [1, 2]
+    assert tr._pending is None
+
+
+def test_async_flushes_pending_pipelined_round():
+    """run_round_async must also drain a pending pipelined fetch before its
+    donating client-update dispatch invalidates the pending buffers."""
+    tr = _mk("fedbuff")
+    tr.run_round_pipelined()
+    rec = tr.run_round_async()
+    assert tr._pending is None
+    assert rec["merges"] == 1
+    assert tr.history[0]["round"] == 1      # pipelined round's record landed
+
+
+# ---------------------------------------------------------------------------
+# one-dispatch population evaluation (tentpole)
+# ---------------------------------------------------------------------------
+
+def test_population_eval_matches_per_client_loop():
+    """BLEU / ROUGE-LSum / loss / acc from the single vmapped dispatch must
+    equal the per-client generation_scores + eval-loss loop on the same
+    stacked adapters."""
+    tr = _mk("fedilora")
+    tr.run_round()
+    ev_v = tr.evaluate_personalized(generate=True, n=8)
+    ev_l = tr.evaluate_personalized(generate=True, n=8, vmapped=False)
+    assert ev_v["bleu"] == ev_l["bleu"]           # token-exact decode
+    assert ev_v["rsum"] == ev_l["rsum"]
+    np.testing.assert_allclose(ev_v["loss"], ev_l["loss"], rtol=1e-6)
+    np.testing.assert_allclose(ev_v["acc"], ev_l["acc"], rtol=1e-6)
+
+
+def test_population_eval_is_single_dispatch():
+    """Evaluating all K personalized clients must issue exactly ONE jitted
+    dispatch — no per-client eval-loss or generate calls."""
+    tr = _mk("fedilora")
+    tr.run_round()
+    tr.dispatch_count.clear()
+    tr.evaluate_personalized(generate=True, n=8)
+    assert tr.dispatch_count["population_eval"] == 1
+    assert tr.dispatch_count["eval_loss"] == 0
+    assert tr.dispatch_count["generate"] == 0
+    # the looped reference pays ~2 dispatches per client
+    tr.dispatch_count.clear()
+    tr.evaluate_personalized(generate=True, n=8, vmapped=False)
+    K = tr.fcfg.num_clients
+    assert tr.dispatch_count["eval_loss"] == K
+    assert tr.dispatch_count["generate"] == K
+    assert tr.dispatch_count["population_eval"] == 0
+
+
+def test_population_generate_matches_per_client_decode():
+    """make_population_generate is token-for-token the per-client cached
+    greedy decode over the stacked adapters."""
+    from repro.launch.steps import make_population_generate
+
+    tr = _mk("fedilora")
+    tr.run_round()
+    n = 6
+    lm = np.asarray(tr.clients[0].eval_data["loss_mask"][:n])
+    cap_start = int(np.argmax(lm[0] > 0))
+    gen_len = int(lm[0].sum())
+    tokens = jnp.stack([jnp.asarray(c.eval_data["tokens"][:n])
+                        for c in tr.clients])
+    images = jnp.stack([jnp.asarray(c.eval_data["image"][:n])
+                        for c in tr.clients])
+    fn = jax.jit(make_population_generate(
+        tr.mcfg, lora_scale=tr.lora_scale, cap_start=cap_start,
+        gen_len=gen_len))
+    pop = np.asarray(fn(tr.base_params, tr.stacked_lora, tokens, images))
+    for k, c in enumerate(tr.clients):
+        ref = tr._generate_cached(c.lora,
+                                  np.asarray(c.eval_data["tokens"][:n]),
+                                  images[k], cap_start, gen_len)
+        np.testing.assert_array_equal(pop[k], np.asarray(ref))
+
+
+def test_generation_scores_rejects_nonuniform_loss_mask():
+    """cap_start/gen_len come from row 0 — a corpus whose supervised span
+    differs across rows must fail loudly, not silently mis-decode."""
+    tr = _mk("fedilora")
+    data = {k: np.asarray(v[:4]).copy() for k, v in tr.global_test.items()}
+    lm = data["loss_mask"]
+    lm[1] = np.roll(lm[1], 1)                    # shift one row's window
+    with pytest.raises(ValueError, match="not uniform across rows"):
+        tr.generation_scores(tr.server.global_lora, data, n=4)
 
 
 # ---------------------------------------------------------------------------
