@@ -28,10 +28,7 @@ swept over local_steps; decode at gen_len 17 (≥16).
 from __future__ import annotations
 
 import argparse
-import datetime
-import json
 import os
-import subprocess
 import sys
 import time
 
@@ -254,31 +251,10 @@ def quick_check() -> dict:
 
 
 def _append_history(res: dict, path: str = "BENCH_fedround.json") -> dict:
-    """Merge ``res`` into the benchmark artifact: latest run at the top
-    level, every run (including migrated pre-history artifacts) appended to
-    ``history`` keyed by git SHA + timestamp."""
-    history = []
-    if os.path.exists(path):
-        with open(path) as f:
-            prev = json.load(f)
-        history = prev.pop("history", [])
-        if not history and prev:      # migrate a pre-history artifact
-            history.append({"sha": None, "timestamp": None, "results": prev})
-    try:
-        sha = subprocess.run(["git", "rev-parse", "--short", "HEAD"],
-                             capture_output=True, text=True,
-                             cwd=os.path.dirname(os.path.abspath(__file__)),
-                             timeout=10).stdout.strip() or None
-    except (OSError, subprocess.SubprocessError):
-        sha = None
-    ts = datetime.datetime.now(datetime.timezone.utc).isoformat(
-        timespec="seconds")
-    history.append({"sha": sha, "timestamp": ts, "results": res})
-    doc = dict(res)
-    doc["history"] = history
-    with open(path, "w") as f:
-        json.dump(doc, f, indent=2)
-    return doc
+    """SHA-keyed history merge — shared with BENCH_serving.json (see
+    ``benchmarks.common.append_history``)."""
+    from benchmarks.common import append_history
+    return append_history(res, path)
 
 
 def main(argv: list[str] | None = None) -> list[str]:
@@ -301,20 +277,13 @@ def main(argv: list[str] | None = None) -> list[str]:
     n_sample = 4                    # round(0.4 * 10)
     ndev = max(d for d in (1, 2, 4)
                if d <= (os.cpu_count() or 1) and n_sample % d == 0)
+    from benchmarks.common import run_measurement_subprocess
     env = dict(os.environ)
     flags = env.get("XLA_FLAGS", "")
     env["XLA_FLAGS"] = (flags + f" --xla_force_host_platform_device_count={ndev}").strip()
-    env.setdefault("PYTHONPATH", os.path.join(os.path.dirname(__file__), ".."))
     code = ("import json; from benchmarks.bench_fedround import _measure, _JSON_TAG; "
             "print(_JSON_TAG + json.dumps(_measure()))")
-    proc = subprocess.run([sys.executable, "-c", code], capture_output=True,
-                          text=True, env=env, timeout=2400)
-    if proc.returncode != 0:
-        raise RuntimeError(f"bench_fedround subprocess failed:\n{proc.stdout}"
-                           f"\n{proc.stderr}")
-    payload = next(l for l in proc.stdout.splitlines()
-                   if l.startswith(_JSON_TAG))
-    res = json.loads(payload[len(_JSON_TAG):])
+    res = run_measurement_subprocess(code, _JSON_TAG, env=env)
     _append_history(res)
 
     lines = []

@@ -1,0 +1,215 @@
+"""Multi-tenant adapter serving: tokens/sec, request-latency percentiles and
+continuous- vs static-batching throughput over heterogeneous-rank
+personalized LoRAs.
+
+The workload: a ``fedbench-tiny`` population is trained for one round so
+every client owns a distinct personalized adapter (heterogeneous ranks
+4..32), the adapters are registered in an ``AdapterStore`` and a mixed
+request stream (every request a different tenant, heterogeneous generation
+lengths) is served by the ``ServingEngine``:
+
+* **continuous** batching admits a queued request into any slot the moment
+  it frees — the decode batch never idles while work is queued;
+* **static** batching (the baseline) admits a full batch and drains it —
+  slots whose request finished early idle until the batch's longest request
+  completes.
+
+Both modes run the identical request set through identical engines, so the
+step-count gap is pure scheduling: continuous ≥ static throughput by
+construction whenever generation lengths vary.  CPU-container caveat: the
+per-step wall clock here is dominated by the tiny model's dispatch overhead
+on 2 cores, so the throughput ratio ≈ the step-count ratio; on a real
+accelerator the per-step cost grows with batch occupancy and the continuous
+win widens.
+
+Results go to ``BENCH_serving.json`` — latest run at the top level plus a
+``history`` list keyed by git SHA + timestamp (the same scheme as
+``BENCH_fedround.json``, shared ``benchmarks.common.append_history``).
+
+``--quick`` skips wall-clock timing and checks the *dispatch counts* of the
+serving loop (exactly one ``serve_step`` per decode step, one
+``serve_admit`` per request, paging bounded by the bank size) plus the
+continuous-vs-static step-count ordering — the deterministic regression
+signal the tier-2 smoke test asserts on.
+"""
+
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+
+_JSON_TAG = "BENCH_SERVING_JSON:"
+N_REQUESTS = 24
+MAX_SLOTS = 4
+GEN_LENS = (4, 13, 7, 10)       # heterogeneous per-request generation lengths
+TIMED_REPS = 5
+
+
+def _build(num_clients: int = 6, local_steps: int = 1):
+    """Tiny trained population + its serving pieces + a mixed request set."""
+    import numpy as np
+
+    from repro.configs import get_config
+    from repro.data.synthetic import (SyntheticTaskConfig,
+                                      make_federated_datasets)
+    from repro.federated import FederatedConfig, FederatedTrainer
+    from repro.optim import OptimizerConfig
+    from repro.serving import Request
+
+    tcfg = SyntheticTaskConfig(caption_len=12)
+    clients, gtest = make_federated_datasets(
+        tcfg, num_clients, np.full((num_clients,), 40))
+    ranks = (4, 8, 8, 16, 24, 32)[:num_clients]
+    fcfg = FederatedConfig(num_clients=num_clients, sample_rate=1.0,
+                           ranks=ranks, local_steps=local_steps, batch_size=4,
+                           aggregator="fedilora")
+    tr = FederatedTrainer(get_config("fedbench-tiny"), fcfg,
+                          OptimizerConfig(peak_lr=3e-3, total_steps=50),
+                          clients, clients, gtest, seed=0)
+    tr.run_round()
+
+    lm = np.asarray(clients[0]["loss_mask"])
+    cap_start = int(np.argmax(lm[0] > 0))
+
+    def requests():
+        out = []
+        for i in range(N_REQUESTS):
+            k = i % num_clients
+            out.append(Request(
+                adapter_id=f"client{k}",
+                prompt_tokens=np.asarray(clients[k]["tokens"][i % 8][:cap_start + 1]),
+                gen_len=GEN_LENS[i % len(GEN_LENS)],
+                vision=np.asarray(clients[k]["image"][i % 8])))
+        return out
+
+    return tr, requests
+
+
+def _engine(tr, *, continuous: bool, slots: int = MAX_SLOTS):
+    from repro.serving import AdapterStore, ServingEngine
+
+    store = AdapterStore.from_trainer(tr, slots=slots)
+    return ServingEngine(tr.mcfg, tr.base_params, store,
+                         lora_scale=tr.lora_scale, max_slots=slots,
+                         max_prompt=8, max_gen=max(GEN_LENS),
+                         continuous=continuous)
+
+
+def _timed_rep(eng, requests) -> dict:
+    eng.reset()
+    reqs = requests()
+    t0 = time.perf_counter()
+    done = eng.run(reqs)
+    wall = time.perf_counter() - t0
+    lats = sorted(d["latency_s"] for d in done)
+    toks = sum(len(d["tokens"]) for d in done)
+    return {
+        "wall_s": wall, "steps": eng.steps, "requests": len(done),
+        "generated_tokens": toks,
+        "tokens_per_sec": toks / wall,
+        "requests_per_sec": len(done) / wall,
+        "p50_latency_s": lats[len(lats) // 2],
+        "p95_latency_s": lats[min(int(len(lats) * 0.95), len(lats) - 1)],
+        "dispatch": dict(eng.dispatch_count),
+    }
+
+
+def _measure() -> dict:
+    import jax
+
+    tr, requests = _build()
+    out = {"config": {"model": "fedbench-tiny", "adapters": 6,
+                      "adapter_ranks": [4, 8, 8, 16, 24, 32],
+                      "max_slots": MAX_SLOTS, "requests": N_REQUESTS,
+                      "gen_lens": list(GEN_LENS),
+                      "devices": jax.device_count(),
+                      "timed_reps": TIMED_REPS}}
+    # ONE engine per mode for warmup + all reps (a fresh engine would re-jit
+    # its step/admit closures, putting compilation inside the timed window;
+    # reset() clears the workload but keeps the compiled functions), and the
+    # two modes' reps are INTERLEAVED so host-load drift on the shared CI
+    # cores biases both equally instead of whichever mode ran second
+    eng_c = _engine(tr, continuous=True)
+    eng_s = _engine(tr, continuous=False)
+    eng_c.run(requests())
+    eng_s.run(requests())
+    best_c = best_s = None
+    for _ in range(TIMED_REPS):
+        rc = _timed_rep(eng_c, requests)
+        rs = _timed_rep(eng_s, requests)
+        if best_c is None or rc["wall_s"] < best_c["wall_s"]:
+            best_c = rc
+        if best_s is None or rs["wall_s"] < best_s["wall_s"]:
+            best_s = rs
+    out["continuous"] = best_c
+    out["static"] = best_s
+    out["continuous_vs_static_throughput"] = (
+        out["continuous"]["tokens_per_sec"] / out["static"]["tokens_per_sec"])
+    out["continuous_vs_static_steps"] = (
+        out["static"]["steps"] / out["continuous"]["steps"])
+    if out["continuous_vs_static_throughput"] < 1.1:
+        out["caveat"] = (
+            "small margin on the 2-core CI container: per-step wall clock "
+            "is dispatch-overhead-bound at this tiny scale, so the "
+            "throughput ratio tracks the step-count ratio "
+            f"({out['continuous_vs_static_steps']:.2f}x); re-measure on an "
+            "accelerator host where step cost scales with occupancy")
+    return out
+
+
+def quick_check() -> dict:
+    """Dispatch-count + step-count regression check (no wall clock): one
+    serve_step per decode step, one admit per request, adapter paging
+    bounded by the bank, and continuous needs no more steps than static."""
+    tr, requests = _build(num_clients=3, local_steps=1)
+    out = {}
+    for mode in ("continuous", "static"):
+        eng = _engine(tr, continuous=mode == "continuous", slots=2)
+        done = eng.run(requests())
+        out[mode] = {"steps": eng.steps, "requests": len(done),
+                     "dispatch": dict(eng.dispatch_count)}
+    return out
+
+
+def main(argv: list[str] | None = None) -> list[str]:
+    """Spawn the measurement subprocess, append to BENCH_serving.json's
+    history, return CSV lines.  ``--quick``: dispatch-count check only,
+    in-process, nothing written."""
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--quick", action="store_true",
+                    help="dispatch-count check only (no timing, no JSON)")
+    args = ap.parse_args([] if argv is None else argv)
+
+    if args.quick:
+        counts = quick_check()
+        lines = []
+        for mode, rec in sorted(counts.items()):
+            lines.append(f"serving/dispatch/{mode}/steps,0.0,{rec['steps']}")
+            for name, cnt in sorted(rec["dispatch"].items()):
+                lines.append(f"serving/dispatch/{mode}/{name},0.0,{cnt}")
+        return lines
+
+    from benchmarks.common import append_history, run_measurement_subprocess
+    code = ("import json; from benchmarks.bench_serving import _measure, "
+            "_JSON_TAG; print(_JSON_TAG + json.dumps(_measure()))")
+    res = run_measurement_subprocess(code, _JSON_TAG)
+    append_history(res, "BENCH_serving.json")
+
+    lines = []
+    for mode in ("continuous", "static"):
+        r = res[mode]
+        lines.append(f"serving/{mode}/tokens_per_sec,"
+                     f"{r['wall_s'] / max(r['steps'], 1) * 1e6:.1f},"
+                     f"{r['tokens_per_sec']:.1f} tok/s")
+        lines.append(f"serving/{mode}/p50_latency,"
+                     f"{r['p50_latency_s'] * 1e6:.1f},"
+                     f"p95={r['p95_latency_s'] * 1e3:.1f}ms")
+        lines.append(f"serving/{mode}/steps,0.0,{r['steps']}")
+    lines.append(f"serving/continuous_vs_static,0.0,"
+                 f"{res['continuous_vs_static_throughput']:.2f}x")
+    return lines
+
+
+if __name__ == "__main__":
+    print("\n".join(main(sys.argv[1:])))

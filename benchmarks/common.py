@@ -11,6 +11,11 @@ reproduction target; absolute scores are task-specific (DESIGN.md §1).
 
 from __future__ import annotations
 
+import datetime
+import json
+import os
+import subprocess
+import sys
 import time
 
 import numpy as np
@@ -74,3 +79,49 @@ def run_rounds(trainer: FederatedTrainer, rounds: int = DEFAULT_ROUNDS):
 
 def csv_line(name: str, us_per_call: float, derived) -> str:
     return f"{name},{us_per_call:.1f},{derived}"
+
+
+def run_measurement_subprocess(code: str, tag: str, *, env: dict | None = None,
+                               timeout: int = 2400) -> dict:
+    """Run ``code`` in a fresh python (clean jax init — XLA flags / device
+    counts must be set before jax imports) and scrape the ``tag``-prefixed
+    JSON line it prints — the measurement protocol shared by bench_fedround
+    and bench_serving."""
+    env = dict(os.environ) if env is None else env
+    env.setdefault("PYTHONPATH", os.path.join(os.path.dirname(__file__), ".."))
+    proc = subprocess.run([sys.executable, "-c", code], capture_output=True,
+                          text=True, env=env, timeout=timeout)
+    if proc.returncode != 0:
+        raise RuntimeError(f"measurement subprocess failed:\n{proc.stdout}"
+                           f"\n{proc.stderr}")
+    payload = next(l for l in proc.stdout.splitlines() if l.startswith(tag))
+    return json.loads(payload[len(tag):])
+
+
+def append_history(res: dict, path: str) -> dict:
+    """Merge ``res`` into a benchmark artifact: latest run at the top level,
+    every run (including migrated pre-history artifacts) appended to a
+    ``history`` list keyed by git SHA + timestamp — the shared scheme of
+    BENCH_fedround.json and BENCH_serving.json."""
+    history = []
+    if os.path.exists(path):
+        with open(path) as f:
+            prev = json.load(f)
+        history = prev.pop("history", [])
+        if not history and prev:      # migrate a pre-history artifact
+            history.append({"sha": None, "timestamp": None, "results": prev})
+    try:
+        sha = subprocess.run(["git", "rev-parse", "--short", "HEAD"],
+                             capture_output=True, text=True,
+                             cwd=os.path.dirname(os.path.abspath(__file__)),
+                             timeout=10).stdout.strip() or None
+    except (OSError, subprocess.SubprocessError):
+        sha = None
+    ts = datetime.datetime.now(datetime.timezone.utc).isoformat(
+        timespec="seconds")
+    history.append({"sha": sha, "timestamp": ts, "results": res})
+    doc = dict(res)
+    doc["history"] = history
+    with open(path, "w") as f:
+        json.dump(doc, f, indent=2)
+    return doc

@@ -11,11 +11,13 @@ import sys
 import time
 
 from benchmarks import (bench_fedround, bench_fig1, bench_fig4, bench_fig5,
-                        bench_fig6, bench_kernels, bench_table1, bench_table2,
-                        bench_table3, bench_table4, bench_table5, roofline)
+                        bench_fig6, bench_kernels, bench_serving,
+                        bench_table1, bench_table2, bench_table3,
+                        bench_table4, bench_table5, roofline)
 
 SUITES = {
     "fedround": bench_fedround.main,
+    "serving": bench_serving.main,
     "table1": bench_table1.main,
     "table2": bench_table2.main,
     "table3": bench_table3.main,

@@ -1,0 +1,94 @@
+"""Multi-tenant adapter serving demo: train a small federated population,
+page its heterogeneous-rank personalized adapters into an AdapterStore and
+serve a mixed request stream with the continuous-batching engine.
+
+Walks the whole loop the serving subsystem closes:
+
+1. two FediLoRA rounds leave every client with its own adapter (ranks 4..32);
+2. the adapters are registered in an ``AdapterStore`` smaller than the
+   population, so cold tenants LRU-page in and out of the device bank;
+3. a request stream mixing all tenants and generation lengths is served —
+   one jitted multi-adapter dispatch per decode step, requests admitted into
+   freed slots mid-flight — and compared against per-client single-tenant
+   decode (token-identical) plus the static drain-then-refill baseline.
+
+Run:  PYTHONPATH=src python examples/serve_multitenant.py
+"""
+
+import numpy as np
+
+import jax.numpy as jnp
+
+from repro.configs import get_config
+from repro.data.synthetic import SyntheticTaskConfig, make_federated_datasets
+from repro.federated import FederatedConfig, FederatedTrainer
+from repro.optim import OptimizerConfig
+from repro.serving import AdapterStore, Request, ServingEngine
+
+NUM_CLIENTS = 6
+RANKS = (4, 8, 8, 16, 24, 32)
+
+
+def main():
+    tcfg = SyntheticTaskConfig(caption_len=12)
+    clients, gtest = make_federated_datasets(
+        tcfg, NUM_CLIENTS, np.full((NUM_CLIENTS,), 40))
+    fcfg = FederatedConfig(num_clients=NUM_CLIENTS, sample_rate=1.0,
+                           ranks=RANKS, local_steps=2, batch_size=4,
+                           aggregator="fedilora")
+    tr = FederatedTrainer(get_config("fedbench-tiny"), fcfg,
+                          OptimizerConfig(peak_lr=3e-3, total_steps=60),
+                          clients, clients, gtest, seed=0)
+    for _ in range(2):
+        rec = tr.run_round()
+    print(f"trained {NUM_CLIENTS} clients (ranks {RANKS}), "
+          f"last train loss {rec['train_loss']:.3f}")
+
+    lm = np.asarray(clients[0]["loss_mask"])
+    cap_start = int(np.argmax(lm[0] > 0))
+    gen_len = int(lm[0].sum())
+
+    def requests():
+        reqs = []
+        for i in range(12):
+            k = i % NUM_CLIENTS
+            reqs.append(Request(
+                adapter_id=f"client{k}",
+                prompt_tokens=np.asarray(clients[k]["tokens"][i % 4][:cap_start + 1]),
+                gen_len=(gen_len, 4, 8)[i % 3],
+                vision=np.asarray(clients[k]["image"][i % 4])))
+        return reqs
+
+    def serve(continuous):
+        store = AdapterStore.from_trainer(tr, slots=3)   # bank < population
+        eng = ServingEngine(tr.mcfg, tr.base_params, store,
+                            lora_scale=tr.lora_scale, max_slots=3,
+                            max_prompt=8, max_gen=gen_len,
+                            continuous=continuous)
+        done = eng.run(requests())
+        return eng, store, done
+
+    eng, store, done = serve(continuous=True)
+    print(f"continuous: {len(done)} requests in {eng.steps} steps "
+          f"({dict(eng.dispatch_count)}); adapter pages in/out: "
+          f"{store.loads}/{store.evictions}")
+
+    # token-exactness vs the single-tenant cached greedy decode
+    for d in done[:3]:
+        k = int(d["adapter_id"][len("client"):])
+        row = next(i % 4 for i in range(12)
+                   if i % NUM_CLIENTS == k)       # first request row of k
+        ref = tr._generate_cached(
+            tr.clients[k].lora, np.asarray(clients[k]["tokens"][row:row + 1]),
+            jnp.asarray(clients[k]["image"][row:row + 1]), cap_start,
+            len(d["tokens"]))
+        assert np.array_equal(d["tokens"], np.asarray(ref)[0])
+    print("spot-checked tokens == per-client make_greedy_generate ✓")
+
+    eng_s, _, done_s = serve(continuous=False)
+    print(f"static baseline: {len(done_s)} requests in {eng_s.steps} steps "
+          f"→ continuous saves {eng_s.steps - eng.steps} steps")
+
+
+if __name__ == "__main__":
+    main()

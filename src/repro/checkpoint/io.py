@@ -52,15 +52,36 @@ def load_pytree(path: str) -> Pytree:
 
 
 def save_federated(dirpath: str, trainer) -> None:
-    """Persist server + per-client adapter state of a FederatedTrainer."""
+    """Persist server + per-client adapter state of a FederatedTrainer.
+
+    Works across all round drivers: a pending pipelined round is drained
+    first (its metrics fetch must land before the snapshot describes a
+    consistent timeline) and un-merged buffered-async state (in-flight
+    cohorts / buffered deltas) is rejected — those deltas exist only as
+    rows of live device buffers and would be silently lost.  FLoRA folds
+    dense deltas into the BASE weights, so for that aggregator the base
+    parameters are part of the checkpoint too.
+    """
+    if getattr(trainer, "_pending", None) is not None:
+        trainer.flush_rounds()
+    if getattr(trainer, "_inflight", None) or getattr(trainer, "_buffer", None):
+        raise ValueError(
+            "trainer has un-merged buffered-async state (in-flight cohorts "
+            "or buffered deltas); run run_round_async until the buffer "
+            "drains before checkpointing")
     os.makedirs(dirpath, exist_ok=True)
     save_pytree(os.path.join(dirpath, "global_lora.npz"), trainer.server.global_lora)
     save_pytree(os.path.join(dirpath, "prev_global.npz"), trainer.server.prev_global)
     for i, c in enumerate(trainer.clients):
         save_pytree(os.path.join(dirpath, f"client_{i}.npz"), c.lora)
+    if trainer.fcfg.aggregator == "flora":
+        save_pytree(os.path.join(dirpath, "base_params.npz"),
+                    trainer.base_params)
     meta = {"round": trainer.server.round,
             "ranks": [c.rank for c in trainer.clients],
-            "aggregator": trainer.fcfg.aggregator}
+            "aggregator": trainer.fcfg.aggregator,
+            "global_version": getattr(trainer, "_global_version", 0),
+            "async_tick": getattr(trainer, "_async_tick", 0)}
     with open(os.path.join(dirpath, "meta.json"), "w") as f:
         json.dump(meta, f)
 
@@ -79,3 +100,14 @@ def load_federated(dirpath: str, trainer) -> None:
         lambda *xs: jnp.stack(xs), *loras)
     trainer.client_ranks = np.asarray(meta["ranks"], np.int32)
     trainer._ranks_dev = jnp.asarray(trainer.client_ranks)
+    base = os.path.join(dirpath, "base_params.npz")
+    if os.path.exists(base):                     # flora-mutated base weights
+        trainer.base_params = load_pytree(base)
+    # async timeline counters (pre-existing checkpoints default to 0)
+    trainer._global_version = meta.get("global_version", 0)
+    trainer._async_tick = meta.get("async_tick", 0)
+    # stale in-flight state from the receiving trainer would corrupt the
+    # restored timeline — the checkpoint is by construction fully merged
+    trainer._pending = None
+    trainer._inflight = []
+    trainer._buffer = []

@@ -34,6 +34,19 @@ class FederatedConfig:
     # late and stale, and the fedbuff merge discounts them instead of the
     # round stalling (the paper's heterogeneous-client setting).
     async_delays: tuple = ()
+    # opt-in: record an EMA of measured per-client wall-clock local-training
+    # time (FederatedTrainer.client_step_ema) and, when ``async_delays`` is
+    # empty, derive the async delays from it — clients whose EMA is n× the
+    # fastest retire n-1 ticks late.  PER-CLIENT differentiation needs a
+    # per-client measurement, which only the reference loop provides
+    # (run_round_reference times each client individually); the vmapped
+    # async cohort can only observe the cohort's wall clock — a uniform
+    # value, so it SEEDS still-unmeasured clients and never overwrites
+    # individually measured EMAs (on real deployments each client measures
+    # its own hardware, which is what the EMA models).  The async cohort
+    # pays one blocking sync per tick only while unmeasured clients remain.
+    measure_delays: bool = False
+    delay_ema_beta: float = 0.5              # EMA smoothing for step times
 
     @property
     def global_rank(self) -> int:

@@ -100,6 +100,7 @@ from __future__ import annotations
 
 import collections
 import dataclasses
+import time
 import warnings
 from typing import Any
 
@@ -153,6 +154,11 @@ def _mask_decode_bounds(loss_mask: np.ndarray) -> tuple[int, int]:
             "corpora are uniform by construction).")
     cap_start = int(np.argmax(lm[0]))
     gen_len = int(lm[0].sum())
+    if gen_len == 0:
+        raise ValueError(
+            "loss_mask has no supervised positions (all-zero rows): there "
+            "is no caption window to decode — greedy generation over such a "
+            "corpus would silently emit one bogus token at position 0.")
     return cap_start, gen_len
 
 
@@ -288,6 +294,14 @@ class FederatedTrainer:
         self._buffer: list[dict] = []     # retired per-client deltas (device)
         self._async_tick = 0
         self._global_version = 0          # server merges applied so far
+        # measured per-client wall-clock local-training time (EMA, seconds);
+        # recorded when fcfg.measure_delays and consumed by run_round_async
+        self.client_step_ema = np.zeros((fed_cfg.num_clients,), np.float64)
+        self._ema_seen = np.zeros((fed_cfg.num_clients,), bool)
+        # driver paths whose jitted fn has already run once — the FIRST
+        # measurement of a path includes trace+compile (seconds vs ms) and
+        # would poison the EMA with an enormous bogus delay, so discard it
+        self._measure_warm: set = set()
 
     # ------------------------------------------------------------------ local
     def _local_train_impl(self, base_params, lora, rank, batches):
@@ -337,6 +351,45 @@ class FederatedTrainer:
         ix = self._batch_indices(client)
         return {k: jnp.asarray(v[ix]) for k, v in client.data.items()
                 if k in _BATCH_KEYS}
+
+    def _record_step_time(self, clients, seconds: float, *,
+                          path: str | None = None,
+                          only_unseen: bool = False) -> None:
+        """Fold one wall-clock local-training measurement into the per-client
+        EMA.  The reference loop measures each client individually; the
+        fused/async cohort dispatch can only observe the cohort's wall clock
+        — a uniform value that would ERASE individually measured
+        heterogeneity if folded into every member, so the cohort path passes
+        ``only_unseen=True`` and seeds unmeasured clients without touching
+        measured ones.  ``path`` names the jitted fn being timed — its first
+        invocation (compile-inclusive) is discarded."""
+        if path is not None and path not in self._measure_warm:
+            self._measure_warm.add(path)
+            return
+        beta = self.fcfg.delay_ema_beta
+        for k in np.atleast_1d(np.asarray(clients, np.int64)):
+            if self._ema_seen[k]:
+                if only_unseen:
+                    continue
+                self.client_step_ema[k] = (beta * self.client_step_ema[k]
+                                           + (1.0 - beta) * seconds)
+            else:
+                self.client_step_ema[k] = seconds
+                self._ema_seen[k] = True
+
+    def derived_async_delays(self) -> tuple:
+        """Async delays (rounds-to-finish) derived from the measured EMAs:
+        a client whose step time is n× the fastest measured client retires
+        n-1 ticks late; unmeasured clients default to 0 (no delay)."""
+        if not self._ema_seen.any():
+            return (0,) * self.fcfg.num_clients
+        base = float(self.client_step_ema[self._ema_seen].min())
+        delays = np.zeros((self.fcfg.num_clients,), np.int64)
+        if base > 0:
+            ratio = self.client_step_ema[self._ema_seen] / base
+            delays[self._ema_seen] = np.maximum(
+                np.round(ratio).astype(np.int64) - 1, 0)
+        return tuple(int(d) for d in delays)
 
     @property
     def _n_sample(self) -> int:
@@ -450,6 +503,21 @@ class FederatedTrainer:
             self._pending = None
         return rec
 
+    # ------------------------------------------------------------- serving
+    def export_adapters(self) -> dict:
+        """Personalized adapters for serving registration:
+        ``{"client<k>": (host lora pytree padded to r_g, true rank r_k)}``.
+        One device fetch for the whole stacked state; the zero-rank-padding
+        invariant makes the padded trees directly servable (see
+        ``repro.serving.AdapterStore``).  Drains a pending pipelined round
+        first so the exported adapters are the latest ones."""
+        self.flush_rounds()
+        host = jax.device_get(self.stacked_lora)
+        return {
+            f"client{k}": (jax.tree_util.tree_map(lambda x, k=k: x[k], host),
+                           int(self.client_ranks[k]))
+            for k in range(self.fcfg.num_clients)}
+
     # ------------------------------------------------------------- async/buff
     def _get_client_update_step(self):
         if self._client_update_step is None:
@@ -496,7 +564,10 @@ class FederatedTrainer:
                 f"run_round_async needs aggregator 'fedbuff' or "
                 f"'fedbuff_kernel', got {fc.aggregator!r} (synchronous "
                 "strategies cannot weight stale deltas)")
-        delays = fc.async_delays or (0,) * fc.num_clients
+        delays = fc.async_delays
+        if not delays and fc.measure_delays:
+            delays = self.derived_async_delays()   # EMA-measured step times
+        delays = delays or (0,) * fc.num_clients
         if len(delays) != fc.num_clients:
             raise ValueError(
                 f"async_delays has {len(delays)} entries for "
@@ -517,12 +588,24 @@ class FederatedTrainer:
                                              replace=False))
             batch_idx = np.stack([self._batch_indices(self.clients[k])
                                   for k in sampled])
+            measure = fc.measure_delays and \
+                not self._ema_seen[list(map(int, sampled))].all()
+            t0 = time.perf_counter()
             out = self._dispatch(
                 "client_update", self._get_client_update_step(),
                 self.base_params, self.stacked_lora, self.server.global_lora,
                 self.server.prev_global, self._ranks_dev, self._sizes_dev,
                 self._stacked_data, jnp.asarray(sampled, jnp.int32),
                 jnp.asarray(batch_idx, jnp.int32))
+            if measure:
+                # the wall clock needs the cohort finished: one sync per
+                # tick — paid only while some sampled client is unmeasured
+                # (the cohort time seeds those; it carries no per-client
+                # signal for clients the reference loop already measured)
+                jax.block_until_ready(out["update"])
+                self._record_step_time(sampled, time.perf_counter() - t0,
+                                       path="client_update",
+                                       only_unseen=True)
             self.stacked_lora = out["stacked_lora"]
             self._ranks_dev = out["ranks"]
             # the buffer holds (cohort, row) references — hold only the
@@ -612,8 +695,12 @@ class FederatedTrainer:
             else:
                 lora0 = truncate_redistribute(self.server.global_lora, rank_k, r_g)
             batches = self._prefetch(c)
+            t0 = time.perf_counter()
             lora1, ls = self._local_train(self.base_params, lora0, rank_k, batches)
-            losses.append(float(ls[-1]))
+            losses.append(float(ls[-1]))       # blocks on this client's steps
+            if fc.measure_delays:
+                self._record_step_time(k, time.perf_counter() - t0,
+                                       path="local_train")
             # HetLoRA rank self-pruning (Cho et al. 2024): clients shrink
             # their rank when trailing dims carry negligible mass
             if fc.aggregator == "hetlora" and fc.hetlora_prune_gamma > 0:
@@ -840,12 +927,21 @@ class FederatedTrainer:
             toks = np.array(tokens, copy=True)
             toks[:, cap_start + 1:] = 0
             toks = jnp.asarray(toks)
+            cols = []
             for t in range(gen_len):
                 pos = jnp.asarray(cap_start + t)
                 lg = self._dispatch("next_logits", self._next_logits,
                                     self.base_params, toks, lora, pos, image)
                 nxt = jnp.argmax(lg, -1)
-                toks = toks.at[:, cap_start + 1 + t].set(nxt.astype(toks.dtype))
-            gen = np.asarray(toks)[:, cap_start + 1: cap_start + 1 + gen_len]
+                cols.append(nxt)               # device array: fetch ONCE below
+                # teacher-force the token back only while it has a slot —
+                # a window ending at the sequence boundary generates its
+                # final token PAST the buffer (nothing consumes it, but an
+                # out-of-bounds .at[].set would silently drop it from the
+                # harvested window, shortening the scored caption)
+                if cap_start + 1 + t < toks.shape[1]:
+                    toks = toks.at[:, cap_start + 1 + t].set(
+                        nxt.astype(toks.dtype))
+            gen = np.asarray(jnp.stack(cols, axis=1))
 
         return _score_generated(gen, labels, loss_mask)

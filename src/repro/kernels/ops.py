@@ -14,6 +14,7 @@ import jax.numpy as jnp
 from repro.kernels import ref
 from repro.kernels.dim_agg import dim_agg_pallas
 from repro.kernels.flash_attention import flash_attention_pallas
+from repro.kernels.lora_gather_matmul import grouped_lora_matmul_pallas
 from repro.kernels.lora_matmul import lora_matmul_pallas
 
 
@@ -48,6 +49,28 @@ def fused_lora_matmul(x, w, a, b, *, scale: float = 1.0, bm: int = 256,
     y = lora_matmul_pallas(xp, wp, ap, bp, scale=scale, bm=bm_, bn=bn_, bk=bk_,
                            interpret=interpret)
     return y[:M, :N].reshape(*lead, N)
+
+
+def grouped_lora_matmul(x, w, a, b, idx, *, scale: float = 1.0, bn: int = 256,
+                        bk: int = 512, interpret: bool | None = None):
+    """Multi-tenant LoRA projection: row ``m`` uses adapter ``idx[m]`` from
+    the stacked bank (BGMV).  x: [..., K]; w: [K, N]; a: [G, r, K];
+    b: [G, N, r]; idx: i32 broadcastable to x's leading dims."""
+    if interpret is None:
+        interpret = not _on_tpu()
+    lead = x.shape[:-1]
+    K = x.shape[-1]
+    N = w.shape[1]
+    x2 = x.reshape(-1, K)
+    idx2 = jnp.broadcast_to(idx, lead).reshape(-1)
+    bn_, bk_ = min(bn, N), min(bk, K)
+    xp = _pad_to(x2, 1, bk_)
+    wp = _pad_to(_pad_to(w, 0, bk_), 1, bn_)
+    ap = _pad_to(a, 2, bk_)
+    bp = _pad_to(b, 1, bn_)
+    y = grouped_lora_matmul_pallas(xp, wp, ap, bp, idx2, scale=scale, bn=bn_,
+                                   bk=bk_, interpret=interpret)
+    return y[:, :N].reshape(*lead, N)
 
 
 def dimension_wise_aggregate(stacked, weights, scale=None, *, bn: int = 512,
@@ -149,6 +172,6 @@ def flash_attention(q, k, v, *, causal: bool = True, window: int = 0,
     return out[:, :Sq].reshape(B, H, Sq, dv).transpose(0, 2, 1, 3)
 
 
-__all__ = ["fused_lora_matmul", "dimension_wise_aggregate",
-           "fedilora_aggregate_tree", "fedbuff_aggregate_tree",
-           "flash_attention", "ref"]
+__all__ = ["fused_lora_matmul", "grouped_lora_matmul",
+           "dimension_wise_aggregate", "fedilora_aggregate_tree",
+           "fedbuff_aggregate_tree", "flash_attention", "ref"]

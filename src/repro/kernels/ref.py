@@ -14,6 +14,16 @@ def lora_matmul_ref(x, w, a, b, *, scale: float = 1.0):
     return (base + scale * delta).astype(x.dtype)
 
 
+def grouped_lora_matmul_ref(x, w, a, b, idx, *, scale: float = 1.0):
+    """Per-row adapter gather (BGMV): y[m] = x[m]@W + scale·(x[m]@A[idx[m]]ᵀ)@B[idx[m]]ᵀ.
+    x: [M, K]; w: [K, N]; a: [G, r, K]; b: [G, N, r]; idx: i32[M].  f32 accum."""
+    base = jnp.dot(x.astype(jnp.float32), w.astype(jnp.float32))
+    xa = jnp.einsum("mk,mrk->mr", x.astype(jnp.float32),
+                    a[idx].astype(jnp.float32))
+    delta = jnp.einsum("mr,mnr->mn", xa, b[idx].astype(jnp.float32))
+    return (base + scale * delta).astype(x.dtype)
+
+
 def dim_agg_ref(stacked, weights):
     """out[l,d,:] = Σ_k w[k,d]·x[k,l,d,:] in f32 (paper Eq. 5)."""
     acc = jnp.einsum("kd,kldn->ldn", weights.astype(jnp.float32),

@@ -100,6 +100,48 @@ def make_serve_step(cfg: ModelConfig, *, lora_scale: float,
     return serve_step
 
 
+def make_multi_adapter_serve_step(cfg: ModelConfig, *, lora_scale: float) -> Callable:
+    """One-token decode where EVERY BATCH ROW uses its own LoRA adapter:
+
+        ``(params, adapters[G,...], adapter_idx[B], cache, embeds[B,d],
+           pos[B]) -> (logits [B, V], cache')``
+
+    ``adapters`` is a stacked bank (leaves ``[G, ...]``, e.g. an
+    AdapterStore's device stack); row ``b`` gathers adapter
+    ``adapter_idx[b]`` — the BGMV formulation of multi-tenant LoRA serving.
+    ``pos`` is per-row (a continuous-batching engine's slots sit at
+    different sequence positions), so the decode is vmapped over the batch
+    with the cache's batch axis (axis 1 in every ``init_cache`` leaf) as
+    the vmap axis; base params are broadcast.  Mathematically identical to
+    running each row through ``make_serve_step`` with its own adapter
+    (tested).
+
+    The gather here is a jnp ``x[adapter_idx]`` tree-take that XLA fuses
+    into the vmapped projections; the TPU-native BGMV kernel that instead
+    steers the A/B DMA per row via a scalar-prefetch index operand (no
+    HBM-materialised gathered copy) is ``kernels/lora_gather_matmul.py`` —
+    exactness-tested against this formulation, not yet threaded through
+    the layer stack (see ROADMAP)."""
+
+    def multi_serve_step(params, adapters, adapter_idx, cache, embeds, pos):
+        lora_rows = jax.tree_util.tree_map(lambda x: x[adapter_idx], adapters)
+        cache_axes = jax.tree_util.tree_map(lambda _: 1, cache)
+
+        def one_row(lora, c, emb, p):
+            # vmap stripped the cache's batch axis (axis 1); decode_step
+            # wants an explicit B=1 batch dim — reinsert, decode, drop
+            c = jax.tree_util.tree_map(lambda x: x[:, None], c)
+            logits, c = T.decode_step(cfg, params, c, None, p, lora=lora,
+                                      lora_scale=lora_scale,
+                                      embeds=emb[None, None, :])
+            return logits[0], jax.tree_util.tree_map(lambda x: x[:, 0], c)
+
+        return jax.vmap(one_row, in_axes=(0, cache_axes, 0, 0),
+                        out_axes=(0, cache_axes))(lora_rows, cache, embeds, pos)
+
+    return multi_serve_step
+
+
 def make_greedy_generate(cfg: ModelConfig, *, lora_scale: float,
                          cap_start: int, gen_len: int) -> Callable:
     """KV-cached greedy caption generation:

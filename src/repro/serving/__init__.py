@@ -1,0 +1,46 @@
+"""Multi-tenant adapter serving: continuous-batching inference over the
+heterogeneous-rank personalized LoRAs that federated training produces.
+
+FediLoRA leaves every client with its OWN adapter at its OWN rank (4..32 in
+the paper's protocol) sharing one set of frozen base weights — at serving
+time that is precisely the multi-tenant LoRA problem (Punica/S-LoRA): many
+small adapters, one base model, one batch.  This package closes the loop
+from a trained ``FederatedTrainer`` population (or a ``save_federated``
+checkpoint) to answering mixed-tenant inference traffic:
+
+* :class:`~repro.serving.adapter_store.AdapterStore` — adapter residency.
+  Host master copies of every registered adapter (zero-rank-padded to the
+  bank rank, the same padding invariant the training kernels exploit), a
+  device-resident stacked hot set with pin/acquire/release and LRU paging
+  of cold adapters.
+* :class:`~repro.serving.engine.ServingEngine` /
+  :class:`~repro.serving.engine.Request` — the continuous-batching decode
+  loop: a request queue, ragged per-slot occupancy of one rectangular KV
+  cache (``init_cache`` layout, per-slot positions), admission into free
+  slots at every step, and ONE jitted multi-adapter dispatch per decode
+  step in which each batch row gathers its own adapter by bank index
+  (``repro.launch.steps.make_multi_adapter_serve_step``, a jnp gather +
+  vmap that XLA fuses; its TPU-native BGMV counterpart with a per-row
+  adapter-index scalar-prefetch operand is
+  ``repro.kernels.lora_gather_matmul`` — exactness-tested, wiring it
+  through the layer stack is a ROADMAP item).
+
+Request lifecycle: ``submit`` → queued → admitted (adapter pinned + paged
+in, prompt staged, slot cache reset) → prefill streamed through the decode
+step one position per step → greedy decode → retired (tokens fetched,
+adapter unpinned, slot freed).  Nothing crosses to the host per step;
+generated tokens are fetched only at completion, and scheduling runs
+entirely on host-side position mirrors.  Greedy outputs are token-for-token
+identical to running each request alone through
+``repro.launch.steps.make_greedy_generate`` with its client's adapter
+(tested end-to-end from a trained population).
+
+Benchmarked by ``benchmarks/bench_serving.py`` → ``BENCH_serving.json``
+(tokens/sec, request-latency percentiles, continuous- vs static-batching
+throughput, SHA-keyed history).
+"""
+
+from repro.serving.adapter_store import AdapterStore
+from repro.serving.engine import Request, ServingEngine
+
+__all__ = ["AdapterStore", "Request", "ServingEngine"]

@@ -1,0 +1,204 @@
+"""Multi-tenant adapter residency: a device-resident stacked LoRA bank with
+hot add/evict and LRU paging of cold adapters to host.
+
+Every tenant (a federated client after personalization) owns one LoRA pair
+per adapted weight.  The store keeps a *master copy of every registered
+adapter on host* (numpy, zero-rank-padded to the bank's shared rank — the
+padding invariant ``kernels/lora_matmul.py`` exploits: padded rows of A /
+cols of B are zero, so one batched compute path serves every rank mix) and a
+fixed-size device stack ``{spec: {"A": [S, L, r, in], "B": [S, L, out, r]}}``
+holding the *hot set*:
+
+* :meth:`register` adds/overwrites a tenant's adapter (host only — cold);
+* :meth:`acquire` pins an adapter into a device slot for an in-flight
+  request, paging it in (one ``.at[slot].set`` dispatch) if cold, evicting
+  the least-recently-used *unpinned* resident when the stack is full
+  (nothing is copied out — adapters are read-only at serving time, host
+  always holds the master);
+* :meth:`release` unpins; the adapter stays resident (hot) until evicted.
+
+The stack plus per-row slot indices feed
+``repro.launch.steps.make_multi_adapter_serve_step`` /
+``kernels/lora_gather_matmul.py`` — each decode row gathers its own slot.
+"""
+
+from __future__ import annotations
+
+import collections
+import os
+from typing import Any, Hashable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+Pytree = Any
+
+
+def _pad_rank(entry: dict, r_pad: int) -> dict:
+    """Zero-pad one {"A": [L, r, in], "B": [L, out, r]} pair to rank r_pad."""
+    a, b = np.asarray(entry["A"]), np.asarray(entry["B"])
+    r = a.shape[1]
+    if r > r_pad:
+        raise ValueError(f"adapter rank {r} exceeds store rank {r_pad}")
+    if r < r_pad:
+        a = np.pad(a, [(0, 0), (0, r_pad - r), (0, 0)])
+        b = np.pad(b, [(0, 0), (0, 0), (0, r_pad - r)])
+    return {"A": a, "B": b}
+
+
+class AdapterStore:
+    """LRU-paged device bank of per-tenant LoRA adapters.
+
+    ``slots``: hot-set size (the stacked bank's leading dim).  ``rank``: the
+    bank's shared padded rank r_g — every registered adapter is zero-padded
+    to it.  ``dispatch_count`` tallies ``adapter_load`` page-ins (shared
+    with a ServingEngine's counter when one is passed in).
+    """
+
+    def __init__(self, *, slots: int, rank: int,
+                 dispatch_count: collections.Counter | None = None):
+        if slots < 1:
+            raise ValueError(f"need at least one slot, got {slots}")
+        self.slots = slots
+        self.rank = rank
+        self._host: dict[Hashable, Pytree] = {}    # id -> padded np tree
+        self.ranks: dict[Hashable, int] = {}       # id -> true (unpadded) rank
+        self._slot_of: dict[Hashable, int] = {}    # resident id -> slot
+        self._id_at: list[Hashable | None] = [None] * slots
+        self._pins: collections.Counter = collections.Counter()
+        self._lru: dict[Hashable, int] = {}        # resident id -> last-use tick
+        self._tick = 0
+        self._stack: Pytree | None = None          # device [S, ...] bank
+        self.loads = 0
+        self.evictions = 0
+        self.dispatch_count = (collections.Counter()
+                               if dispatch_count is None else dispatch_count)
+
+    # ------------------------------------------------------------- registry
+    def register(self, adapter_id: Hashable, lora: Pytree, rank: int) -> None:
+        """Add (or overwrite) a tenant's adapter on host.  ``lora`` is a
+        ``{spec: {"A", "B"}}`` pytree at any materialised rank ≤ the bank
+        rank; ``rank`` is the tenant's true heterogeneous rank (kept for
+        introspection — the zero padding makes it computationally inert)."""
+        padded = {name: _pad_rank(entry, self.rank)
+                  for name, entry in lora.items()}
+        if self._host and set(padded) != set(next(iter(self._host.values()))):
+            raise ValueError("adapter spec names differ from registered ones")
+        if self._pins.get(adapter_id, 0) > 0:
+            raise RuntimeError(
+                f"adapter {adapter_id!r} is pinned by in-flight requests; "
+                "overwriting it would silently swap weights under them — "
+                "drain those requests first")
+        if adapter_id in self._slot_of:          # overwrite of a hot adapter
+            self._drop(adapter_id)
+        self._host[adapter_id] = padded
+        self.ranks[adapter_id] = int(rank)
+
+    def __contains__(self, adapter_id: Hashable) -> bool:
+        return adapter_id in self._host
+
+    def __len__(self) -> int:
+        return len(self._host)
+
+    @property
+    def resident_ids(self) -> list[Hashable]:
+        return [i for i in self._id_at if i is not None]
+
+    @property
+    def stack(self) -> Pytree:
+        """The device-resident ``[slots, ...]`` bank (built lazily)."""
+        if self._stack is None:
+            if not self._host:
+                raise RuntimeError("no adapters registered")
+            proto = next(iter(self._host.values()))
+            self._stack = jax.tree_util.tree_map(
+                lambda x: jnp.zeros((self.slots,) + x.shape, x.dtype), proto)
+        return self._stack
+
+    # ------------------------------------------------------------ residency
+    def _drop(self, adapter_id: Hashable) -> None:
+        slot = self._slot_of.pop(adapter_id)
+        self._id_at[slot] = None
+        self._lru.pop(adapter_id, None)
+        self._pins.pop(adapter_id, None)
+
+    def _find_slot(self) -> int:
+        for s, occupant in enumerate(self._id_at):
+            if occupant is None:
+                return s
+        # evict the least-recently-used unpinned resident
+        victims = [i for i in self._slot_of if self._pins[i] == 0]
+        if not victims:
+            raise RuntimeError(
+                f"all {self.slots} adapter slots are pinned by in-flight "
+                "requests; release one or grow the store")
+        victim = min(victims, key=lambda i: self._lru[i])
+        slot = self._slot_of[victim]
+        self._drop(victim)
+        self.evictions += 1
+        return slot
+
+    def acquire(self, adapter_id: Hashable) -> int:
+        """Pin ``adapter_id`` into the device bank; returns its slot index.
+        Pages the adapter in (one scatter dispatch) when cold."""
+        if adapter_id not in self._host:
+            raise KeyError(f"unknown adapter {adapter_id!r}")
+        self._tick += 1
+        if adapter_id in self._slot_of:
+            slot = self._slot_of[adapter_id]
+        else:
+            slot = self._find_slot()
+            self.dispatch_count["adapter_load"] += 1
+            self._stack = jax.tree_util.tree_map(
+                lambda s, h: s.at[slot].set(jnp.asarray(h)),
+                self.stack, self._host[adapter_id])
+            self._slot_of[adapter_id] = slot
+            self._id_at[slot] = adapter_id
+            self.loads += 1
+        self._lru[adapter_id] = self._tick
+        self._pins[adapter_id] += 1
+        return slot
+
+    def release(self, adapter_id: Hashable) -> None:
+        """Unpin (the adapter stays hot until LRU-evicted)."""
+        if self._pins.get(adapter_id, 0) <= 0:
+            raise RuntimeError(f"adapter {adapter_id!r} is not pinned")
+        self._pins[adapter_id] -= 1
+
+    # ---------------------------------------------------------- constructors
+    @classmethod
+    def from_trainer(cls, trainer, *, slots: int | None = None,
+                     dispatch_count=None) -> "AdapterStore":
+        """Register every personalized client adapter of a live
+        ``FederatedTrainer`` (ids ``"client0"``, ``"client1"``, ...)."""
+        adapters = trainer.export_adapters()
+        store = cls(slots=slots or len(adapters), rank=trainer.lcfg.rank,
+                    dispatch_count=dispatch_count)
+        for cid, (lora, rank) in adapters.items():
+            store.register(cid, lora, rank)
+        return store
+
+    @classmethod
+    def from_checkpoint(cls, dirpath: str, *, slots: int | None = None,
+                        dispatch_count=None) -> "AdapterStore":
+        """Register the per-client adapters of a ``save_federated``
+        checkpoint directory."""
+        import json
+
+        from repro.checkpoint import load_pytree
+
+        with open(os.path.join(dirpath, "meta.json")) as f:
+            meta = json.load(f)
+        ranks = meta["ranks"]
+        loras = [load_pytree(os.path.join(dirpath, f"client_{k}.npz"))
+                 for k in range(len(ranks))]
+        # bank rank = the checkpointed arrays' materialised padding (r_g),
+        # NOT max(meta ranks): hetlora self-pruning can shrink every true
+        # rank below the padding the arrays are stored at
+        r_pad = int(next(iter(loras[0].values()))["A"].shape[1])
+        store = cls(slots=slots or len(ranks), rank=r_pad,
+                    dispatch_count=dispatch_count)
+        for k, rank in enumerate(ranks):
+            store.register(f"client{k}", loras[k], rank)
+        return store

@@ -1,0 +1,346 @@
+"""Continuous-batching inference engine over heterogeneous-rank adapters.
+
+Execution model
+---------------
+
+The engine owns ``max_slots`` *slots*.  A slot is one row of every batched
+buffer: one row of the rectangular KV cache (``init_cache`` layout, batch
+axis 1 — per-slot occupancy is *ragged*: each slot sits at its own ``pos``
+and everything past it is masked), one row of the prompt/vision staging
+buffers, one adapter-bank index.  The decode loop is:
+
+1. **admit** — free slots are filled from the request queue *every step*
+   (continuous batching), not only when the whole batch drains.  Admission
+   pins the request's adapter in the :class:`~repro.serving.adapter_store.
+   AdapterStore` (paging it in if cold), stages the prompt tokens plus the
+   request's *projected* vision-prefix vectors (the ``vision_proj`` matmul
+   runs once here, not per step) into the slot's device buffers and zeroes
+   the slot's cache rows — one small jitted scatter per admitted request
+   (``serve_admit``).
+2. **step** — ONE jitted dispatch (``serve_step``) advances every occupied
+   slot by one token.  Inside the program each slot muxes its own input:
+   vision-prefix vector while ``pos < n_prefix``, teacher-forced prompt
+   token while ``pos < plen``, else the slot's last generated token; the
+   batched multi-adapter decode
+   (``repro.launch.steps.make_multi_adapter_serve_step``) gathers each
+   row's adapter from the store's stacked bank by index (BGMV) and runs the
+   vmapped KV-cached decode at per-row positions; greedy next-tokens are
+   written into the slot's generation buffer in-program.  Prefill is
+   *streamed through the decode step* (one position per step, exactly like
+   ``make_greedy_generate``'s prefill scan), so a step never waits for a
+   separate prefill dispatch and new requests overlap old ones' decode.
+3. **retire** — the host tracks every slot's position mirror (positions
+   advance deterministically, so scheduling needs NO device fetch); slots
+   whose request finished are fetched (one gather for all completions of
+   the step), their adapters unpinned, and the slots returned to the pool.
+
+What is fetched when: nothing per step — generated tokens cross to host
+only when a request completes.  ``dispatch_count`` tallies ``serve_step``
+(exactly one per decode step — asserted by tests), ``serve_admit``,
+``adapter_load`` and ``fetch``.
+
+Static-batching mode (``continuous=False``) admits only when ALL slots are
+free — the classic serve-a-batch-then-drain baseline that
+``benchmarks/bench_serving.py`` measures continuous batching against.
+"""
+
+from __future__ import annotations
+
+import collections
+import dataclasses
+import itertools
+import time
+import warnings
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.launch.steps import make_multi_adapter_serve_step
+from repro.models import transformer as T
+from repro.models.config import ModelConfig
+
+from repro.serving.adapter_store import AdapterStore
+
+Pytree = Any
+_UIDS = itertools.count()
+
+
+@dataclasses.dataclass
+class Request:
+    """One inference request: greedy-decode ``gen_len`` tokens after the
+    teacher-forced ``prompt_tokens`` (and, for prefix-VLMs, the projected
+    ``vision`` patches), through adapter ``adapter_id``."""
+
+    adapter_id: Any
+    prompt_tokens: np.ndarray          # i32 [P_t]
+    gen_len: int
+    vision: np.ndarray | None = None   # f32 [P, Dv]
+    uid: int = dataclasses.field(default_factory=lambda: next(_UIDS))
+    submitted_at: float = 0.0
+
+
+class ServingEngine:
+    """Multi-tenant continuous-batching decode over an :class:`AdapterStore`.
+
+    Supports decoder stacks whose cache rows are per-slot resettable
+    (self-attention KV, sliding-window rings, Mamba states) — i.e. the
+    ``attn`` / ``attn_local`` / ``mamba`` sublayers; precomputed
+    cross-attention caches and the enc-dec family are rejected at
+    construction (their K/V depend on per-request encoder runs, which the
+    slot-reset scatter cannot rebuild).
+    """
+
+    def __init__(self, cfg: ModelConfig, params: Pytree, store: AdapterStore,
+                 *, lora_scale: float, max_slots: int = 8,
+                 max_prompt: int = 32, max_gen: int = 32,
+                 use_vision: bool | None = None, continuous: bool = True):
+        bad = {k for k in cfg.pattern if k not in ("attn", "attn_local",
+                                                   "mamba")}
+        if bad or cfg.family == "encdec":
+            raise NotImplementedError(
+                f"serving engine supports attn/attn_local/mamba stacks, got "
+                f"pattern {cfg.pattern} family {cfg.family}")
+        self.cfg = cfg
+        self.params = params
+        self.store = store
+        self.lora_scale = lora_scale
+        self.max_slots = max_slots
+        self.max_prompt = max_prompt
+        self.max_gen = max_gen
+        self.continuous = continuous
+        if use_vision is None:
+            use_vision = cfg.family == "vlm" and cfg.vision_mode == "prefix"
+        self._n_prefix = cfg.num_vision_tokens if use_vision else 0
+        self.cache_len = self._n_prefix + max_prompt + max_gen
+
+        B = max_slots
+        self._cache = T.init_cache(cfg, params, B, self.cache_len)
+        state = {
+            "ptoks": jnp.zeros((B, max_prompt), jnp.int32),
+            "aidx": jnp.zeros((B,), jnp.int32),
+            "pos": jnp.zeros((B,), jnp.int32),
+            "plen": jnp.zeros((B,), jnp.int32),
+            "tlen": jnp.zeros((B,), jnp.int32),   # 0 = slot free/inactive
+            "last": jnp.zeros((B,), jnp.int32),
+            "gen": jnp.zeros((B, max_gen), jnp.int32),
+        }
+        if self._n_prefix:
+            # PROJECTED prefix vectors [P, d_model], not raw patches: the
+            # projection runs once per request at admit time, not per step
+            state["vis"] = jnp.zeros(
+                (B, cfg.num_vision_tokens, cfg.d_model), jnp.dtype(cfg.dtype))
+        self._state = state
+        self._step_fn = jax.jit(self._build_step(), donate_argnums=(2, 3))
+        self._admit_fn = jax.jit(self._build_admit(), donate_argnums=(1, 2))
+
+        # host mirrors (scheduling never fetches device state)
+        self._requests: list[Request | None] = [None] * B
+        self._pos_h = np.zeros((B,), np.int64)
+        self._tlen_h = np.zeros((B,), np.int64)
+        self.queue: collections.deque[Request] = collections.deque()
+        self.completed: list[dict] = []
+        self.steps = 0
+        self.dispatch_count: collections.Counter = store.dispatch_count
+
+    # ------------------------------------------------------------ step fns
+    def _build_step(self):
+        cfg, n_prefix = self.cfg, self._n_prefix
+        Sp, max_gen = self.max_prompt, self.max_gen
+        serve = make_multi_adapter_serve_step(cfg, lora_scale=self.lora_scale)
+
+        def serve_step(params, adapters, state, cache):
+            pos, plen, tlen = state["pos"], state["plen"], state["tlen"]
+            last = state["last"]
+            active = pos < tlen
+            # ---- per-slot input mux: prefix vector | prompt token | last --
+            tok_pos = jnp.clip(pos - n_prefix, 0, Sp - 1)
+            prompt_tok = jnp.take_along_axis(state["ptoks"], tok_pos[:, None],
+                                             axis=1)[:, 0]
+            tok = jnp.where(pos < plen, prompt_tok, last)
+            embeds = params["embed"][tok]                       # [B, d]
+            if n_prefix:
+                rows = jnp.arange(pos.shape[0])
+                pre = state["vis"][rows, jnp.clip(pos, 0, n_prefix - 1)]
+                embeds = jnp.where((pos < n_prefix)[:, None],
+                                   pre.astype(embeds.dtype), embeds)
+            # ---- batched multi-adapter decode (per-row adapter + pos) -----
+            logits, cache = serve(params, adapters, state["aidx"], cache,
+                                  embeds, pos)
+            nxt = jnp.argmax(logits, -1).astype(jnp.int32)
+            # ---- greedy emit into the slot's generation buffer ------------
+            g = pos - (plen - 1)                # generated-token index
+            ok = active & (g >= 0) & (g < max_gen)
+            rows = jnp.arange(pos.shape[0])
+            cg = jnp.clip(g, 0, max_gen - 1)
+            gen = state["gen"].at[rows, cg].set(
+                jnp.where(ok, nxt, state["gen"][rows, cg]))
+            last = jnp.where(ok, nxt, last)
+            pos = pos + active.astype(pos.dtype)
+            return dict(state, pos=pos, last=last, gen=gen), cache
+
+        return serve_step
+
+    def _build_admit(self):
+        vlm = bool(self._n_prefix)
+
+        def admit(params, state, cache, slot, ptoks, vis, aidx, plen, tlen):
+            st = dict(state)
+            st["ptoks"] = state["ptoks"].at[slot].set(ptoks)
+            if vlm:
+                # project the prefix ONCE here (exactly what
+                # make_greedy_generate does at prefill) — the decode step
+                # then just gathers the slot's precomputed [P, d] rows
+                dt = state["vis"].dtype
+                pre = vis.astype(dt) @ params["vision_proj"].astype(dt)
+                st["vis"] = state["vis"].at[slot].set(pre)
+            st["aidx"] = state["aidx"].at[slot].set(aidx)
+            st["pos"] = state["pos"].at[slot].set(0)
+            st["plen"] = state["plen"].at[slot].set(plen)
+            st["tlen"] = state["tlen"].at[slot].set(tlen)
+            st["last"] = state["last"].at[slot].set(0)
+            st["gen"] = state["gen"].at[slot].set(0)
+            # reset the slot's ragged cache row (batch axis 1 in every leaf):
+            # zero state is exactly a fresh init_cache row for KV and Mamba
+            cache = jax.tree_util.tree_map(
+                lambda c: c.at[:, slot].set(jnp.zeros((), c.dtype)), cache)
+            return st, cache
+
+        return admit
+
+    # ------------------------------------------------------------ scheduling
+    @property
+    def busy_slots(self) -> list[int]:
+        return [s for s in range(self.max_slots)
+                if self._requests[s] is not None]
+
+    def submit(self, req: Request) -> int:
+        if not 1 <= len(req.prompt_tokens) <= self.max_prompt:
+            raise ValueError(
+                f"prompt of {len(req.prompt_tokens)} tokens outside "
+                f"[1, max_prompt={self.max_prompt}] — the first generated "
+                "token comes from the last prompt position, so an empty "
+                "prompt would condition on a fabricated token 0 and never "
+                "fill gen[0]")
+        if not 1 <= req.gen_len <= self.max_gen:
+            raise ValueError(f"gen_len {req.gen_len} outside "
+                             f"[1, max_gen={self.max_gen}]")
+        if req.adapter_id not in self.store:
+            raise KeyError(f"unknown adapter {req.adapter_id!r}")
+        if self._n_prefix:
+            # reject bad vision HERE, not as an opaque TypeError mid-admission
+            # (by which point the adapter would already be pinned)
+            want = (self.cfg.num_vision_tokens, self.cfg.vision_dim)
+            got = None if req.vision is None else np.shape(req.vision)
+            if got != want:
+                raise ValueError(
+                    f"request {req.uid}: vision-prefix engine needs vision "
+                    f"patches of shape {want}, got {got}")
+        req.submitted_at = time.perf_counter()
+        self.queue.append(req)
+        return req.uid
+
+    def _admit_pending(self) -> int:
+        busy = self.busy_slots
+        if not self.continuous and busy:
+            return 0            # static batching: wait for the batch to drain
+        admitted = 0
+        free = [s for s in range(self.max_slots) if self._requests[s] is None]
+        while self.queue and free:
+            req = self.queue[0]
+            try:
+                bank_slot = self.store.acquire(req.adapter_id)
+            except RuntimeError:
+                break            # adapter bank exhausted by pinned tenants
+            self.queue.popleft()
+            slot = free.pop(0)
+            n_p = len(req.prompt_tokens)
+            ptoks = np.zeros((self.max_prompt,), np.int32)
+            ptoks[:n_p] = np.asarray(req.prompt_tokens, np.int32)
+            plen = self._n_prefix + n_p
+            tlen = plen + req.gen_len - 1      # last fed position + 1
+            vis = jnp.zeros((0,), jnp.float32)
+            if self._n_prefix:
+                vis = jnp.asarray(req.vision, jnp.float32)
+            self.dispatch_count["serve_admit"] += 1
+            self._state, self._cache = self._admit_fn(
+                self.params, self._state, self._cache,
+                jnp.asarray(slot, jnp.int32), jnp.asarray(ptoks), vis,
+                jnp.asarray(bank_slot, jnp.int32),
+                jnp.asarray(plen, jnp.int32), jnp.asarray(tlen, jnp.int32))
+            self._requests[slot] = req
+            self._pos_h[slot] = 0
+            self._tlen_h[slot] = tlen
+            admitted += 1
+        return admitted
+
+    def _retire_finished(self) -> list[dict]:
+        done = [s for s in self.busy_slots if self._pos_h[s] >= self._tlen_h[s]]
+        if not done:
+            return []
+        self.dispatch_count["fetch"] += 1
+        gen_rows = jax.device_get(self._state["gen"][np.asarray(done)])
+        out = []
+        now = time.perf_counter()
+        for i, s in enumerate(done):
+            req = self._requests[s]
+            self.store.release(req.adapter_id)
+            self._requests[s] = None
+            self._tlen_h[s] = 0
+            out.append({"uid": req.uid, "adapter_id": req.adapter_id,
+                        "tokens": np.asarray(gen_rows[i][:req.gen_len]),
+                        "latency_s": now - req.submitted_at})
+        self.completed.extend(out)
+        return out
+
+    # ------------------------------------------------------------ driving
+    def step(self) -> list[dict]:
+        """Admit → one fused decode dispatch → retire.  Returns the requests
+        that completed this step."""
+        self._admit_pending()
+        busy = self.busy_slots
+        if not busy:
+            return []
+        self.dispatch_count["serve_step"] += 1
+        self.steps += 1
+        with warnings.catch_warnings():
+            warnings.filterwarnings(
+                "ignore", message="Some donated buffers were not usable")
+            self._state, self._cache = self._step_fn(
+                self.params, self.store.stack, self._state, self._cache)
+        for s in busy:
+            self._pos_h[s] += 1
+        return self._retire_finished()
+
+    def run(self, requests=None, max_steps: int | None = None) -> list[dict]:
+        """Submit ``requests`` (optional) and step until queue and slots are
+        drained; returns the completion records in completion order.
+        ``max_steps`` bounds THIS call (``self.steps`` is engine-lifetime)."""
+        for r in requests or ():
+            self.submit(r)
+        n0 = len(self.completed)
+        steps0 = self.steps
+        while self.queue or self.busy_slots:
+            self.step()
+            if max_steps is not None and self.steps - steps0 >= max_steps:
+                raise RuntimeError(f"exceeded max_steps={max_steps} with "
+                                   f"{len(self.queue)} queued requests")
+        return self.completed[n0:]
+
+    def reset(self) -> None:
+        """Return the engine to empty (no queued/busy requests, zeroed slot
+        state, fresh counters) while KEEPING the compiled step/admit
+        functions — benchmark reps and repeated workloads pay compilation
+        once.  In-flight adapters are unpinned; the store's residency (hot
+        set, LRU order) is deliberately left as-is."""
+        for s in self.busy_slots:
+            self.store.release(self._requests[s].adapter_id)
+            self._requests[s] = None
+        self.queue.clear()
+        self.completed = []
+        self._state = jax.tree_util.tree_map(jnp.zeros_like, self._state)
+        self._pos_h[:] = 0
+        self._tlen_h[:] = 0
+        self.steps = 0
+        self.dispatch_count.clear()

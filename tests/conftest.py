@@ -10,7 +10,8 @@ try:
     import hypothesis  # noqa: F401
 except ImportError:
     collect_ignore = ["test_aggregation.py", "test_editing.py",
-                      "test_kernels.py", "test_lora.py"]
+                      "test_kernels.py", "test_lora.py",
+                      "test_serving_kernels.py"]
 
 # Tests run on the single real CPU device; only the dry-run subprocess tests
 # request fake devices (via their own spawned-process XLA_FLAGS).

@@ -52,6 +52,38 @@ def test_bench_quick_cli_lines(monkeypatch):
     assert "fedround/dispatch/sync/population_eval,0.0,1" in lines
 
 
+@pytest.mark.slow
+def test_bench_serving_quick_dispatch_counts():
+    """Serving loop dispatch accounting: exactly one serve_step per decode
+    step, one admit per request, paging + fetches bounded — and continuous
+    batching never needs more steps than static on the same request set."""
+    from benchmarks.bench_serving import N_REQUESTS, quick_check
+
+    counts = quick_check()
+    for mode in ("continuous", "static"):
+        rec = counts[mode]
+        assert rec["requests"] == N_REQUESTS
+        assert rec["dispatch"]["serve_step"] == rec["steps"]
+        assert rec["dispatch"]["serve_admit"] == N_REQUESTS
+        assert rec["dispatch"]["fetch"] <= N_REQUESTS
+        assert set(rec["dispatch"]) <= {"serve_step", "serve_admit",
+                                        "adapter_load", "fetch"}
+    assert counts["continuous"]["steps"] < counts["static"]["steps"]
+
+
+def test_bench_serving_quick_cli_lines(monkeypatch):
+    """--quick CSV formatting (quick_check stubbed — no compile cost)."""
+    import benchmarks.bench_serving as B
+
+    monkeypatch.setattr(B, "quick_check", lambda: {
+        "continuous": {"steps": 5, "requests": 2,
+                       "dispatch": {"serve_step": 5, "serve_admit": 2}}})
+    lines = B.main(["--quick"])
+    assert "serving/dispatch/continuous/steps,0.0,5" in lines
+    assert "serving/dispatch/continuous/serve_step,0.0,5" in lines
+    assert "serving/dispatch/continuous/serve_admit,0.0,2" in lines
+
+
 def test_bench_history_appends(tmp_path, monkeypatch):
     """BENCH_fedround.json accumulates a history entry per run (and
     migrates a pre-history artifact) instead of overwriting."""

@@ -410,6 +410,120 @@ def test_generation_scores_rejects_nonuniform_loss_mask():
         tr.generation_scores(tr.server.global_lora, data, n=4)
 
 
+def test_mask_decode_bounds_rejects_all_zero_mask():
+    """A corpus with NO supervised positions has no decode window — the
+    loud-failure path must catch it instead of emitting a bogus token at
+    position 0 (all-zero rows are uniform, so the uniformity check alone
+    would let them through)."""
+    from repro.federated.runtime import _mask_decode_bounds
+
+    with pytest.raises(ValueError, match="no supervised positions"):
+        _mask_decode_bounds(np.zeros((4, 16), np.float32))
+    tr = _mk("fedilora")
+    data = {k: np.asarray(v[:4]).copy() for k, v in tr.global_test.items()}
+    data["loss_mask"][:] = 0.0
+    with pytest.raises(ValueError, match="no supervised positions"):
+        tr.generation_scores(tr.server.global_lora, data, n=4)
+
+
+def test_mask_decode_bounds_single_zero_row_is_nonuniform():
+    """One all-zero row inside an otherwise supervised corpus is a
+    uniformity violation (its window differs from row 0), not a silent
+    skip."""
+    tr = _mk("fedilora")
+    data = {k: np.asarray(v[:4]).copy() for k, v in tr.global_test.items()}
+    data["loss_mask"][2] = 0.0
+    with pytest.raises(ValueError, match="not uniform across rows"):
+        tr.generation_scores(tr.server.global_lora, data, n=4)
+
+
+def test_mask_at_sequence_boundary_decodes_both_paths():
+    """A supervised span running to the LAST sequence position must decode
+    (cached and uncached agree) — the final generated token has no
+    teacher-forcing slot to scatter into, which must not corrupt either
+    path."""
+    from repro.federated.runtime import _mask_decode_bounds
+
+    tr = _mk("fedilora")
+    tr.run_round()
+    S = np.asarray(tr.global_test["tokens"]).shape[1]
+    n, cap_start = 4, 5
+    rng = np.random.default_rng(3)
+    data = {
+        "tokens": rng.integers(4, 64, (n, S)).astype(np.int64),
+        "labels": rng.integers(4, 64, (n, S)).astype(np.int64),
+        "loss_mask": np.zeros((n, S), np.float32),
+        "image": np.asarray(tr.global_test["image"][:n]),
+    }
+    data["loss_mask"][:, cap_start:] = 1.0       # window ends AT the boundary
+    cs, gl = _mask_decode_bounds(data["loss_mask"])
+    assert (cs, gl) == (cap_start, S - cap_start)
+    s_cached = tr.generation_scores(tr.server.global_lora, data, n=n,
+                                    cached=True)
+    s_ref = tr.generation_scores(tr.server.global_lora, data, n=n,
+                                 cached=False)
+    assert s_cached == s_ref
+
+
+# ---------------------------------------------------------------------------
+# measured per-client step times → derived async delays (satellite)
+# ---------------------------------------------------------------------------
+
+def test_reference_round_records_per_client_step_ema():
+    tr = _mk("fedilora", measure_delays=True)
+    assert not tr._ema_seen.any()
+    tr.run_round_reference()
+    # the very first local_train measurement is compile-inclusive and
+    # discarded; the round's remaining clients are recorded
+    assert tr._ema_seen.sum() == tr.fcfg.num_clients - 1
+    tr.run_round_reference()
+    assert tr._ema_seen.all()                    # sample_rate 1.0: all seen
+    assert (tr.client_step_ema > 0).all()
+    # compile time (seconds) never seeded the EMA: everything stays within
+    # a plausible steady-state band of the fastest client
+    assert tr.client_step_ema.max() < 50 * tr.client_step_ema.min()
+
+
+def test_derived_delays_scale_with_measured_ema():
+    tr = _mk("fedbuff", measure_delays=True)
+    assert tr.derived_async_delays() == (0, 0, 0)     # nothing measured yet
+    tr.client_step_ema[:] = [0.1, 0.31, 0.1]
+    tr._ema_seen[:] = True
+    assert tr.derived_async_delays() == (0, 2, 0)     # 3.1× slower → 2 ticks
+
+    # partially measured: unmeasured clients default to no delay
+    tr._ema_seen[:] = [True, True, False]
+    assert tr.derived_async_delays() == (0, 2, 0)
+
+
+def test_async_uses_derived_delays_when_measuring():
+    """With measure_delays on and no explicit async_delays, the buffered
+    timeline runs off the EMA-derived delays: a client measured 3× slower
+    retires late and its deltas carry positive staleness."""
+    ta = _mk("fedbuff", buffer_size=2, measure_delays=True)
+    ta.client_step_ema[:] = [0.1, 0.3, 0.1]           # client 1 → delay 2
+    ta._ema_seen[:] = True
+    stal, merges = [], 0
+    for _ in range(6):
+        rec = ta.run_round_async()
+        stal.extend(rec["staleness"])
+        merges += rec["merges"]
+    assert merges > 0
+    assert any(s > 0 for s in stal), stal
+    # the uniform cohort wall clock must NOT have washed out the
+    # individually measured heterogeneity (only-unseen attribution)
+    np.testing.assert_array_equal(ta.client_step_ema, [0.1, 0.3, 0.1])
+
+
+def test_explicit_async_delays_override_measured():
+    ta = _mk("fedbuff", async_delays=(0, 0, 0), measure_delays=True)
+    ta.client_step_ema[:] = [0.1, 9.9, 0.1]
+    ta._ema_seen[:] = True
+    rec = ta.run_round_async()
+    # explicit zero delays win: the whole cohort retires immediately
+    assert rec["merges"] == 1 and rec["buffer_fill"] == 0
+
+
 # ---------------------------------------------------------------------------
 # KV-cached evaluation decode (satellite)
 # ---------------------------------------------------------------------------

@@ -63,6 +63,69 @@ def test_checkpoint_roundtrip(tmp_path):
     np.testing.assert_array_equal(np.asarray(back["c"]), np.asarray(tree["c"]))
 
 
+def test_federated_checkpoint_bit_identical_after_fused_and_async(tmp_path):
+    """save/load through a trainer that ran fused rounds, a pipelined round
+    AND buffered-async ticks must restore bit-identical global and
+    personalized evaluation metrics in a fresh trainer (stacked adapter
+    state, server state and async timeline counters all round-trip)."""
+    from repro.checkpoint import load_federated, save_federated
+    from repro.configs import get_config
+    from repro.data.synthetic import SyntheticTaskConfig, make_federated_datasets
+    from repro.federated import FederatedConfig, FederatedTrainer
+
+    tcfg = SyntheticTaskConfig(caption_len=8)
+    clients, gtest = make_federated_datasets(tcfg, 3, np.array([40, 40, 40]))
+    fcfg = FederatedConfig(num_clients=3, sample_rate=1.0, ranks=(4, 8, 16),
+                           local_steps=2, batch_size=4, aggregator="fedbuff")
+
+    def mk():
+        return FederatedTrainer(get_config("fedbench-tiny"), fcfg,
+                                OptimizerConfig(peak_lr=3e-3, total_steps=30),
+                                clients, clients, gtest, seed=0)
+
+    tr = mk()
+    tr.run_round()                      # fused
+    tr.run_round_pipelined()            # leaves a pending fetch
+    tr.run_round_async()                # zero delays: buffer drains in-tick
+    d = os.path.join(tmp_path, "fed")
+    save_federated(d, tr)               # must auto-flush the pending round
+    assert tr._pending is None
+    ev_g = tr.evaluate_global(generate=True, n=8)
+    ev_p = tr.evaluate_personalized(generate=True, n=8)
+
+    tr2 = mk()
+    load_federated(d, tr2)
+    assert tr2.server.round == tr.server.round
+    assert tr2._global_version == tr._global_version
+    assert tr2._async_tick == tr._async_tick
+    assert list(tr2.client_ranks) == list(tr.client_ranks)
+    assert tr2.evaluate_global(generate=True, n=8) == ev_g
+    assert tr2.evaluate_personalized(generate=True, n=8) == ev_p
+    # the restored timeline keeps advancing: an async tick after reload must
+    # not trip over stale in-flight/buffer state
+    rec = tr2.run_round_async()
+    assert rec["merges"] == 1
+
+
+def test_save_federated_rejects_unmerged_async_state(tmp_path):
+    from repro.checkpoint import save_federated
+    from repro.configs import get_config
+    from repro.data.synthetic import SyntheticTaskConfig, make_federated_datasets
+    from repro.federated import FederatedConfig, FederatedTrainer
+
+    tcfg = SyntheticTaskConfig(caption_len=8)
+    clients, gtest = make_federated_datasets(tcfg, 3, np.array([24, 24, 24]))
+    fcfg = FederatedConfig(num_clients=3, sample_rate=1.0, ranks=(4, 8, 8),
+                           local_steps=1, batch_size=4, aggregator="fedbuff",
+                           async_delays=(0, 3, 0), buffer_size=2)
+    tr = FederatedTrainer(get_config("fedbench-tiny"), fcfg,
+                          OptimizerConfig(peak_lr=3e-3, total_steps=10),
+                          clients, clients, gtest, seed=0)
+    tr.run_round_async()                # client 1 still in flight
+    with pytest.raises(ValueError, match="un-merged"):
+        save_federated(os.path.join(tmp_path, "fed"), tr)
+
+
 def test_federated_checkpoint_roundtrip(tmp_path):
     from repro.checkpoint import load_federated, save_federated
     from repro.configs import get_config

@@ -1,0 +1,435 @@
+"""Multi-tenant adapter serving: end-to-end token equality with the
+per-client cached greedy decode, one-dispatch-per-decode-step accounting,
+continuous- vs static-batching scheduling, AdapterStore LRU paging and the
+checkpoint → store path."""
+
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint import save_federated
+from repro.configs import get_config, get_reduced_config
+from repro.core.editing import EditConfig
+from repro.core.lora import LoRAConfig, init_lora_params, mask_lora_params
+from repro.data.synthetic import SyntheticTaskConfig, make_federated_datasets
+from repro.federated import FederatedConfig, FederatedTrainer
+from repro.kernels.ops import grouped_lora_matmul
+from repro.kernels.ref import grouped_lora_matmul_ref, lora_matmul_ref
+from repro.launch.steps import (make_multi_adapter_serve_step,
+                                make_serve_step)
+from repro.models import transformer as T
+from repro.optim import OptimizerConfig
+from repro.serving import AdapterStore, Request, ServingEngine
+
+pytestmark = pytest.mark.serving
+
+
+@pytest.fixture(scope="module")
+def population():
+    """One trained round over 3 clients with DISTINCT heterogeneous ranks."""
+    tcfg = SyntheticTaskConfig(caption_len=8)
+    clients, gtest = make_federated_datasets(tcfg, 3, np.array([40, 50, 60]))
+    fcfg = FederatedConfig(num_clients=3, sample_rate=1.0, ranks=(4, 8, 16),
+                           local_steps=2, batch_size=4, aggregator="fedilora",
+                           edit=EditConfig(enabled=True))
+    tr = FederatedTrainer(get_config("fedbench-tiny"), fcfg,
+                          OptimizerConfig(peak_lr=3e-3, total_steps=50),
+                          clients, clients, gtest, seed=0)
+    tr.run_round()
+    lm = np.asarray(clients[0]["loss_mask"])
+    cap_start = int(np.argmax(lm[0] > 0))
+    gen_len = int(lm[0].sum())
+    return tr, clients, cap_start, gen_len
+
+
+def _mixed_requests(clients, cap_start, gen_len, per_client=2):
+    reqs = []
+    for i in range(per_client):
+        for k in range(len(clients)):     # interleave tenants
+            reqs.append(Request(
+                adapter_id=f"client{k}",
+                prompt_tokens=np.asarray(clients[k]["tokens"][i][:cap_start + 1]),
+                gen_len=gen_len,
+                vision=np.asarray(clients[k]["image"][i])))
+    return reqs
+
+
+def _engine(tr, gen_len, *, slots=4, continuous=True, store_slots=None):
+    store = AdapterStore.from_trainer(tr, slots=store_slots)
+    return ServingEngine(tr.mcfg, tr.base_params, store,
+                         lora_scale=tr.lora_scale, max_slots=slots,
+                         max_prompt=8, max_gen=gen_len, continuous=continuous)
+
+
+# ---------------------------------------------------------------------------
+# end-to-end: mixed batch == per-client make_greedy_generate (tentpole)
+# ---------------------------------------------------------------------------
+
+def test_serving_matches_per_client_generate(population):
+    """A mixed batch over ≥3 adapters of distinct ranks must produce, per
+    request, exactly the tokens of that client's single-tenant KV-cached
+    greedy decode."""
+    tr, clients, cap_start, gen_len = population
+    eng = _engine(tr, gen_len)
+    assert len({eng.store.ranks[f"client{k}"] for k in range(3)}) == 3
+    done = eng.run(_mixed_requests(clients, cap_start, gen_len))
+    assert len(done) == 6
+    for k in range(3):
+        ref = tr._generate_cached(
+            tr.clients[k].lora, np.asarray(clients[k]["tokens"][:2]),
+            jnp.asarray(clients[k]["image"][:2]), cap_start, gen_len)
+        got = np.stack(sorted(
+            (d["tokens"] for d in done if d["adapter_id"] == f"client{k}"),
+            key=lambda t: t.tolist()))
+        ref = np.asarray(ref)[np.lexsort(np.asarray(ref).T[::-1])]
+        np.testing.assert_array_equal(got, ref)
+
+
+def test_serving_one_dispatch_per_decode_step(population):
+    """The decode loop issues exactly ONE jitted serve_step per engine step
+    — admissions and completion fetches are separate, bounded by the
+    request count, and nothing else dispatches."""
+    tr, clients, cap_start, gen_len = population
+    eng = _engine(tr, gen_len, slots=2)
+    reqs = _mixed_requests(clients, cap_start, gen_len)
+    eng.run(reqs)
+    dc = eng.dispatch_count
+    assert dc["serve_step"] == eng.steps
+    assert dc["serve_admit"] == len(reqs)
+    assert dc["adapter_load"] <= len(reqs)
+    assert dc["fetch"] <= len(reqs)
+    assert set(dc) <= {"serve_step", "serve_admit", "adapter_load", "fetch"}
+
+
+def test_continuous_needs_no_more_steps_than_static(population):
+    """With heterogeneous generation lengths, continuous batching refills
+    freed slots mid-flight and must finish the same request set in no more
+    (here: strictly fewer) steps than drain-then-refill static batching —
+    with identical per-request tokens."""
+    tr, clients, cap_start, gen_len = population
+    lens = [gen_len, 2, gen_len, 2]     # long/short mix → static idles slots
+
+    def reqs():
+        out = []
+        for i in range(8):
+            k = i % 3
+            out.append(Request(
+                adapter_id=f"client{k}",
+                prompt_tokens=np.asarray(
+                    clients[k]["tokens"][i % 4][:cap_start + 1]),
+                gen_len=lens[i % len(lens)],
+                vision=np.asarray(clients[k]["image"][i % 4])))
+        return out
+
+    ec = _engine(tr, gen_len, slots=2, continuous=True)
+    es = _engine(tr, gen_len, slots=2, continuous=False)
+    # uids increase in submission order, so sorting by uid aligns the two
+    # runs request-for-request
+    done_c = sorted(ec.run(reqs()), key=lambda d: d["uid"])
+    done_s = sorted(es.run(reqs()), key=lambda d: d["uid"])
+    assert ec.steps < es.steps
+    for a, b in zip(done_c, done_s):
+        assert a["adapter_id"] == b["adapter_id"]
+        np.testing.assert_array_equal(a["tokens"], b["tokens"])
+
+
+def test_serving_from_checkpoint_matches_live_store(population, tmp_path):
+    """AdapterStore.from_checkpoint over a save_federated directory serves
+    the same tokens as the store built from the live trainer."""
+    tr, clients, cap_start, gen_len = population
+    d = os.path.join(tmp_path, "fed")
+    save_federated(d, tr)
+    store = AdapterStore.from_checkpoint(d)
+    assert [store.ranks[f"client{k}"] for k in range(3)] == [4, 8, 16]
+    eng = ServingEngine(tr.mcfg, tr.base_params, store,
+                        lora_scale=tr.lora_scale, max_slots=4,
+                        max_prompt=8, max_gen=gen_len)
+    done = eng.run(_mixed_requests(clients, cap_start, gen_len, per_client=1))
+    for dd in done:
+        k = int(dd["adapter_id"][len("client"):])
+        ref = tr._generate_cached(
+            tr.clients[k].lora, np.asarray(clients[k]["tokens"][:1]),
+            jnp.asarray(clients[k]["image"][:1]), cap_start, gen_len)
+        np.testing.assert_array_equal(dd["tokens"], np.asarray(ref)[0])
+
+
+# ---------------------------------------------------------------------------
+# multi-adapter decode step == per-row single-adapter decode
+# ---------------------------------------------------------------------------
+
+def test_multi_adapter_step_matches_per_row_serve_step():
+    cfg = get_config("fedbench-tiny")
+    key = jax.random.PRNGKey(0)
+    params = T.init_params(key, cfg)
+    specs = T.lora_specs(cfg)
+    loras = [mask_lora_params(
+        init_lora_params(jax.random.fold_in(key, g), specs,
+                         LoRAConfig(rank=16)), r, 16)
+        for g, r in enumerate((4, 8, 16))]
+    bank = jax.tree_util.tree_map(lambda *xs: jnp.stack(xs), *loras)
+    B, Smax = 4, 12
+    idx = jnp.asarray([2, 0, 1, 2], jnp.int32)
+    pos = jnp.asarray([0, 3, 5, 1], jnp.int32)
+    embeds = jax.random.normal(jax.random.fold_in(key, 9), (B, cfg.d_model))
+    cache = T.init_cache(cfg, params, B, Smax)
+
+    multi = jax.jit(make_multi_adapter_serve_step(cfg, lora_scale=0.5))
+    logits, new_cache = multi(params, bank, idx, cache, embeds, pos)
+
+    serve = jax.jit(make_serve_step(cfg, lora_scale=0.5))
+    for b in range(B):
+        row_cache = jax.tree_util.tree_map(lambda x: x[:, b:b + 1], cache)
+        lg, rc = serve(params, loras[int(idx[b])], row_cache, None,
+                       pos[b], embeds[b][None, None, :])
+        np.testing.assert_allclose(np.asarray(logits[b]), np.asarray(lg[0]),
+                                   atol=1e-5)
+        for leaf, ref_leaf in zip(
+                jax.tree_util.tree_leaves(
+                    jax.tree_util.tree_map(lambda x, b=b: x[:, b:b + 1],
+                                           new_cache)),
+                jax.tree_util.tree_leaves(rc)):
+            np.testing.assert_allclose(np.asarray(leaf), np.asarray(ref_leaf),
+                                       atol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# grouped LoRA kernel: exactness vs per-row dense compute (interpret mode)
+# ---------------------------------------------------------------------------
+
+def _kernel_operands(shape, dtype=jnp.float32):
+    M, K, N, G, r = shape
+    key = jax.random.PRNGKey(hash(shape) % 2 ** 31)
+    ks = jax.random.split(key, 4)
+    x = jax.random.normal(ks[0], (M, K), dtype)
+    w = jax.random.normal(ks[1], (K, N), dtype) * 0.05
+    a = jax.random.normal(ks[2], (G, r, K), dtype) * 0.1
+    b = jax.random.normal(ks[3], (G, N, r), dtype) * 0.1
+    idx = jnp.asarray(np.random.default_rng(M * G).integers(0, G, M),
+                      jnp.int32)
+    return x, w, a, b, idx
+
+
+@pytest.mark.parametrize("shape", [
+    (4, 128, 128, 2, 4),
+    (8, 256, 192, 5, 8),
+    (3, 96, 300, 3, 16),      # non-tiling K/N → padding path
+    (16, 128, 384, 4, 32),
+])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_grouped_lora_matmul_allclose(shape, dtype):
+    x, w, a, b, idx = _kernel_operands(shape, dtype)
+    y = grouped_lora_matmul(x, w, a, b, idx, scale=0.7, bn=64, bk=64,
+                            interpret=True)
+    yr = grouped_lora_matmul_ref(x, w, a, b, idx, scale=0.7)
+    tol = 2e-5 if dtype == jnp.float32 else 5e-2
+    np.testing.assert_allclose(np.asarray(y, np.float32),
+                               np.asarray(yr, np.float32), atol=tol, rtol=tol)
+
+
+def test_grouped_matches_per_row_dense_compute():
+    """Exactness criterion: each output row equals the DENSE single-adapter
+    LoRA projection computed with that row's gathered (A, B) pair alone."""
+    x, w, a, b, idx = _kernel_operands((6, 128, 256, 3, 8))
+    y = grouped_lora_matmul(x, w, a, b, idx, scale=0.7, bn=64, bk=64,
+                            interpret=True)
+    for m in range(x.shape[0]):
+        g = int(idx[m])
+        dense = lora_matmul_ref(x[m:m + 1], w, a[g], b[g], scale=0.7)
+        np.testing.assert_allclose(np.asarray(y[m:m + 1]), np.asarray(dense),
+                                   atol=2e-5, rtol=2e-5)
+
+
+def test_grouped_heterogeneous_rank_zero_padding():
+    """Adapters of different true ranks zero-padded into one bank: every row
+    must equal the dense compute over its adapter's UNPADDED pair — the
+    invariant that lets one kernel serve every rank mix."""
+    M, r_pad = 6, 16
+    x, w, a, b, _ = _kernel_operands((M, 128, 128, 3, r_pad))
+    ranks = [4, 9, 16]
+    mask = jnp.stack([(jnp.arange(r_pad) < rk).astype(x.dtype)
+                      for rk in ranks])
+    a = a * mask[:, :, None]
+    b = b * mask[:, None, :]
+    idx = jnp.asarray([0, 1, 2, 2, 0, 1], jnp.int32)
+    y = grouped_lora_matmul(x, w, a, b, idx, bn=64, bk=64, interpret=True)
+    for m in range(M):
+        g = int(idx[m])
+        dense = lora_matmul_ref(x[m:m + 1], w, a[g][:ranks[g]],
+                                b[g][:, :ranks[g]])
+        np.testing.assert_allclose(np.asarray(y[m:m + 1]), np.asarray(dense),
+                                   atol=2e-5, rtol=2e-5)
+
+
+def test_grouped_leading_batch_dims_and_idx_broadcast():
+    M, N = 6, 128
+    x, w, a, b, idx = _kernel_operands((M, 128, N, 3, 8))
+    y3 = grouped_lora_matmul(x.reshape(2, 3, -1), w, a, b, idx.reshape(2, 3),
+                             bn=64, bk=64, interpret=True)
+    assert y3.shape == (2, 3, N)
+    yr = grouped_lora_matmul_ref(x, w, a, b, idx)
+    np.testing.assert_allclose(np.asarray(y3.reshape(M, N)), np.asarray(yr),
+                               atol=2e-5, rtol=2e-5)
+
+
+# ---------------------------------------------------------------------------
+# AdapterStore residency
+# ---------------------------------------------------------------------------
+
+def _tiny_adapter(seed, rank, r_pad=8):
+    specs = T.lora_specs(get_config("fedbench-tiny"))[:1]
+    return mask_lora_params(
+        init_lora_params(jax.random.PRNGKey(seed), specs,
+                         LoRAConfig(rank=r_pad)), rank, r_pad)
+
+
+def test_store_lru_pages_cold_adapters():
+    store = AdapterStore(slots=2, rank=8)
+    for i, r in enumerate((4, 8, 2)):
+        store.register(f"a{i}", _tiny_adapter(i, r), r)
+    s0 = store.acquire("a0")
+    store.release("a0")
+    store.acquire("a1")
+    store.release("a1")
+    assert store.loads == 2 and store.evictions == 0
+    store.acquire("a2")          # bank full → evicts LRU (a0)
+    store.release("a2")
+    assert store.evictions == 1
+    assert set(store.resident_ids) == {"a1", "a2"}
+    # re-acquiring the evicted adapter pages it back in, displacing the LRU
+    # resident (a1) — a2 already recycled a0's old slot
+    assert store.acquire("a0") != s0
+    assert set(store.resident_ids) == {"a0", "a2"}
+    assert store.loads == 4 and store.evictions == 2
+
+
+def test_store_never_evicts_pinned_adapters():
+    store = AdapterStore(slots=2, rank=8)
+    for i in range(3):
+        store.register(f"a{i}", _tiny_adapter(i, 4), 4)
+    store.acquire("a0")
+    store.acquire("a1")
+    with pytest.raises(RuntimeError, match="pinned"):
+        store.acquire("a2")
+    store.release("a0")          # now a0 is evictable
+    store.acquire("a2")
+    assert "a0" not in store.resident_ids
+
+
+def test_store_rank_padding_and_validation():
+    store = AdapterStore(slots=2, rank=8)
+    # a raw rank-4 adapter (unpadded arrays) is zero-padded to the bank rank
+    raw = {name: {"A": np.asarray(e["A"][:, :4, :]),
+                  "B": np.asarray(e["B"][..., :4])}
+           for name, e in _tiny_adapter(0, 4).items()}
+    store.register("small", raw, 4)
+    store.acquire("small")
+    bank = jax.device_get(store.stack)
+    for entry in bank.values():
+        assert entry["A"].shape[2] == 8           # [S, L, r_pad, in]
+        assert not entry["A"][0, :, 4:, :].any()  # padded rows are zero
+    with pytest.raises(ValueError, match="exceeds store rank"):
+        store.register("big", _tiny_adapter(1, 16, r_pad=16), 16)
+
+
+def test_store_register_refuses_overwriting_pinned_adapter():
+    """Re-registering an adapter that in-flight requests hold pinned would
+    swap weights under them — refuse; a cold overwrite is fine."""
+    store = AdapterStore(slots=2, rank=8)
+    store.register("a", _tiny_adapter(0, 4), 4)
+    store.acquire("a")
+    with pytest.raises(RuntimeError, match="pinned"):
+        store.register("a", _tiny_adapter(1, 8), 8)
+    store.release("a")
+    store.register("a", _tiny_adapter(1, 8), 8)
+    assert store.ranks["a"] == 8
+    assert "a" not in store.resident_ids          # hot copy was dropped
+
+
+def test_store_from_checkpoint_uses_array_padding_not_meta_ranks(
+        population, tmp_path):
+    """hetlora self-pruning can shrink every TRUE rank below the padding
+    the arrays are stored at — the bank rank must come from the arrays."""
+    import json
+
+    tr, clients, cap_start, gen_len = population
+    d = os.path.join(tmp_path, "fed")
+    save_federated(d, tr)
+    meta_path = os.path.join(d, "meta.json")
+    with open(meta_path) as f:
+        meta = json.load(f)
+    meta["ranks"] = [3, 5, 7]          # as if pruning shrank below max rank
+    with open(meta_path, "w") as f:
+        json.dump(meta, f)
+    store = AdapterStore.from_checkpoint(d)
+    assert store.rank == 16            # the arrays' materialised padding
+    assert [store.ranks[f"client{k}"] for k in range(3)] == [3, 5, 7]
+    store.acquire("client2")           # pages in without a rank error
+
+
+def test_store_release_requires_pin():
+    store = AdapterStore(slots=1, rank=8)
+    store.register("a", _tiny_adapter(0, 4), 4)
+    with pytest.raises(RuntimeError, match="not pinned"):
+        store.release("a")
+
+
+# ---------------------------------------------------------------------------
+# engine validation
+# ---------------------------------------------------------------------------
+
+def test_engine_rejects_cross_attention_stacks():
+    cfg = get_reduced_config("llama-3.2-vision-11b")   # cross_attn pattern
+    with pytest.raises(NotImplementedError, match="cross"):
+        ServingEngine(cfg, None, None, lora_scale=1.0)
+
+
+def test_submit_validation(population):
+    tr, clients, cap_start, gen_len = population
+    eng = _engine(tr, gen_len, slots=2)
+    vis = np.asarray(clients[0]["image"][0])
+    with pytest.raises(ValueError, match="max_prompt"):
+        eng.submit(Request("client0", np.zeros(99, np.int32), 2, vis))
+    with pytest.raises(ValueError, match="max_gen"):
+        eng.submit(Request("client0", np.zeros(4, np.int32), 99, vis))
+    # lower bounds: an empty prompt would feed a fabricated token 0 and
+    # leave gen[0] unwritten; zero-length generation has no window
+    with pytest.raises(ValueError, match="max_prompt"):
+        eng.submit(Request("client0", np.zeros(0, np.int32), 2, vis))
+    with pytest.raises(ValueError, match="max_gen"):
+        eng.submit(Request("client0", np.zeros(4, np.int32), 0, vis))
+    with pytest.raises(KeyError, match="unknown adapter"):
+        eng.submit(Request("nope", np.zeros(4, np.int32), 2, vis))
+    # a vision-prefix engine rejects missing/mis-shaped vision at submit
+    # time, before the adapter gets pinned
+    with pytest.raises(ValueError, match="vision"):
+        eng.submit(Request("client0", np.zeros(4, np.int32), 2, None))
+    with pytest.raises(ValueError, match="vision"):
+        eng.submit(Request("client0", np.zeros(4, np.int32), 2, vis[:1]))
+
+
+def test_engine_reset_reuses_compiled_functions(population):
+    """reset() clears the workload but keeps the jitted step/admit fns, and
+    max_steps bounds the CURRENT run, not the engine lifetime."""
+    tr, clients, cap_start, gen_len = population
+    eng = _engine(tr, gen_len, slots=2)
+    done1 = eng.run(_mixed_requests(clients, cap_start, gen_len,
+                                    per_client=1))
+    steps1 = eng.steps
+    step_fn, admit_fn = eng._step_fn, eng._admit_fn
+    # second run WITHOUT reset: max_steps must budget this run alone
+    done2 = eng.run(_mixed_requests(clients, cap_start, gen_len,
+                                    per_client=1), max_steps=steps1 + 2)
+    eng.reset()
+    assert eng.steps == 0 and not eng.busy_slots and not eng.queue
+    assert (eng._step_fn, eng._admit_fn) == (step_fn, admit_fn)
+    done3 = eng.run(_mixed_requests(clients, cap_start, gen_len,
+                                    per_client=1))
+    assert eng.steps == steps1
+    for a, b, c in zip(sorted(done1, key=lambda d: d["uid"]),
+                       sorted(done2, key=lambda d: d["uid"]),
+                       sorted(done3, key=lambda d: d["uid"])):
+        np.testing.assert_array_equal(a["tokens"], b["tokens"])
+        np.testing.assert_array_equal(a["tokens"], c["tokens"])

@@ -1,0 +1,36 @@
+"""Hypothesis property sweep for the grouped (multi-adapter) LoRA matmul
+kernel — shape/seed-randomised agreement with the pure-jnp oracle.  The
+deterministic exactness tests (vs per-row dense compute, heterogeneous-rank
+zero padding) live in ``test_serving.py`` so they run even without
+hypothesis; this module is conftest-gated like the other property tests."""
+
+import hypothesis.strategies as st
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+
+from repro.kernels.ops import grouped_lora_matmul
+from repro.kernels.ref import grouped_lora_matmul_ref
+
+pytestmark = pytest.mark.serving
+
+
+@settings(max_examples=10, deadline=None)
+@given(st.integers(1, 6), st.integers(1, 5), st.sampled_from([4, 8, 16]),
+       st.sampled_from([64, 128, 200]), st.integers(0, 2 ** 31 - 1))
+def test_grouped_lora_matmul_property(M, G, r, N, seed):
+    K = 64
+    key = jax.random.PRNGKey(seed)
+    ks = jax.random.split(key, 4)
+    x = jax.random.normal(ks[0], (M, K))
+    w = jax.random.normal(ks[1], (K, N)) * 0.05
+    a = jax.random.normal(ks[2], (G, r, K)) * 0.1
+    b = jax.random.normal(ks[3], (G, N, r)) * 0.1
+    idx = jnp.asarray(np.random.default_rng(seed).integers(0, G, M), jnp.int32)
+    y = grouped_lora_matmul(x, w, a, b, idx, scale=0.5, bn=64, bk=64,
+                            interpret=True)
+    yr = grouped_lora_matmul_ref(x, w, a, b, idx, scale=0.5)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(yr), atol=2e-5,
+                               rtol=2e-5)
