@@ -22,15 +22,26 @@ on 2 cores, so the throughput ratio ≈ the step-count ratio; on a real
 accelerator the per-step cost grows with batch occupancy and the continuous
 win widens.
 
+A third engine measures **chunked prefill** (``prefill_chunk``): admission
+fills a P-position prompt's cache rows in ⌈P/chunk⌉ ``serve_prefill``
+dispatches instead of streaming P positions through shared decode steps —
+the ``prefill`` section records its steps/dispatches and time-to-first-token
+percentiles next to the streamed engines' (TTFT is dispatch-clock: submit →
+the step() call that emitted the request's first token).
+
 Results go to ``BENCH_serving.json`` — latest run at the top level plus a
 ``history`` list keyed by git SHA + timestamp (the same scheme as
-``BENCH_fedround.json``, shared ``benchmarks.common.append_history``).
+``BENCH_fedround.json``, shared ``benchmarks.common.append_history``;
+``python -m benchmarks.run --trajectory`` tabulates both histories).
 
 ``--quick`` skips wall-clock timing and checks the *dispatch counts* of the
 serving loop (exactly one ``serve_step`` per decode step, one
-``serve_admit`` per request, paging bounded by the bank size) plus the
+``serve_admit`` per request, exactly ⌈P/chunk⌉ ``serve_prefill`` per
+admitted prompt, paging bounded by the bank size) plus the
 continuous-vs-static step-count ordering — the deterministic regression
-signal the tier-2 smoke test asserts on.
+signal the tier-2 smoke test asserts on.  ``--quick-prefill`` runs the
+chunked-prefill dispatch check alone (the CI fail-fast step); both modes
+raise on a ⌈P/chunk⌉ mismatch.
 """
 
 from __future__ import annotations
@@ -44,6 +55,8 @@ N_REQUESTS = 24
 MAX_SLOTS = 4
 GEN_LENS = (4, 13, 7, 10)       # heterogeneous per-request generation lengths
 TIMED_REPS = 5
+PREFILL_CHUNK = 8               # timed mode: ⌈15/8⌉ = 2 dispatches per prompt
+QUICK_PREFILL_CHUNK = 4         # quick mode: ⌈15/4⌉ = 4 (exercises the tail)
 
 
 def _build(num_clients: int = 6, local_steps: int = 1):
@@ -86,14 +99,19 @@ def _build(num_clients: int = 6, local_steps: int = 1):
     return tr, requests
 
 
-def _engine(tr, *, continuous: bool, slots: int = MAX_SLOTS):
+def _engine(tr, *, continuous: bool, slots: int = MAX_SLOTS, **kw):
     from repro.serving import AdapterStore, ServingEngine
 
     store = AdapterStore.from_trainer(tr, slots=slots)
     return ServingEngine(tr.mcfg, tr.base_params, store,
                          lora_scale=tr.lora_scale, max_slots=slots,
                          max_prompt=8, max_gen=max(GEN_LENS),
-                         continuous=continuous)
+                         continuous=continuous, **kw)
+
+
+def _pctl(xs, q):
+    xs = sorted(xs)
+    return xs[min(int(len(xs) * q), len(xs) - 1)]
 
 
 def _timed_rep(eng, requests) -> dict:
@@ -102,15 +120,16 @@ def _timed_rep(eng, requests) -> dict:
     t0 = time.perf_counter()
     done = eng.run(reqs)
     wall = time.perf_counter() - t0
-    lats = sorted(d["latency_s"] for d in done)
     toks = sum(len(d["tokens"]) for d in done)
     return {
         "wall_s": wall, "steps": eng.steps, "requests": len(done),
         "generated_tokens": toks,
         "tokens_per_sec": toks / wall,
         "requests_per_sec": len(done) / wall,
-        "p50_latency_s": lats[len(lats) // 2],
-        "p95_latency_s": lats[min(int(len(lats) * 0.95), len(lats) - 1)],
+        "p50_latency_s": _pctl([d["latency_s"] for d in done], 0.5),
+        "p95_latency_s": _pctl([d["latency_s"] for d in done], 0.95),
+        "p50_ttft_s": _pctl([d["ttft_s"] for d in done], 0.5),
+        "p95_ttft_s": _pctl([d["ttft_s"] for d in done], 0.95),
         "dispatch": dict(eng.dispatch_count),
     }
 
@@ -123,31 +142,47 @@ def _measure() -> dict:
                       "adapter_ranks": [4, 8, 8, 16, 24, 32],
                       "max_slots": MAX_SLOTS, "requests": N_REQUESTS,
                       "gen_lens": list(GEN_LENS),
+                      "prefill_chunk": PREFILL_CHUNK,
                       "devices": jax.device_count(),
                       "timed_reps": TIMED_REPS}}
     # ONE engine per mode for warmup + all reps (a fresh engine would re-jit
     # its step/admit closures, putting compilation inside the timed window;
     # reset() clears the workload but keeps the compiled functions), and the
-    # two modes' reps are INTERLEAVED so host-load drift on the shared CI
-    # cores biases both equally instead of whichever mode ran second
+    # modes' reps are INTERLEAVED so host-load drift on the shared CI
+    # cores biases all equally instead of whichever mode ran last
     eng_c = _engine(tr, continuous=True)
     eng_s = _engine(tr, continuous=False)
+    eng_p = _engine(tr, continuous=True, prefill_chunk=PREFILL_CHUNK)
     eng_c.run(requests())
     eng_s.run(requests())
-    best_c = best_s = None
+    eng_p.run(requests())
+    best_c = best_s = best_p = None
     for _ in range(TIMED_REPS):
         rc = _timed_rep(eng_c, requests)
         rs = _timed_rep(eng_s, requests)
+        rp = _timed_rep(eng_p, requests)
         if best_c is None or rc["wall_s"] < best_c["wall_s"]:
             best_c = rc
         if best_s is None or rs["wall_s"] < best_s["wall_s"]:
             best_s = rs
+        if best_p is None or rp["wall_s"] < best_p["wall_s"]:
+            best_p = rp
     out["continuous"] = best_c
     out["static"] = best_s
+    p_fill = eng_p._n_prefix + len(requests()[0].prompt_tokens) - 1
+    out["prefill"] = dict(
+        best_p, chunk=PREFILL_CHUNK, prompt_fill_positions=p_fill,
+        dispatches_per_prompt=-(-p_fill // PREFILL_CHUNK),
+        streamed_positions_per_prompt=p_fill)
     out["continuous_vs_static_throughput"] = (
         out["continuous"]["tokens_per_sec"] / out["static"]["tokens_per_sec"])
     out["continuous_vs_static_steps"] = (
         out["static"]["steps"] / out["continuous"]["steps"])
+    out["chunked_vs_streamed_ttft_p50"] = (
+        best_c["p50_ttft_s"] / best_p["p50_ttft_s"])
+    out["chunked_vs_streamed_throughput"] = (
+        best_p["tokens_per_sec"] / best_c["tokens_per_sec"])
+    out["chunked_vs_streamed_steps"] = best_c["steps"] / best_p["steps"]
     if out["continuous_vs_static_throughput"] < 1.1:
         out["caveat"] = (
             "small margin on the 2-core CI container: per-step wall clock "
@@ -155,13 +190,46 @@ def _measure() -> dict:
             "throughput ratio tracks the step-count ratio "
             f"({out['continuous_vs_static_steps']:.2f}x); re-measure on an "
             "accelerator host where step cost scales with occupancy")
+    out["prefill_caveat"] = (
+        "2-core container: a serve_prefill dispatch costs about one "
+        "dispatch overhead like a serve_step, so TTFT/throughput gains "
+        "track the dispatch-count reduction "
+        f"(P={p_fill} positions -> {-(-p_fill // PREFILL_CHUNK)} prefill "
+        "dispatches per prompt); on accelerators the chunk also turns P "
+        "serial matvec steps into matmul-shaped work")
     return out
+
+
+def _quick_prefill(tr, requests, streamed_steps: int | None = None) -> dict:
+    """Chunked-prefill dispatch accounting: admitting a P-position prompt
+    must cost exactly ⌈P/chunk⌉ serve_prefill dispatches (raises on
+    mismatch — the CI fail-fast), and serve_step stops walking prompt
+    positions."""
+    eng = _engine(tr, continuous=True, slots=2,
+                  prefill_chunk=QUICK_PREFILL_CHUNK)
+    reqs = requests()
+    fills = [eng._n_prefix + len(r.prompt_tokens) - 1 for r in reqs]
+    expected = sum(-(-p // QUICK_PREFILL_CHUNK) for p in fills)
+    done = eng.run(reqs)
+    rec = {"chunk": QUICK_PREFILL_CHUNK, "requests": len(done),
+           "prompt_fill_positions": fills[0], "steps": eng.steps,
+           "expected_serve_prefill": expected,
+           "dispatch": dict(eng.dispatch_count)}
+    if streamed_steps is not None:
+        rec["streamed_steps"] = streamed_steps
+    got = rec["dispatch"].get("serve_prefill")
+    if got != expected:
+        raise RuntimeError(
+            f"chunked prefill dispatch regression: {got} serve_prefill "
+            f"dispatches != sum ceil(P/chunk) = {expected}")
+    return rec
 
 
 def quick_check() -> dict:
     """Dispatch-count + step-count regression check (no wall clock): one
     serve_step per decode step, one admit per request, adapter paging
-    bounded by the bank, and continuous needs no more steps than static."""
+    bounded by the bank, continuous needs no more steps than static, and
+    chunked prefill admits in exactly ⌈P/chunk⌉ dispatches."""
     tr, requests = _build(num_clients=3, local_steps=1)
     out = {}
     for mode in ("continuous", "static"):
@@ -169,7 +237,15 @@ def quick_check() -> dict:
         done = eng.run(requests())
         out[mode] = {"steps": eng.steps, "requests": len(done),
                      "dispatch": dict(eng.dispatch_count)}
+    out["prefill"] = _quick_prefill(tr, requests,
+                                    out["continuous"]["steps"])
     return out
+
+
+def quick_prefill_check() -> dict:
+    """The chunked-prefill dispatch check alone (CI fail-fast step)."""
+    tr, requests = _build(num_clients=3, local_steps=1)
+    return {"prefill": _quick_prefill(tr, requests)}
 
 
 def main(argv: list[str] | None = None) -> list[str]:
@@ -179,15 +255,21 @@ def main(argv: list[str] | None = None) -> list[str]:
     ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
     ap.add_argument("--quick", action="store_true",
                     help="dispatch-count check only (no timing, no JSON)")
+    ap.add_argument("--quick-prefill", action="store_true",
+                    help="chunked-prefill dispatch-count check only")
     args = ap.parse_args([] if argv is None else argv)
 
-    if args.quick:
-        counts = quick_check()
+    if args.quick or args.quick_prefill:
+        counts = quick_prefill_check() if args.quick_prefill else \
+            quick_check()
         lines = []
         for mode, rec in sorted(counts.items()):
             lines.append(f"serving/dispatch/{mode}/steps,0.0,{rec['steps']}")
             for name, cnt in sorted(rec["dispatch"].items()):
                 lines.append(f"serving/dispatch/{mode}/{name},0.0,{cnt}")
+            if "expected_serve_prefill" in rec:
+                lines.append(f"serving/dispatch/{mode}/expected_serve_"
+                             f"prefill,0.0,{rec['expected_serve_prefill']}")
         return lines
 
     from benchmarks.common import append_history, run_measurement_subprocess
@@ -197,7 +279,7 @@ def main(argv: list[str] | None = None) -> list[str]:
     append_history(res, "BENCH_serving.json")
 
     lines = []
-    for mode in ("continuous", "static"):
+    for mode in ("continuous", "static", "prefill"):
         r = res[mode]
         lines.append(f"serving/{mode}/tokens_per_sec,"
                      f"{r['wall_s'] / max(r['steps'], 1) * 1e6:.1f},"
@@ -205,9 +287,16 @@ def main(argv: list[str] | None = None) -> list[str]:
         lines.append(f"serving/{mode}/p50_latency,"
                      f"{r['p50_latency_s'] * 1e6:.1f},"
                      f"p95={r['p95_latency_s'] * 1e3:.1f}ms")
+        lines.append(f"serving/{mode}/p50_ttft,"
+                     f"{r['p50_ttft_s'] * 1e6:.1f},"
+                     f"p95={r['p95_ttft_s'] * 1e3:.1f}ms")
         lines.append(f"serving/{mode}/steps,0.0,{r['steps']}")
     lines.append(f"serving/continuous_vs_static,0.0,"
                  f"{res['continuous_vs_static_throughput']:.2f}x")
+    lines.append(f"serving/chunked_vs_streamed_ttft_p50,0.0,"
+                 f"{res['chunked_vs_streamed_ttft_p50']:.2f}x")
+    lines.append(f"serving/chunked_vs_streamed_throughput,0.0,"
+                 f"{res['chunked_vs_streamed_throughput']:.2f}x")
     return lines
 
 

@@ -121,6 +121,36 @@ def lora_matmul(x: jax.Array, w: jax.Array, lora: Mapping[str, jax.Array] | None
     return y
 
 
+def grouped_lora_matmul(x: jax.Array, w: jax.Array,
+                        bank: Mapping[str, jax.Array] | None, idx: jax.Array,
+                        scale: float, *, kernel: bool = False) -> jax.Array:
+    """Per-row adapter-index LoRA projection (BGMV) — the multi-tenant
+    variant of :func:`lora_matmul`: leading-batch row ``b`` of ``x`` applies
+    adapter ``idx[b]`` from a stacked bank.
+
+    ``x``: [B, ..., in]; ``w``: [in, out]; ``bank``: {"A": [G, r, in],
+    "B": [G, out, r]} (``None`` → plain ``x @ w``); ``idx``: i32 [B],
+    broadcast over the inner dims.  The default path gathers only the tiny
+    per-row (A, B) pairs and contracts them row-wise (XLA fuses the gather
+    into the contraction; the [in, out]-sized delta is never materialised).
+    ``kernel=True`` dispatches the Pallas BGMV kernel
+    (``kernels/lora_gather_matmul.py``): the per-row index becomes a
+    scalar-prefetch operand steering the A/B DMA, so the gather happens in
+    the memory system — no HBM-materialised per-row adapter copies at all.
+    """
+    if bank is None:
+        return x @ w
+    if kernel:
+        from repro.kernels.ops import grouped_lora_matmul as _kernel_glm
+        return _kernel_glm(x, w, bank["A"], bank["B"], idx, scale=scale)
+    a = bank["A"][idx]                                   # [B, r, in]
+    b = bank["B"][idx]                                   # [B, out, r]
+    y = x @ w
+    xa = jnp.einsum("b...i,bri->b...r", x, a)
+    delta = scale * jnp.einsum("b...r,bor->b...o", xa, b)
+    return y + delta.astype(y.dtype)
+
+
 def num_lora_params(specs: Sequence[LoRASpec], rank: int) -> int:
     return sum(s.num_layers * rank * (s.in_dim + s.out_dim) for s in specs)
 

@@ -16,7 +16,12 @@ TPU-native design (rides next to ``lora_matmul.py``'s single-adapter path):
   memory system, never as an HBM-materialised ``[M, r, K]`` gathered copy;
 * grid (M, N/bn, K/bk) with one row per program: decode batches are
   one-token-per-slot, so M is the slot count and the row tile is [1, bk] —
-  the adapter gather is per-row exact while W tiles stay MXU-aligned;
+  the adapter gather is per-row exact while W tiles stay MXU-aligned.
+  Chunked prefill reuses the same grid: the ``[B, chunk, d]`` block
+  flattens to M = B·chunk rows whose idx entries repeat per slot
+  (``ops.grouped_lora_matmul`` broadcasts a [B] index over the chunk
+  axis), so consecutive programs re-request the same A/B tiles and the
+  pipelined BlockSpec DMA coalesces them;
 * K innermost: both accumulators (base [1, bn] and x@Aᵀ [1, r]) live in VMEM
   scratch across the K loop, one HBM pass over x and W, output written once;
 * accumulation is f32 scratch regardless of input dtype.

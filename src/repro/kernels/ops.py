@@ -55,13 +55,18 @@ def grouped_lora_matmul(x, w, a, b, idx, *, scale: float = 1.0, bn: int = 256,
                         bk: int = 512, interpret: bool | None = None):
     """Multi-tenant LoRA projection: row ``m`` uses adapter ``idx[m]`` from
     the stacked bank (BGMV).  x: [..., K]; w: [K, N]; a: [G, r, K];
-    b: [G, N, r]; idx: i32 broadcastable to x's leading dims."""
+    b: [G, N, r]; idx: i32 broadcastable to x's leading dims — a per-batch
+    [B] index against x [B, chunk, K] (the chunked-prefill shape) is
+    broadcast over the chunk axis."""
     if interpret is None:
         interpret = not _on_tpu()
     lead = x.shape[:-1]
     K = x.shape[-1]
     N = w.shape[1]
     x2 = x.reshape(-1, K)
+    idx = jnp.asarray(idx)
+    if idx.ndim and idx.ndim < len(lead):
+        idx = idx.reshape(idx.shape + (1,) * (len(lead) - idx.ndim))
     idx2 = jnp.broadcast_to(idx, lead).reshape(-1)
     bn_, bk_ = min(bn, N), min(bk, K)
     xp = _pad_to(x2, 1, bk_)

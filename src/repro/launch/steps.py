@@ -100,46 +100,111 @@ def make_serve_step(cfg: ModelConfig, *, lora_scale: float,
     return serve_step
 
 
-def make_multi_adapter_serve_step(cfg: ModelConfig, *, lora_scale: float) -> Callable:
+def _bank_for_scan(adapters, layout: str):
+    """Normalise an adapter bank to scan-major [L, G, ...] leaves (the block
+    scan strips L exactly like the single-adapter tree; enc.* entries don't
+    serve).  ``layout="scan"`` means the caller already holds that shape
+    (e.g. ``AdapterStore.scan_stack``, transposed once per page-in) —
+    transposing slot-major [G, L, ...] here instead would materialise a
+    whole-bank copy inside EVERY jitted dispatch."""
+    if layout == "scan":
+        return adapters
+    return {k: jax.tree_util.tree_map(lambda x: jnp.swapaxes(x, 0, 1), v)
+            for k, v in adapters.items() if k.startswith("s")}
+
+
+def make_multi_adapter_serve_step(cfg: ModelConfig, *, lora_scale: float,
+                                  lora_backend: str = "gather",
+                                  bank_layout: str = "slot") -> Callable:
     """One-token decode where EVERY BATCH ROW uses its own LoRA adapter:
 
         ``(params, adapters[G,...], adapter_idx[B], cache, embeds[B,d],
            pos[B]) -> (logits [B, V], cache')``
 
     ``adapters`` is a stacked bank (leaves ``[G, ...]``, e.g. an
-    AdapterStore's device stack); row ``b`` gathers adapter
+    AdapterStore's device stack); row ``b`` applies adapter
     ``adapter_idx[b]`` — the BGMV formulation of multi-tenant LoRA serving.
     ``pos`` is per-row (a continuous-batching engine's slots sit at
-    different sequence positions), so the decode is vmapped over the batch
-    with the cache's batch axis (axis 1 in every ``init_cache`` leaf) as
-    the vmap axis; base params are broadcast.  Mathematically identical to
-    running each row through ``make_serve_step`` with its own adapter
-    (tested).
+    different sequence positions); the whole batch runs through ONE
+    ``T.decode_chunk`` call with per-row positions — no per-row vmap, and
+    no per-row copy of the full adapter tree.
 
-    The gather here is a jnp ``x[adapter_idx]`` tree-take that XLA fuses
-    into the vmapped projections; the TPU-native BGMV kernel that instead
-    steers the A/B DMA per row via a scalar-prefetch index operand (no
-    HBM-materialised gathered copy) is ``kernels/lora_gather_matmul.py`` —
-    exactness-tested against this formulation, not yet threaded through
-    the layer stack (see ROADMAP)."""
+    ``lora_backend``:
+
+    * ``"gather"`` — each LoRA site gathers only its tiny per-row (A, B)
+      pair and contracts row-wise (jnp; XLA fuses the gather);
+    * ``"grouped"`` — the Pallas BGMV kernel
+      (``kernels/lora_gather_matmul.py``): the per-row index is a
+      scalar-prefetch operand steering the A/B BlockSpec DMA, so the
+      gather happens in the memory system (interpret mode off-TPU).
+
+    Both are mathematically identical to running each row through
+    ``make_serve_step`` with its own adapter (tested).  ``bank_layout``:
+    ``"slot"`` = leaves [G, L, ...] (an AdapterStore's mutation-side stack,
+    transposed in-program), ``"scan"`` = already scan-major [L, G, ...]
+    (``AdapterStore.scan_stack`` — the hot-path layout)."""
+    kernel = {"gather": False, "grouped": True}[lora_backend]
 
     def multi_serve_step(params, adapters, adapter_idx, cache, embeds, pos):
-        lora_rows = jax.tree_util.tree_map(lambda x: x[adapter_idx], adapters)
-        cache_axes = jax.tree_util.tree_map(lambda _: 1, cache)
-
-        def one_row(lora, c, emb, p):
-            # vmap stripped the cache's batch axis (axis 1); decode_step
-            # wants an explicit B=1 batch dim — reinsert, decode, drop
-            c = jax.tree_util.tree_map(lambda x: x[:, None], c)
-            logits, c = T.decode_step(cfg, params, c, None, p, lora=lora,
-                                      lora_scale=lora_scale,
-                                      embeds=emb[None, None, :])
-            return logits[0], jax.tree_util.tree_map(lambda x: x[:, 0], c)
-
-        return jax.vmap(one_row, in_axes=(0, cache_axes, 0, 0),
-                        out_axes=(0, cache_axes))(lora_rows, cache, embeds, pos)
+        bank = _bank_for_scan(adapters, bank_layout)
+        return T.decode_chunk(cfg, params, cache, embeds[:, None, :], pos,
+                              adapters=bank, adapter_idx=adapter_idx,
+                              lora_scale=lora_scale, lora_kernel=kernel)
 
     return multi_serve_step
+
+
+def make_chunked_prefill_step(cfg: ModelConfig, *, lora_scale: float,
+                              chunk: int, n_prefix: int = 0,
+                              lora_backend: str = "gather",
+                              bank_layout: str = "slot",
+                              flash: bool | None = None) -> Callable:
+    """Chunked multi-token prefill over a ServingEngine's slot state:
+
+        ``(params, adapters[G,...], state, cache) -> (state', cache')``
+
+    ONE dispatch pushes up to ``chunk`` teacher-forced positions of every
+    prefill-phase slot (``pos < plen - 1``) through the decode-cache write
+    path: a ``[B, chunk, d]`` embedding block (per-slot mux of
+    vision-prefix vectors and prompt tokens) runs through ``T.decode_chunk``
+    at per-slot ragged offsets, intra-chunk causal attention reuses
+    ``multihead_attention``'s chunked online-softmax path (``flash``: None
+    = auto by size, True = force, False = naive), ragged tails are masked
+    (their cache rows stay untouched), and NO logits are computed — prefill
+    positions' logits are discarded anyway, so the unembed matmul is
+    skipped entirely.  A P-position prompt therefore fills its slot's cache
+    rows in ⌈P/chunk⌉ dispatches instead of P serial serve_steps (P =
+    n_prefix + prompt_len − 1; the last teacher-forced position belongs to
+    the first decode step, which emits the first token).
+
+    ``state`` is the engine's slot-state dict (ptoks/vis/aidx/pos/plen/
+    tlen); slots already past prefill (or free) advance by zero positions
+    and keep their cache rows bit-identical."""
+    kernel = {"gather": False, "grouped": True}[lora_backend]
+
+    def prefill_step(params, adapters, state, cache):
+        pos, plen, tlen = state["pos"], state["plen"], state["tlen"]
+        B = pos.shape[0]
+        offs = pos[:, None] + jnp.arange(chunk)                  # [B, C]
+        valid = (offs < (plen - 1)[:, None]) & (tlen > 0)[:, None]
+        Sp = state["ptoks"].shape[1]
+        tok_pos = jnp.clip(offs - n_prefix, 0, Sp - 1)
+        toks = jnp.take_along_axis(state["ptoks"], tok_pos, axis=1)
+        embeds = params["embed"][toks]                           # [B, C, d]
+        if n_prefix:
+            rows = jnp.arange(B)[:, None]
+            pre = state["vis"][rows, jnp.clip(offs, 0, n_prefix - 1)]
+            embeds = jnp.where((offs < n_prefix)[..., None],
+                               pre.astype(embeds.dtype), embeds)
+        bank = _bank_for_scan(adapters, bank_layout)
+        _, cache = T.decode_chunk(cfg, params, cache, embeds, pos,
+                                  adapters=bank, adapter_idx=state["aidx"],
+                                  lora_scale=lora_scale, valid=valid,
+                                  lora_kernel=kernel, logits=False,
+                                  chunked=flash)
+        return dict(state, pos=pos + valid.sum(1).astype(pos.dtype)), cache
+
+    return prefill_step
 
 
 def make_greedy_generate(cfg: ModelConfig, *, lora_scale: float,

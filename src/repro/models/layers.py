@@ -20,7 +20,7 @@ import jax
 import jax.numpy as jnp
 from jax import lax
 
-from repro.core.lora import lora_matmul
+from repro.core.lora import grouped_lora_matmul, lora_matmul
 from repro.models.config import MLAConfig, ModelConfig, MoEConfig, SSMConfig
 
 NEG_INF = -1e30
@@ -88,13 +88,23 @@ def init_attention(key, cfg: ModelConfig, cross: bool = False, n: int = 1,
     return p
 
 
-def _qkv(params, x, kv_src, cfg: ModelConfig, lora, lora_scale):
+def _qkv(params, x, kv_src, cfg: ModelConfig, lora, lora_scale,
+         lora_idx=None, lora_kernel: bool = False):
+    """``lora_idx`` [B]: LoRA entries are stacked banks [G, ...] and row
+    ``b`` applies adapter ``lora_idx[b]`` (multi-tenant BGMV;
+    ``lora_kernel`` selects the Pallas gather kernel)."""
     h, kv, hd = cfg.num_heads, cfg.num_kv_heads, cfg.resolved_head_dim
     lq = lora.get("wq") if lora else None
     lv = lora.get("wv") if lora else None
-    q = lora_matmul(x, params["wq"], lq, lora_scale)
+    if lora_idx is None:
+        q = lora_matmul(x, params["wq"], lq, lora_scale)
+        v = lora_matmul(kv_src, params["wv"], lv, lora_scale)
+    else:
+        q = grouped_lora_matmul(x, params["wq"], lq, lora_idx, lora_scale,
+                                kernel=lora_kernel)
+        v = grouped_lora_matmul(kv_src, params["wv"], lv, lora_idx,
+                                lora_scale, kernel=lora_kernel)
     k = kv_src @ params["wk"]
-    v = lora_matmul(kv_src, params["wv"], lv, lora_scale)
     if "bq" in params:
         q = q + params["bq"]
         k = k + params["bk"]
@@ -124,6 +134,13 @@ def multihead_attention(q, k, v, *, causal: bool, window: int = 0, softcap: floa
 
     ``chunked=None`` auto-selects the flash path for Sk > 2048.
     ``pad_mask``: [B, Sk] 1=valid.
+
+    ``q_pos`` / ``k_pos`` may be *batched* ([B, Sq] / [B, Sk]) — each row
+    attends at its own positions (the serving engine's ragged per-slot
+    offsets).  The batched form flows through both the naive and the
+    chunked online-softmax path; only the sliding-window chunk-skip
+    shortcut is disabled for it (the skip assumes positions follow the
+    array index layout, which ragged per-row offsets break).
     """
     B, Sq, H, D = q.shape
     Sk, KV = k.shape[1], k.shape[2]
@@ -133,6 +150,11 @@ def multihead_attention(q, k, v, *, causal: bool, window: int = 0, softcap: floa
         q_pos = jnp.arange(Sq)
     if k_pos is None:
         k_pos = jnp.arange(Sk)
+    q_pos, k_pos = jnp.asarray(q_pos), jnp.asarray(k_pos)
+    batched_pos = q_pos.ndim > 1 or k_pos.ndim > 1
+    if batched_pos:
+        q_pos = jnp.broadcast_to(q_pos, (B, Sq))
+        k_pos = jnp.broadcast_to(k_pos, (B, Sk))
     scale = 1.0 / math.sqrt(D)
     if chunked is None:
         # chunk whenever the full score block would be large — the naive
@@ -147,8 +169,8 @@ def multihead_attention(q, k, v, *, causal: bool, window: int = 0, softcap: floa
         scores = jnp.einsum("bqkgd,bskd->bkgqs", qg.astype(jnp.float32),
                             k.astype(jnp.float32)) * scale
         scores = _softcap(scores, softcap)
-        mask = _attn_mask(q_pos, k_pos, causal, window)          # [Sq, Sk]
-        scores = scores + mask
+        mask = _attn_mask(q_pos, k_pos, causal, window)  # [Sq,Sk] | [B,Sq,Sk]
+        scores = scores + (mask[:, None, None] if batched_pos else mask)
         if pad_mask is not None:
             scores = scores + jnp.where(pad_mask, 0.0, NEG_INF)[:, None, None, None, :]
         probs = jax.nn.softmax(scores, axis=-1)
@@ -168,8 +190,12 @@ def multihead_attention(q, k, v, *, causal: bool, window: int = 0, softcap: floa
     qg_p = pad_to(qg, Sq_pad, 1).reshape(B, nq, q_chunk, KV, G, D)
     k_p = pad_to(k, Sk_pad, 1).reshape(B, nk, kv_chunk, KV, D)
     v_p = pad_to(v, Sk_pad, 1).reshape(B, nk, kv_chunk, KV, Dv)
-    qpos_p = pad_to(q_pos, Sq_pad, 0).reshape(nq, q_chunk)
-    kpos_p = pad_to(k_pos + 1, Sk_pad, 0).reshape(nk, kv_chunk) - 1  # pads → -1 (invalid)
+    if batched_pos:
+        qpos_p = pad_to(q_pos, Sq_pad, 1).reshape(B, nq, q_chunk)
+        kpos_p = pad_to(k_pos + 1, Sk_pad, 1).reshape(B, nk, kv_chunk) - 1
+    else:
+        qpos_p = pad_to(q_pos, Sq_pad, 0).reshape(nq, q_chunk)
+        kpos_p = pad_to(k_pos + 1, Sk_pad, 0).reshape(nk, kv_chunk) - 1  # pads → -1 (invalid)
     if pad_mask is None:
         pad_mask = jnp.ones((B, Sk), bool)
     pm_p = pad_to(pad_mask.astype(bool), Sk_pad, 1).reshape(B, nk, kv_chunk)
@@ -179,12 +205,14 @@ def multihead_attention(q, k, v, *, causal: bool, window: int = 0, softcap: floa
     # chunk — scan those (clamped dynamic indices, out-of-range steps fully
     # masked) instead of all nk. 8–32× less attention work for gemma3-style
     # local layers at 32k (reflected in analytic.py `window_skip`).
-    window_skip = bool(causal and window and window > 0)
+    # Disabled for batched positions: the chunk arithmetic assumes q/k
+    # positions follow the array index layout.
+    window_skip = bool(causal and window and window > 0) and not batched_pos
     nk_eff = min((window + q_chunk) // kv_chunk + 2, nk) if window_skip else nk
 
     def q_step(_, qi):
         qc = qg_p[:, qi]          # [B, qc, KV, G, D]
-        qp = qpos_p[qi]
+        qp = qpos_p[:, qi] if batched_pos else qpos_p[qi]
 
         def kv_step(carry, step):
             m, l, acc = carry
@@ -198,13 +226,17 @@ def multihead_attention(q, k, v, *, causal: bool, window: int = 0, softcap: floa
                 ki = step
                 in_range = jnp.bool_(True)
             kc, vc = k_p[:, ki], v_p[:, ki]
-            kp = kpos_p[ki]
+            kp = kpos_p[:, ki] if batched_pos else kpos_p[ki]
             s = jnp.einsum("bqkgd,bskd->bkgqs", qc.astype(jnp.float32),
                            kc.astype(jnp.float32)) * scale
             s = _softcap(s, softcap)
             mask = _attn_mask(qp, kp, causal, window)
-            mask = jnp.where((kp >= 0)[None, :], mask, NEG_INF)
-            s = s + mask
+            if batched_pos:
+                mask = jnp.where((kp >= 0)[:, None, :], mask, NEG_INF)
+                s = s + mask[:, None, None]
+            else:
+                mask = jnp.where((kp >= 0)[None, :], mask, NEG_INF)
+                s = s + mask
             s = s + jnp.where(pm_p[:, ki], 0.0, NEG_INF)[:, None, None, None, :]
             s = jnp.where(in_range, s, NEG_INF)   # clamped duplicates masked
             m_new = jnp.maximum(m, jnp.max(s, axis=-1))
@@ -301,6 +333,80 @@ def attention_decode(params, x, cache, cfg: ModelConfig, *, kind: str, pos,
                               pad_mask=jnp.broadcast_to(valid, (B, Smax)),
                               chunked=False)
     y = out.reshape(B, 1, -1) @ params["wo"]
+    return y, {"k": k, "v": v}
+
+
+def attention_decode_batch(params, x, cache, cfg: ModelConfig, *, kind: str,
+                           pos, valid=None, lora=None,
+                           lora_scale: float = 1.0, lora_idx=None,
+                           lora_kernel: bool = False,
+                           chunked: bool | None = False):
+    """Multi-token, per-row-position cache-write decode — the serving hot
+    path (one-token multi-adapter decode and chunked prefill share it).
+
+    ``x``: [B, C, d] (C = 1 for decode, C = prefill chunk); ``pos``: [B]
+    per-row first position — row ``b`` processes positions
+    ``pos[b] .. pos[b]+C-1``.  ``valid``: optional [B, C] ragged-tail mask;
+    masked positions leave their cache rows untouched (the gather-then-set
+    keeps the old row) and their outputs are garbage the caller discards.
+    ``lora_idx`` [B] makes the LoRA entries stacked banks (BGMV, see
+    ``_qkv``); ``chunked`` selects ``multihead_attention``'s online-softmax
+    path for the intra-chunk causal attention (None = auto).
+
+    Invariants the caller (ServingEngine / make_chunked_prefill_step)
+    upholds: valid positions stay below the cache length; for ring caches
+    C ≤ ring size (per-row scatter indices must not collide) AND, when
+    C > 1, every valid position < ring size — a chunk writes all its K/V
+    rows BEFORE attending, so a write at position p ≥ ring would overwrite
+    the slot holding p−ring, which earlier queries of the same chunk still
+    attend (p−ring always falls inside their window because ring ≤ window);
+    ring-wrapping prompts must stream one position at a time instead
+    (engine-gated).  Returns (y [B, C, d], new cache {"k","v":
+    [B, Smax, KV, D]}).
+    """
+    if kind == "cross_attn":
+        raise NotImplementedError("batched decode covers self-attention "
+                                  "caches only (engine gates cross-attn)")
+    B, C = x.shape[:2]
+    q, k_new, v_new = _qkv(params, x, x, cfg, lora, lora_scale,
+                           lora_idx=lora_idx, lora_kernel=lora_kernel)
+    q_pos = pos[:, None] + jnp.arange(C)                       # [B, C]
+    q = apply_rope(q, q_pos, cfg.rope_theta)
+    k_new = apply_rope(k_new, q_pos, cfg.rope_theta)
+    Smax = cache["k"].shape[1]
+    ring = (kind == "attn_local" and cfg.sliding_window
+            and Smax <= cfg.sliding_window)
+    slots = jnp.mod(q_pos, Smax) if ring else jnp.clip(q_pos, 0, Smax - 1)
+    rows = jnp.arange(B)[:, None]
+
+    def upd(c, new):
+        new = new.astype(c.dtype)
+        if valid is not None:
+            # masked positions write back the row they gathered — identity
+            new = jnp.where(valid[..., None, None], new, c[rows, slots])
+        return c.at[rows, slots].set(new)
+
+    k = upd(cache["k"], k_new)
+    v = upd(cache["v"], v_new)
+
+    n_val = valid.sum(1) if valid is not None else jnp.full((B,), C, pos.dtype)
+    cur = pos + n_val - 1                # last position actually written
+    if ring:
+        # ring slot t holds the latest written position ≡ t (mod Smax); cur
+        # (not pos + C - 1) anchors it so masked tails keep advertising the
+        # OLD positions their slots still hold
+        t = jnp.arange(Smax)[None, :]
+        k_pos = cur[:, None] - jnp.mod(cur[:, None] - t, Smax)
+    else:
+        k_pos = jnp.broadcast_to(jnp.arange(Smax), (B, Smax))
+    window = cfg.sliding_window if kind == "attn_local" else 0
+    ok = (k_pos >= 0) & (k_pos <= cur[:, None])
+    out = multihead_attention(q, k, v, causal=True, window=window,
+                              softcap=cfg.attn_logit_softcap,
+                              q_pos=q_pos, k_pos=k_pos, pad_mask=ok,
+                              chunked=chunked, q_chunk=max(C, 1),
+                              kv_chunk=min(512, Smax))
+    y = out.reshape(B, C, -1) @ params["wo"]
     return y, {"k": k, "v": v}
 
 
@@ -416,6 +522,92 @@ def mla_decode(params, x, cache, cfg: ModelConfig, *, pos, lora=None,
     ctx_c = jnp.einsum("bhst,btc->bshc", p, c_kv.astype(jnp.float32))   # [B,1,h,c]
     ctx_v = jnp.einsum("bshc,chv->bshv", ctx_c, w_uv.astype(jnp.float32))
     y = ctx_v.reshape(B, 1, -1).astype(x.dtype) @ params["wo"]
+    return y, {"c_kv": c_kv, "k_rope": k_rope}
+
+
+def mla_decode_batch(params, x, cache, cfg: ModelConfig, *, pos, valid=None,
+                     lora=None, lora_scale: float = 1.0, lora_idx=None,
+                     lora_kernel: bool = False):
+    """Absorbed-weight MLA decode over ``x`` [B, C, d] at per-row positions
+    ``pos`` [B] (the multi-adapter / chunked-prefill sibling of
+    :func:`mla_decode`).  ``valid`` [B, C] masks ragged chunk tails.
+
+    LoRA: the q-side projection goes through the grouped (BGMV) path like
+    ``_qkv``; ``wkv_b``'s LoRA must fold into an effective weight for the
+    absorption trick, so the banked case folds per BANK entry ([G, c, ·],
+    G = bank slots, small) and gathers per row — the ``lora_kernel`` flag
+    therefore steers the q side only."""
+    m, h = cfg.mla, cfg.num_heads
+    B, C = x.shape[:2]
+    q_pos = pos[:, None] + jnp.arange(C)                        # [B, C]
+    if lora_idx is None:
+        q_nope, q_rope = _mla_q(params, x, cfg, lora, lora_scale)
+    else:
+        qd = m.qk_nope_head_dim + m.qk_rope_head_dim
+        if "wq" in params:
+            q = grouped_lora_matmul(x, params["wq"],
+                                    lora.get("wq") if lora else None,
+                                    lora_idx, lora_scale, kernel=lora_kernel)
+        else:
+            cq = x @ params["wdq"]
+            q = grouped_lora_matmul(cq, params["wuq"],
+                                    lora.get("wuq") if lora else None,
+                                    lora_idx, lora_scale, kernel=lora_kernel)
+        q = q.reshape(B, C, h, qd)
+        q_nope, q_rope = jnp.split(q, [m.qk_nope_head_dim], axis=-1)
+    q_rope = apply_rope(q_rope, q_pos, cfg.rope_theta)
+
+    ckv_kr = x @ params["wkv_a"]
+    c_new, kr_new = jnp.split(ckv_kr, [m.kv_lora_rank], axis=-1)
+    kr_new = apply_rope(kr_new[:, :, None, :], q_pos, cfg.rope_theta)[:, :, 0, :]
+    Smax = cache["c_kv"].shape[1]
+    slots = jnp.clip(q_pos, 0, Smax - 1)
+    rows = jnp.arange(B)[:, None]
+
+    def upd(c, new):
+        new = new.astype(c.dtype)
+        if valid is not None:
+            new = jnp.where(valid[..., None], new, c[rows, slots])
+        return c.at[rows, slots].set(new)
+
+    c_kv = upd(cache["c_kv"], c_new)
+    k_rope = upd(cache["k_rope"], kr_new)
+
+    w = params["wkv_b"]
+    entry = lora.get("wkv_b") if lora else None
+    if entry is not None:
+        delta = jnp.einsum("...or,...ri->...io", entry["B"], entry["A"])
+        if lora_idx is None:
+            w = w + (lora_scale * delta).astype(w.dtype)        # [c, hnv]
+        else:
+            w = (w + lora_scale * delta.astype(w.dtype))[lora_idx]  # [B, c, hnv]
+    per_row_w = w.ndim == 3
+    nv = m.qk_nope_head_dim + m.v_head_dim
+    if per_row_w:
+        w = w.reshape(B, m.kv_lora_rank, h, nv)
+    else:
+        w = w.reshape(m.kv_lora_rank, h, nv)
+    w_uk, w_uv = jnp.split(w, [m.qk_nope_head_dim], axis=-1)
+
+    if per_row_w:
+        q_abs = jnp.einsum("bshn,bchn->bshc", q_nope.astype(jnp.float32),
+                           w_uk.astype(jnp.float32))
+    else:
+        q_abs = jnp.einsum("bshn,chn->bshc", q_nope.astype(jnp.float32),
+                           w_uk.astype(jnp.float32))            # [B,C,h,c]
+    scale = 1.0 / math.sqrt(m.qk_nope_head_dim + m.qk_rope_head_dim)
+    s = (jnp.einsum("bshc,btc->bhst", q_abs, c_kv.astype(jnp.float32))
+         + jnp.einsum("bshr,btr->bhst", q_rope.astype(jnp.float32),
+                      k_rope.astype(jnp.float32))) * scale      # [B,h,C,Smax]
+    ok = jnp.arange(Smax)[None, None, :] <= q_pos[:, :, None]   # [B,C,Smax]
+    s = jnp.where(ok[:, None], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    ctx_c = jnp.einsum("bhst,btc->bshc", p, c_kv.astype(jnp.float32))
+    if per_row_w:
+        ctx_v = jnp.einsum("bshc,bchv->bshv", ctx_c, w_uv.astype(jnp.float32))
+    else:
+        ctx_v = jnp.einsum("bshc,chv->bshv", ctx_c, w_uv.astype(jnp.float32))
+    y = ctx_v.reshape(B, C, -1).astype(x.dtype) @ params["wo"]
     return y, {"c_kv": c_kv, "k_rope": k_rope}
 
 
@@ -641,14 +833,27 @@ def mamba_forward(params, x, cfg: ModelConfig):
     return y @ params["out_proj"]
 
 
-def mamba_decode(params, x, cache, cfg: ModelConfig):
+def mamba_decode(params, x, cache, cfg: ModelConfig, *, lora=None,
+                 lora_scale: float = 1.0, lora_idx=None,
+                 lora_kernel: bool = False):
     """One-token recurrent step.  cache: {"h": [B,H,P,N] f32,
-    "conv": [B,W-1,C]}.  x: [B,1,d]."""
+    "conv": [B,W-1,C]}.  x: [B,1,d].
+
+    Single-adapter callers fold LoRA into the projection weights upstream
+    (cheap: r small) and pass ``lora=None``; the multi-tenant serving path
+    instead passes banked ``in_proj`` / ``out_proj`` entries + ``lora_idx``
+    so each row applies its own adapter via the grouped (BGMV) matmul."""
     s: SSMConfig = cfg.ssm
     d_in = s.expand * cfg.d_model
     H = d_in // s.head_dim
     B = x.shape[0]
-    proj = (x @ params["in_proj"])[:, 0]                   # [B, proj_out]
+    if lora_idx is not None:
+        proj = grouped_lora_matmul(x, params["in_proj"],
+                                   lora.get("in_proj") if lora else None,
+                                   lora_idx, lora_scale,
+                                   kernel=lora_kernel)[:, 0]
+    else:
+        proj = (x @ params["in_proj"])[:, 0]               # [B, proj_out]
     z, xBC, dt = jnp.split(proj, [d_in, 2 * d_in + 2 * s.state_dim], axis=-1)
 
     conv_buf = jnp.concatenate([cache["conv"], xBC[:, None, :]], axis=1)  # [B,W,C]
@@ -668,4 +873,10 @@ def mamba_decode(params, x, cache, cfg: ModelConfig):
     y = y + params["D"][None, :, None] * xh
     y = y.reshape(B, 1, d_in).astype(x.dtype)
     y = rms_norm(y * jax.nn.silu(z[:, None, :]), params["gate_norm"], cfg.norm_eps)
-    return y @ params["out_proj"], {"h": h, "conv": new_conv}
+    if lora_idx is not None:
+        out = grouped_lora_matmul(y, params["out_proj"],
+                                  lora.get("out_proj") if lora else None,
+                                  lora_idx, lora_scale, kernel=lora_kernel)
+    else:
+        out = y @ params["out_proj"]
+    return out, {"h": h, "conv": new_conv}

@@ -468,3 +468,96 @@ def decode_step(cfg: ModelConfig, params, cache, tokens, pos, *, lora=None,
     else:
         logits = x[:, 0] @ params["unembed"]
     return logits.astype(jnp.float32), new_cache
+
+
+def decode_chunk(cfg: ModelConfig, params, cache, embeds, pos, *,
+                 adapters=None, adapter_idx=None, lora_scale: float = 1.0,
+                 valid=None, lora_kernel: bool = False, logits: bool = True,
+                 chunked: bool | None = False, moe_spec=None):
+    """Batched multi-adapter decode over ``C`` positions per row — the
+    serving hot path (``C = 1``: one-token decode; ``C = chunk``: chunked
+    prefill), replacing the per-row vmap-of-``decode_step`` formulation.
+
+    ``embeds``: [B, C, d] input vectors (the engine muxes token embeddings
+    / vision-prefix vectors upstream); ``pos``: [B] per-row first position
+    (ragged continuous-batching slots); ``valid``: optional [B, C] mask for
+    ragged chunk tails (masked positions leave their cache rows untouched
+    and produce discarded outputs).  ``adapters``: stacked LoRA bank with
+    leaves [L, G, ...] — the bank (G) axis sits AFTER the block-scan (L)
+    axis so the scan strips L exactly like the single-adapter tree (see
+    ``make_multi_adapter_serve_step``); ``adapter_idx``: i32 [B] per-row
+    bank index (BGMV).  LoRA deltas are computed per row from the gathered
+    tiny (A, B) pairs, or — ``lora_kernel=True`` — by the Pallas
+    scalar-prefetch gather kernel; a full per-row adapter-tree copy is
+    never materialised.  ``logits=False`` skips the final norm + unembed
+    entirely (prefill positions' logits are discarded anyway); it is also
+    required when ``C > 1``.
+
+    Caches are the ``init_cache`` layout (batch axis 1).  Supported
+    sublayers: attn / attn_local (incl. ring) / MLA / mamba (``C = 1``
+    only — a recurrent state cannot skip masked chunk tails); cross-attn
+    and enc-dec are rejected, matching the ServingEngine's gate.
+
+    Returns (logits [B, V] | None, new_cache).
+    """
+    lora_scan = adapters if adapters is not None else {}
+    C = embeds.shape[1]
+    if logits and C != 1:
+        raise ValueError("logits=True needs C == 1 (prefill discards them)")
+    if cfg.family == "encdec":
+        raise NotImplementedError("enc-dec stacks are engine-gated")
+
+    def body(carry, xs):
+        h = carry
+        bp, lt, ci = xs
+        new_ci = {}
+        for i, kind in enumerate(cfg.pattern):
+            pre = f"s{i}"
+            hn = L.rms_norm(h, bp[pre]["ln1"], cfg.norm_eps)
+            if kind in ("attn", "attn_local"):
+                if cfg.mla is not None:
+                    lo = _sub_lora(lt, f"{pre}.mla")
+                    y, new_ci[pre] = L.mla_decode_batch(
+                        bp[pre]["mla"], hn, ci[pre], cfg, pos=pos,
+                        valid=valid, lora=lo, lora_scale=lora_scale,
+                        lora_idx=adapter_idx, lora_kernel=lora_kernel)
+                else:
+                    lo = _sub_lora(lt, f"{pre}.attn")
+                    y, new_ci[pre] = L.attention_decode_batch(
+                        bp[pre]["attn"], hn, ci[pre], cfg, kind=kind,
+                        pos=pos, valid=valid, lora=lo, lora_scale=lora_scale,
+                        lora_idx=adapter_idx, lora_kernel=lora_kernel,
+                        chunked=chunked)
+            elif kind == "mamba":
+                if C != 1:
+                    raise NotImplementedError(
+                        "chunked prefill over a recurrent mamba state is "
+                        "not supported (engine gates it)")
+                lo = _sub_lora(lt, f"{pre}.mamba")
+                y, new_ci[pre] = L.mamba_decode(
+                    bp[pre]["mamba"], hn, ci[pre], cfg, lora=lo,
+                    lora_scale=lora_scale, lora_idx=adapter_idx,
+                    lora_kernel=lora_kernel)
+            else:
+                raise NotImplementedError(
+                    f"batched decode does not support {kind!r}")
+            h = h + y
+            if "moe" in bp[pre]:
+                h2 = L.rms_norm(h, bp[pre]["ln2"], cfg.norm_eps)
+                y, _ = L.moe_forward(bp[pre]["moe"], h2, cfg,
+                                     expert_spec=moe_spec)
+                h = h + y
+            elif "ffn" in bp[pre]:
+                h2 = L.rms_norm(h, bp[pre]["ln2"], cfg.norm_eps)
+                h = h + L.mlp_forward(bp[pre]["ffn"], h2)
+        return h, new_ci
+
+    x, new_cache = lax.scan(body, embeds, (params["blocks"], lora_scan, cache))
+    if not logits:
+        return None, new_cache
+    x = L.rms_norm(x, params["final_ln"], cfg.norm_eps)
+    if cfg.tie_embeddings:
+        out = x[:, 0] @ params["embed"].T
+    else:
+        out = x[:, 0] @ params["unembed"]
+    return out.astype(jnp.float32), new_cache

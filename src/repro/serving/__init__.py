@@ -17,30 +17,39 @@ checkpoint) to answering mixed-tenant inference traffic:
   :class:`~repro.serving.engine.Request` — the continuous-batching decode
   loop: a request queue, ragged per-slot occupancy of one rectangular KV
   cache (``init_cache`` layout, per-slot positions), admission into free
-  slots at every step, and ONE jitted multi-adapter dispatch per decode
-  step in which each batch row gathers its own adapter by bank index
-  (``repro.launch.steps.make_multi_adapter_serve_step``, a jnp gather +
-  vmap that XLA fuses; its TPU-native BGMV counterpart with a per-row
-  adapter-index scalar-prefetch operand is
-  ``repro.kernels.lora_gather_matmul`` — exactness-tested, wiring it
-  through the layer stack is a ROADMAP item).
+  slots at every step, chunked multi-token prefill at admission
+  (``prefill_chunk``: ⌈P/chunk⌉ ``serve_prefill`` dispatches per P-position
+  prompt via ``repro.launch.steps.make_chunked_prefill_step``), and ONE
+  jitted multi-adapter dispatch per decode step in which each batch row
+  applies its own adapter by bank index through the batched per-row-position
+  decode (``repro.launch.steps.make_multi_adapter_serve_step``): per-site
+  gathered (A, B) pairs (``lora_backend="gather"``) or the TPU-native BGMV
+  Pallas kernel whose per-row adapter-index scalar-prefetch operand steers
+  the A/B DMA (``lora_backend="grouped"``,
+  ``repro.kernels.lora_gather_matmul``) — both token-identical to
+  per-client decode (tested).
+* :class:`~repro.serving.engine.SamplingConfig` — opt-in temperature /
+  top-k decoding with per-slot PRNG keys carried in engine state; greedy
+  stays the default and the exactness-tested path.
 
 Request lifecycle: ``submit`` → queued → admitted (adapter pinned + paged
-in, prompt staged, slot cache reset) → prefill streamed through the decode
-step one position per step → greedy decode → retired (tokens fetched,
-adapter unpinned, slot freed).  Nothing crosses to the host per step;
-generated tokens are fetched only at completion, and scheduling runs
-entirely on host-side position mirrors.  Greedy outputs are token-for-token
-identical to running each request alone through
-``repro.launch.steps.make_greedy_generate`` with its client's adapter
-(tested end-to-end from a trained population).
+in, prompt staged, slot cache reset, cache rows chunk-prefilled — or,
+legacy, prefill streamed through the decode step one position per step) →
+decode → retired (tokens fetched, adapter unpinned, slot freed).  Nothing
+crosses to the host per step; generated tokens are fetched only at
+completion, and scheduling runs entirely on host-side position mirrors.
+Greedy outputs are token-for-token identical to running each request alone
+through ``repro.launch.steps.make_greedy_generate`` with its client's
+adapter (tested end-to-end from a trained population, under both LoRA
+backends and both prefill modes).
 
 Benchmarked by ``benchmarks/bench_serving.py`` → ``BENCH_serving.json``
-(tokens/sec, request-latency percentiles, continuous- vs static-batching
-throughput, SHA-keyed history).
+(tokens/sec, request-latency + time-to-first-token percentiles, continuous-
+vs static-batching throughput, chunked- vs streamed-prefill dispatches,
+SHA-keyed history).
 """
 
 from repro.serving.adapter_store import AdapterStore
-from repro.serving.engine import Request, ServingEngine
+from repro.serving.engine import Request, SamplingConfig, ServingEngine
 
-__all__ = ["AdapterStore", "Request", "ServingEngine"]
+__all__ = ["AdapterStore", "Request", "SamplingConfig", "ServingEngine"]

@@ -20,6 +20,9 @@ holding the *hot set*:
 The stack plus per-row slot indices feed
 ``repro.launch.steps.make_multi_adapter_serve_step`` /
 ``kernels/lora_gather_matmul.py`` — each decode row gathers its own slot.
+The serving hot path consumes :attr:`scan_stack`, a cached scan-major
+``[L, slots, ...]`` copy refreshed only on page-in, so no per-token
+dispatch ever transposes the bank.
 """
 
 from __future__ import annotations
@@ -70,6 +73,7 @@ class AdapterStore:
         self._lru: dict[Hashable, int] = {}        # resident id -> last-use tick
         self._tick = 0
         self._stack: Pytree | None = None          # device [S, ...] bank
+        self._scan_stack: Pytree | None = None     # cached [L, S, ...] view
         self.loads = 0
         self.evictions = 0
         self.dispatch_count = (collections.Counter()
@@ -116,6 +120,21 @@ class AdapterStore:
                 lambda x: jnp.zeros((self.slots,) + x.shape, x.dtype), proto)
         return self._stack
 
+    @property
+    def scan_stack(self) -> Pytree:
+        """Scan-major ``[L, slots, ...]`` copy of the bank (block-scanned
+        decode programs consume LoRA leaves sliced along the layer axis, so
+        handing them this layout avoids re-transposing the WHOLE bank inside
+        every jitted serve/prefill dispatch).  Cached; refreshed only when a
+        page-in mutates the bank — paging is rare (LRU), decode steps are
+        the hot path.  Only the block-stacked ``s*`` entries serve (enc.*
+        never does)."""
+        if self._scan_stack is None:
+            self._scan_stack = {
+                k: jax.tree_util.tree_map(lambda x: jnp.swapaxes(x, 0, 1), v)
+                for k, v in self.stack.items() if k.startswith("s")}
+        return self._scan_stack
+
     # ------------------------------------------------------------ residency
     def _drop(self, adapter_id: Hashable) -> None:
         slot = self._slot_of.pop(adapter_id)
@@ -153,6 +172,7 @@ class AdapterStore:
             self._stack = jax.tree_util.tree_map(
                 lambda s, h: s.at[slot].set(jnp.asarray(h)),
                 self.stack, self._host[adapter_id])
+            self._scan_stack = None        # derived copy is now stale
             self._slot_of[adapter_id] = slot
             self._id_at[slot] = adapter_id
             self.loads += 1

@@ -16,19 +16,28 @@ buffers, one adapter-bank index.  The decode loop is:
    request's *projected* vision-prefix vectors (the ``vision_proj`` matmul
    runs once here, not per step) into the slot's device buffers and zeroes
    the slot's cache rows — one small jitted scatter per admitted request
-   (``serve_admit``).
+   (``serve_admit``).  With ``prefill_chunk`` set, admission then fills the
+   slot's cache rows by **chunked prefill**: ⌈P/chunk⌉ ``serve_prefill``
+   dispatches (``repro.launch.steps.make_chunked_prefill_step``) each push
+   up to ``chunk`` teacher-forced positions through the decode-cache write
+   path in one program — no logits, intra-chunk causal attention at the
+   slot's ragged offset — so a freshly admitted long prompt never steals
+   decode steps from active slots.
 2. **step** — ONE jitted dispatch (``serve_step``) advances every occupied
    slot by one token.  Inside the program each slot muxes its own input:
    vision-prefix vector while ``pos < n_prefix``, teacher-forced prompt
    token while ``pos < plen``, else the slot's last generated token; the
    batched multi-adapter decode
-   (``repro.launch.steps.make_multi_adapter_serve_step``) gathers each
-   row's adapter from the store's stacked bank by index (BGMV) and runs the
-   vmapped KV-cached decode at per-row positions; greedy next-tokens are
-   written into the slot's generation buffer in-program.  Prefill is
-   *streamed through the decode step* (one position per step, exactly like
-   ``make_greedy_generate``'s prefill scan), so a step never waits for a
-   separate prefill dispatch and new requests overlap old ones' decode.
+   (``repro.launch.steps.make_multi_adapter_serve_step``) applies each
+   row's adapter from the store's stacked bank by index (BGMV — per-site
+   gathered (A, B) pairs, or the Pallas scalar-prefetch gather kernel with
+   ``lora_backend="grouped"``) and runs the batched KV-cached decode at
+   per-row positions; next tokens (greedy, or temperature/top-k sampled
+   from per-slot PRNG keys when ``sampling`` is set) are written into the
+   slot's generation buffer in-program.  Without ``prefill_chunk``, prefill
+   is *streamed through the decode step* (one position per step) — the
+   legacy baseline ``benchmarks/bench_serving.py`` measures chunked prefill
+   against.
 3. **retire** — the host tracks every slot's position mirror (positions
    advance deterministically, so scheduling needs NO device fetch); slots
    whose request finished are fetched (one gather for all completions of
@@ -36,8 +45,12 @@ buffers, one adapter-bank index.  The decode loop is:
 
 What is fetched when: nothing per step — generated tokens cross to host
 only when a request completes.  ``dispatch_count`` tallies ``serve_step``
-(exactly one per decode step — asserted by tests), ``serve_admit``,
-``adapter_load`` and ``fetch``.
+(exactly one per decode step — asserted by tests), ``serve_prefill``
+(exactly ⌈P/chunk⌉ per admitted P-position prompt — asserted),
+``serve_admit``, ``adapter_load`` and ``fetch``.  Completion records carry
+``latency_s`` and ``ttft_s`` (submit → the step() call that emitted the
+request's first token; dispatch-clock, not device-sync — the scheduling
+delay chunked prefill attacks).
 
 Static-batching mode (``continuous=False``) admits only when ALL slots are
 free — the classic serve-a-batch-then-drain baseline that
@@ -57,7 +70,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.launch.steps import make_multi_adapter_serve_step
+from repro.launch.steps import (make_chunked_prefill_step,
+                                make_multi_adapter_serve_step)
 from repro.models import transformer as T
 from repro.models.config import ModelConfig
 
@@ -67,9 +81,23 @@ Pytree = Any
 _UIDS = itertools.count()
 
 
+@dataclasses.dataclass(frozen=True)
+class SamplingConfig:
+    """Opt-in stochastic decoding: logits are scaled by ``1/temperature``,
+    optionally truncated to the ``top_k`` largest, and sampled with a
+    per-slot PRNG key carried in engine state (seeded from the engine's
+    ``sample_seed`` folded with the request uid at admission, so a given
+    request's tokens are reproducible).  Greedy (``sampling=None``) stays
+    the default and the exactness-tested path; ``top_k=1`` degenerates to
+    greedy (tested)."""
+
+    temperature: float = 1.0
+    top_k: int = 0                     # 0 = full vocabulary
+
+
 @dataclasses.dataclass
 class Request:
-    """One inference request: greedy-decode ``gen_len`` tokens after the
+    """One inference request: decode ``gen_len`` tokens after the
     teacher-forced ``prompt_tokens`` (and, for prefix-VLMs, the projected
     ``vision`` patches), through adapter ``adapter_id``."""
 
@@ -79,6 +107,7 @@ class Request:
     vision: np.ndarray | None = None   # f32 [P, Dv]
     uid: int = dataclasses.field(default_factory=lambda: next(_UIDS))
     submitted_at: float = 0.0
+    first_token_at: float | None = None
 
 
 class ServingEngine:
@@ -95,13 +124,24 @@ class ServingEngine:
     def __init__(self, cfg: ModelConfig, params: Pytree, store: AdapterStore,
                  *, lora_scale: float, max_slots: int = 8,
                  max_prompt: int = 32, max_gen: int = 32,
-                 use_vision: bool | None = None, continuous: bool = True):
+                 use_vision: bool | None = None, continuous: bool = True,
+                 prefill_chunk: int | None = None,
+                 prefill_flash: bool | None = None,
+                 lora_backend: str = "gather",
+                 sampling: SamplingConfig | None = None,
+                 sample_seed: int = 0):
         bad = {k for k in cfg.pattern if k not in ("attn", "attn_local",
                                                    "mamba")}
         if bad or cfg.family == "encdec":
             raise NotImplementedError(
                 f"serving engine supports attn/attn_local/mamba stacks, got "
                 f"pattern {cfg.pattern} family {cfg.family}")
+        if lora_backend not in ("gather", "grouped"):
+            raise ValueError(f"lora_backend {lora_backend!r} not in "
+                             "('gather', 'grouped')")
+        if sampling is not None and sampling.temperature <= 0:
+            raise ValueError("sampling.temperature must be > 0 "
+                             "(use sampling=None for greedy)")
         self.cfg = cfg
         self.params = params
         self.store = store
@@ -110,10 +150,44 @@ class ServingEngine:
         self.max_prompt = max_prompt
         self.max_gen = max_gen
         self.continuous = continuous
+        self.lora_backend = lora_backend
+        self.sampling = sampling
+        self.sample_seed = sample_seed
         if use_vision is None:
             use_vision = cfg.family == "vlm" and cfg.vision_mode == "prefix"
         self._n_prefix = cfg.num_vision_tokens if use_vision else 0
         self.cache_len = self._n_prefix + max_prompt + max_gen
+        if prefill_chunk is not None:
+            if prefill_chunk < 1:
+                raise ValueError(f"prefill_chunk must be >= 1, got "
+                                 f"{prefill_chunk}")
+            if "mamba" in cfg.pattern:
+                raise NotImplementedError(
+                    "chunked prefill needs positional cache rows; a mamba "
+                    "state is recurrent — use streamed prefill "
+                    "(prefill_chunk=None) for mamba stacks")
+            if "attn_local" in cfg.pattern and cfg.sliding_window:
+                ring = min(self.cache_len, cfg.sliding_window)
+                if prefill_chunk > ring:
+                    raise ValueError(
+                        f"prefill_chunk {prefill_chunk} exceeds the local "
+                        f"layers' ring cache ({ring} rows) — per-row "
+                        "scatter indices would collide")
+                max_fill = self._n_prefix + max_prompt - 1
+                if prefill_chunk > 1 and max_fill > ring:
+                    raise ValueError(
+                        f"chunked prefill would wrap the local layers' "
+                        f"ring cache: up to {max_fill} teacher-forced "
+                        f"positions vs {ring} ring rows.  A chunk writes "
+                        "all its K/V rows before attending, so a write at "
+                        "position p >= ring overwrites the slot holding "
+                        "p-ring, which earlier queries of the SAME chunk "
+                        "still need (any p-ring is inside their window "
+                        "because ring <= window) — tokens would silently "
+                        "diverge from streamed decode.  Shrink max_prompt, "
+                        "grow the window, or use streamed prefill "
+                        "(prefill_chunk=None)")
+        self.prefill_chunk = prefill_chunk
 
         B = max_slots
         self._cache = T.init_cache(cfg, params, B, self.cache_len)
@@ -131,13 +205,24 @@ class ServingEngine:
             # projection runs once per request at admit time, not per step
             state["vis"] = jnp.zeros(
                 (B, cfg.num_vision_tokens, cfg.d_model), jnp.dtype(cfg.dtype))
+        if sampling is not None:
+            state["rng"] = jnp.zeros((B, 2), jnp.uint32)  # per-slot PRNG key
         self._state = state
         self._step_fn = jax.jit(self._build_step(), donate_argnums=(2, 3))
         self._admit_fn = jax.jit(self._build_admit(), donate_argnums=(1, 2))
+        self._prefill_fn = None
+        if prefill_chunk is not None:
+            self._prefill_fn = jax.jit(
+                make_chunked_prefill_step(
+                    cfg, lora_scale=lora_scale, chunk=prefill_chunk,
+                    n_prefix=self._n_prefix, lora_backend=lora_backend,
+                    bank_layout="scan", flash=prefill_flash),
+                donate_argnums=(2, 3))
 
         # host mirrors (scheduling never fetches device state)
         self._requests: list[Request | None] = [None] * B
         self._pos_h = np.zeros((B,), np.int64)
+        self._plen_h = np.zeros((B,), np.int64)
         self._tlen_h = np.zeros((B,), np.int64)
         self.queue: collections.deque[Request] = collections.deque()
         self.completed: list[dict] = []
@@ -148,7 +233,12 @@ class ServingEngine:
     def _build_step(self):
         cfg, n_prefix = self.cfg, self._n_prefix
         Sp, max_gen = self.max_prompt, self.max_gen
-        serve = make_multi_adapter_serve_step(cfg, lora_scale=self.lora_scale)
+        sampling = self.sampling
+        # the engine feeds store.scan_stack (scan-major [L, G, ...],
+        # re-transposed only on page-in) so no dispatch transposes the bank
+        serve = make_multi_adapter_serve_step(cfg, lora_scale=self.lora_scale,
+                                              lora_backend=self.lora_backend,
+                                              bank_layout="scan")
 
         def serve_step(params, adapters, state, cache):
             pos, plen, tlen = state["pos"], state["plen"], state["tlen"]
@@ -168,8 +258,20 @@ class ServingEngine:
             # ---- batched multi-adapter decode (per-row adapter + pos) -----
             logits, cache = serve(params, adapters, state["aidx"], cache,
                                   embeds, pos)
-            nxt = jnp.argmax(logits, -1).astype(jnp.int32)
-            # ---- greedy emit into the slot's generation buffer ------------
+            if sampling is None:
+                nxt = jnp.argmax(logits, -1).astype(jnp.int32)
+            else:
+                # per-slot keys: split once per step, sample each row with
+                # its own subkey, carry the rest — fully in-program
+                ks = jax.vmap(lambda k: jax.random.split(k, 2))(state["rng"])
+                sub, state = ks[:, 0], dict(state, rng=ks[:, 1])
+                lg = logits / sampling.temperature
+                if sampling.top_k:
+                    kth = jax.lax.top_k(lg, sampling.top_k)[0][:, -1:]
+                    lg = jnp.where(lg >= kth, lg, -1e30)
+                nxt = jax.vmap(jax.random.categorical)(sub, lg).astype(
+                    jnp.int32)
+            # ---- emit into the slot's generation buffer -------------------
             g = pos - (plen - 1)                # generated-token index
             ok = active & (g >= 0) & (g < max_gen)
             rows = jnp.arange(pos.shape[0])
@@ -184,8 +286,10 @@ class ServingEngine:
 
     def _build_admit(self):
         vlm = bool(self._n_prefix)
+        sampled = self.sampling is not None
 
-        def admit(params, state, cache, slot, ptoks, vis, aidx, plen, tlen):
+        def admit(params, state, cache, slot, ptoks, vis, aidx, plen, tlen,
+                  rng):
             st = dict(state)
             st["ptoks"] = state["ptoks"].at[slot].set(ptoks)
             if vlm:
@@ -195,6 +299,8 @@ class ServingEngine:
                 dt = state["vis"].dtype
                 pre = vis.astype(dt) @ params["vision_proj"].astype(dt)
                 st["vis"] = state["vis"].at[slot].set(pre)
+            if sampled:
+                st["rng"] = state["rng"].at[slot].set(rng)
             st["aidx"] = state["aidx"].at[slot].set(aidx)
             st["pos"] = state["pos"].at[slot].set(0)
             st["plen"] = state["plen"].at[slot].set(plen)
@@ -238,6 +344,7 @@ class ServingEngine:
                     f"request {req.uid}: vision-prefix engine needs vision "
                     f"patches of shape {want}, got {got}")
         req.submitted_at = time.perf_counter()
+        req.first_token_at = None        # resubmittable: per-run field
         self.queue.append(req)
         return req.uid
 
@@ -263,16 +370,38 @@ class ServingEngine:
             vis = jnp.zeros((0,), jnp.float32)
             if self._n_prefix:
                 vis = jnp.asarray(req.vision, jnp.float32)
+            rng = jnp.zeros((2,), jnp.uint32)
+            if self.sampling is not None:
+                rng = jax.random.fold_in(
+                    jax.random.PRNGKey(self.sample_seed), req.uid)
             self.dispatch_count["serve_admit"] += 1
             self._state, self._cache = self._admit_fn(
                 self.params, self._state, self._cache,
                 jnp.asarray(slot, jnp.int32), jnp.asarray(ptoks), vis,
                 jnp.asarray(bank_slot, jnp.int32),
-                jnp.asarray(plen, jnp.int32), jnp.asarray(tlen, jnp.int32))
+                jnp.asarray(plen, jnp.int32), jnp.asarray(tlen, jnp.int32),
+                rng)
             self._requests[slot] = req
             self._pos_h[slot] = 0
+            self._plen_h[slot] = plen
             self._tlen_h[slot] = tlen
             admitted += 1
+            if self.prefill_chunk is not None:
+                # chunked prefill: fill the slot's plen-1 teacher-forced
+                # cache rows NOW, in ⌈P/chunk⌉ dispatches (asserted by
+                # bench --quick) — serve_step then starts at the last
+                # prompt position and every one of its steps emits a token
+                n_fill = plen - 1
+                for _ in range(-(-n_fill // self.prefill_chunk)):
+                    self.dispatch_count["serve_prefill"] += 1
+                    with warnings.catch_warnings():
+                        warnings.filterwarnings(
+                            "ignore",
+                            message="Some donated buffers were not usable")
+                        self._state, self._cache = self._prefill_fn(
+                            self.params, self.store.scan_stack, self._state,
+                            self._cache)
+                self._pos_h[slot] = n_fill
         return admitted
 
     def _retire_finished(self) -> list[dict]:
@@ -287,10 +416,12 @@ class ServingEngine:
             req = self._requests[s]
             self.store.release(req.adapter_id)
             self._requests[s] = None
+            self._plen_h[s] = 0
             self._tlen_h[s] = 0
             out.append({"uid": req.uid, "adapter_id": req.adapter_id,
                         "tokens": np.asarray(gen_rows[i][:req.gen_len]),
-                        "latency_s": now - req.submitted_at})
+                        "latency_s": now - req.submitted_at,
+                        "ttft_s": req.first_token_at - req.submitted_at})
         self.completed.extend(out)
         return out
 
@@ -308,9 +439,15 @@ class ServingEngine:
             warnings.filterwarnings(
                 "ignore", message="Some donated buffers were not usable")
             self._state, self._cache = self._step_fn(
-                self.params, self.store.stack, self._state, self._cache)
+                self.params, self.store.scan_stack, self._state, self._cache)
+        now = time.perf_counter()
         for s in busy:
             self._pos_h[s] += 1
+            if self._pos_h[s] == self._plen_h[s]:
+                # this step processed the last prompt position — it emitted
+                # the request's first token (time-to-first-token, dispatch
+                # clock: the token itself crosses to host only at retire)
+                self._requests[s].first_token_at = now
         return self._retire_finished()
 
     def run(self, requests=None, max_steps: int | None = None) -> list[dict]:
@@ -341,6 +478,7 @@ class ServingEngine:
         self.completed = []
         self._state = jax.tree_util.tree_map(jnp.zeros_like, self._state)
         self._pos_h[:] = 0
+        self._plen_h[:] = 0
         self._tlen_h[:] = 0
         self.steps = 0
         self.dispatch_count.clear()

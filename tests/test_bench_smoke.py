@@ -55,8 +55,10 @@ def test_bench_quick_cli_lines(monkeypatch):
 @pytest.mark.slow
 def test_bench_serving_quick_dispatch_counts():
     """Serving loop dispatch accounting: exactly one serve_step per decode
-    step, one admit per request, paging + fetches bounded — and continuous
-    batching never needs more steps than static on the same request set."""
+    step, one admit per request, paging + fetches bounded, continuous
+    batching never needs more steps than static — and chunked prefill
+    admits a P-position prompt in exactly ⌈P/chunk⌉ serve_prefill
+    dispatches while serve_step stops walking prompt positions."""
     from benchmarks.bench_serving import N_REQUESTS, quick_check
 
     counts = quick_check()
@@ -70,6 +72,19 @@ def test_bench_serving_quick_dispatch_counts():
                                         "adapter_load", "fetch"}
     assert counts["continuous"]["steps"] < counts["static"]["steps"]
 
+    pre = counts["prefill"]
+    assert pre["requests"] == N_REQUESTS
+    # admission dispatches: P → ⌈P/chunk⌉, per prompt, exactly
+    per_prompt = -(-pre["prompt_fill_positions"] // pre["chunk"])
+    assert pre["dispatch"]["serve_prefill"] == N_REQUESTS * per_prompt
+    assert pre["dispatch"]["serve_prefill"] == pre["expected_serve_prefill"]
+    assert pre["dispatch"]["serve_step"] == pre["steps"]
+    # serve_step no longer advances through prompt positions: every decode
+    # step emits a token, so the same workload needs strictly fewer steps
+    assert pre["steps"] < pre["streamed_steps"]
+    assert set(pre["dispatch"]) <= {"serve_step", "serve_prefill",
+                                    "serve_admit", "adapter_load", "fetch"}
+
 
 def test_bench_serving_quick_cli_lines(monkeypatch):
     """--quick CSV formatting (quick_check stubbed — no compile cost)."""
@@ -82,6 +97,44 @@ def test_bench_serving_quick_cli_lines(monkeypatch):
     assert "serving/dispatch/continuous/steps,0.0,5" in lines
     assert "serving/dispatch/continuous/serve_step,0.0,5" in lines
     assert "serving/dispatch/continuous/serve_admit,0.0,2" in lines
+
+
+def test_bench_serving_quick_prefill_cli_lines(monkeypatch):
+    """--quick-prefill CSV formatting (stubbed — no compile cost)."""
+    import benchmarks.bench_serving as B
+
+    monkeypatch.setattr(B, "quick_prefill_check", lambda: {
+        "prefill": {"steps": 4, "requests": 2, "chunk": 4,
+                    "prompt_fill_positions": 15,
+                    "expected_serve_prefill": 8,
+                    "dispatch": {"serve_step": 4, "serve_prefill": 8}}})
+    lines = B.main(["--quick-prefill"])
+    assert "serving/dispatch/prefill/steps,0.0,4" in lines
+    assert "serving/dispatch/prefill/serve_prefill,0.0,8" in lines
+    assert "serving/dispatch/prefill/expected_serve_prefill,0.0,8" in lines
+
+
+def test_trajectory_cross_pr_table(tmp_path):
+    """run.py --trajectory surfaces every artifact's SHA-keyed history as
+    table rows (missing artifacts and pre-metric runs degrade gracefully)."""
+    import json
+
+    from benchmarks.run import trajectory
+
+    with open(tmp_path / "BENCH_serving.json", "w") as f:
+        json.dump({"history": [
+            {"sha": "abc1234", "timestamp": "2026-07-28T00:00:00+00:00",
+             "results": {"continuous": {"tokens_per_sec": 100.0,
+                                        "p50_latency_s": 0.01,
+                                        "p50_ttft_s": 0.005},
+                         "continuous_vs_static_throughput": 1.2,
+                         "chunked_vs_streamed_ttft_p50": 3.0}},
+            {"sha": None, "timestamp": None, "results": {}},
+        ]}, f)
+    text = "\n".join(trajectory(root=str(tmp_path)))
+    assert "abc1234" in text
+    assert "100.00" in text and "3.00" in text and "5.00" in text  # ms scale
+    assert "(missing" in text            # fedround artifact absent here
 
 
 def test_bench_history_appends(tmp_path, monkeypatch):

@@ -83,3 +83,108 @@ def test_mamba_state_constant_in_seq():
     c2 = T.init_cache(cfg, params, 2, 4096)
     sz = lambda c: sum(x.size for x in jax.tree_util.tree_leaves(c))
     assert sz(c1) == sz(c2)  # O(1) decode state — why mamba runs long_500k
+
+
+# ---------------------------------------------------------------------------
+# batched per-row-position decode (decode_chunk) — the serving hot path
+# ---------------------------------------------------------------------------
+
+def _rows(tree, b):
+    return jax.tree_util.tree_map(lambda x: x[:, b:b + 1], tree)
+
+
+@pytest.mark.parametrize("arch", ["qwen2-0.5b", "gemma3-12b",
+                                  "deepseek-v2-236b", "mamba2-130m"])
+def test_decode_chunk_matches_per_row_decode_step(arch):
+    """One batched decode_chunk dispatch at per-row ragged positions must
+    equal running each row alone through the scalar-pos decode_step —
+    across GQA, sliding-window ring, MLA-absorbed and mamba caches."""
+    cfg = _bump_capacity(get_reduced_config(arch))
+    key = jax.random.PRNGKey(0)
+    B, Smax = 3, 12
+    params = T.init_params(key, cfg)
+    cache = T.init_cache(cfg, params, B, Smax)
+    pos = jnp.asarray([0, 3, 5], jnp.int32)
+    emb = jax.random.normal(jax.random.fold_in(key, 1),
+                            (B, 1, cfg.d_model), jnp.dtype(cfg.dtype))
+    logits, new_cache = T.decode_chunk(cfg, params, cache, emb, pos)
+    for b in range(B):
+        lg, rc = T.decode_step(cfg, params, _rows(cache, b), None, pos[b],
+                               embeds=emb[b:b + 1])
+        err = float(jnp.max(jnp.abs(logits[b] - lg[0])))
+        assert err < 2e-4, (arch, b, err)
+        for got, ref in zip(jax.tree_util.tree_leaves(_rows(new_cache, b)),
+                            jax.tree_util.tree_leaves(rc)):
+            np.testing.assert_allclose(np.asarray(got), np.asarray(ref),
+                                       atol=2e-4)
+
+
+@pytest.mark.parametrize("arch", ["qwen2-0.5b", "gemma3-12b",
+                                  "deepseek-v2-236b"])
+def test_decode_chunk_prefill_matches_streamed(arch):
+    """Chunked multi-token prefill with ragged per-row tails must leave the
+    cache exactly as one-position-at-a-time streaming does, and the next
+    decode step must produce the same logits — including through the
+    forced online-softmax ("flash") intra-chunk attention path."""
+    cfg = _bump_capacity(get_reduced_config(arch))
+    key = jax.random.PRNGKey(1)
+    B, Smax, chunk, Tmax = 3, 12, 4, 6
+    n_valid = jnp.asarray([6, 4, 5], jnp.int32)
+    params = T.init_params(key, cfg)
+    cache0 = T.init_cache(cfg, params, B, Smax)
+    embeds = jax.random.normal(jax.random.fold_in(key, 2),
+                               (B, Tmax, cfg.d_model), jnp.dtype(cfg.dtype))
+
+    def chunked(flash):
+        cache, pos = cache0, jnp.zeros((B,), jnp.int32)
+        for _ in range(-(-Tmax // chunk)):
+            offs = pos[:, None] + jnp.arange(chunk)
+            valid = offs < n_valid[:, None]
+            block = jnp.take_along_axis(
+                embeds, jnp.clip(offs, 0, Tmax - 1)[..., None], axis=1)
+            _, cache = T.decode_chunk(cfg, params, cache, block, pos,
+                                      valid=valid, logits=False,
+                                      chunked=flash)
+            pos = pos + valid.sum(1).astype(pos.dtype)
+        return cache
+
+    cache_c = chunked(False)
+    # streamed reference: each row alone, one scalar-pos step per position
+    ref_rows = []
+    for b in range(B):
+        rc = _rows(cache0, b)
+        for t in range(int(n_valid[b])):
+            _, rc = T.decode_step(cfg, params, rc, None, t,
+                                  embeds=embeds[b:b + 1, t:t + 1])
+        ref_rows.append(rc)
+    for b in range(B):
+        for got, ref in zip(jax.tree_util.tree_leaves(_rows(cache_c, b)),
+                            jax.tree_util.tree_leaves(ref_rows[b])):
+            np.testing.assert_allclose(np.asarray(got), np.asarray(ref),
+                                       atol=2e-4)
+    # the step after prefill sees identical context
+    emb1 = jax.random.normal(jax.random.fold_in(key, 3),
+                             (B, 1, cfg.d_model), jnp.dtype(cfg.dtype))
+    lg_c, _ = T.decode_chunk(cfg, params, cache_c, emb1, n_valid)
+    for b in range(B):
+        lg_r, _ = T.decode_step(cfg, params, ref_rows[b], None, n_valid[b],
+                                embeds=emb1[b:b + 1])
+        assert float(jnp.max(jnp.abs(lg_c[b] - lg_r[0]))) < 2e-4, (arch, b)
+    # flash path: same cache up to online-softmax fp noise
+    cache_f = chunked(True)
+    for got, ref in zip(jax.tree_util.tree_leaves(cache_f),
+                        jax.tree_util.tree_leaves(cache_c)):
+        np.testing.assert_allclose(np.asarray(got, np.float32),
+                                   np.asarray(ref, np.float32), atol=1e-3)
+
+
+def test_decode_chunk_rejects_unsupported():
+    cfg = get_reduced_config("mamba2-130m")
+    params = T.init_params(jax.random.PRNGKey(0), cfg)
+    cache = T.init_cache(cfg, params, 2, 8)
+    emb = jnp.zeros((2, 3, cfg.d_model), jnp.dtype(cfg.dtype))
+    with pytest.raises(NotImplementedError, match="mamba"):
+        T.decode_chunk(cfg, params, cache, emb, jnp.zeros((2,), jnp.int32),
+                       logits=False)
+    with pytest.raises(ValueError, match="C == 1"):
+        T.decode_chunk(cfg, params, cache, emb, jnp.zeros((2,), jnp.int32))

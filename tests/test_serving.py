@@ -22,7 +22,8 @@ from repro.launch.steps import (make_multi_adapter_serve_step,
                                 make_serve_step)
 from repro.models import transformer as T
 from repro.optim import OptimizerConfig
-from repro.serving import AdapterStore, Request, ServingEngine
+from repro.serving import (AdapterStore, Request, SamplingConfig,
+                           ServingEngine)
 
 pytestmark = pytest.mark.serving
 
@@ -57,11 +58,16 @@ def _mixed_requests(clients, cap_start, gen_len, per_client=2):
     return reqs
 
 
-def _engine(tr, gen_len, *, slots=4, continuous=True, store_slots=None):
+def _engine(tr, gen_len, *, slots=4, continuous=True, store_slots=None, **kw):
     store = AdapterStore.from_trainer(tr, slots=store_slots)
     return ServingEngine(tr.mcfg, tr.base_params, store,
                          lora_scale=tr.lora_scale, max_slots=slots,
-                         max_prompt=8, max_gen=gen_len, continuous=continuous)
+                         max_prompt=8, max_gen=gen_len, continuous=continuous,
+                         **kw)
+
+
+def _token_bags(done):
+    return sorted(np.asarray(d["tokens"]).tolist() for d in done)
 
 
 # ---------------------------------------------------------------------------
@@ -154,6 +160,141 @@ def test_serving_from_checkpoint_matches_live_store(population, tmp_path):
             tr.clients[k].lora, np.asarray(clients[k]["tokens"][:1]),
             jnp.asarray(clients[k]["image"][:1]), cap_start, gen_len)
         np.testing.assert_array_equal(dd["tokens"], np.asarray(ref)[0])
+
+
+# ---------------------------------------------------------------------------
+# chunked prefill: ⌈P/chunk⌉ admission dispatches, token-identical decode
+# ---------------------------------------------------------------------------
+
+def test_chunked_prefill_token_identical_and_dispatch_exact(population):
+    """Chunked prefill must (a) serve tokens bit-identical to the streamed
+    engine (and hence to per-client ``make_greedy_generate``), (b) cost
+    exactly ⌈P/chunk⌉ ``serve_prefill`` dispatches per admitted P-position
+    prompt, and (c) free ``serve_step`` from walking prompt positions —
+    strictly fewer decode steps for the same workload."""
+    tr, clients, cap_start, gen_len = population
+    chunk = 3
+    streamed = _engine(tr, gen_len)
+    done_s = streamed.run(_mixed_requests(clients, cap_start, gen_len))
+    chunked = _engine(tr, gen_len, prefill_chunk=chunk)
+    reqs = _mixed_requests(clients, cap_start, gen_len)
+    done_c = chunked.run(reqs)
+    assert _token_bags(done_c) == _token_bags(done_s)
+
+    n_prefix = tr.mcfg.num_vision_tokens
+    p_fill = n_prefix + (cap_start + 1) - 1      # teacher-forced cache fill
+    expect = len(reqs) * -(-p_fill // chunk)
+    dc = chunked.dispatch_count
+    assert dc["serve_prefill"] == expect
+    assert dc["serve_step"] == chunked.steps
+    assert dc["serve_admit"] == len(reqs)
+    assert set(dc) <= {"serve_step", "serve_prefill", "serve_admit",
+                       "adapter_load", "fetch"}
+    # prompt positions left the decode loop: every serve_step now emits
+    # tokens, so the same workload takes strictly fewer steps
+    assert chunked.steps < streamed.steps
+    assert "serve_prefill" not in streamed.dispatch_count
+    for d in done_c:
+        assert 0 < d["ttft_s"] <= d["latency_s"]
+
+
+def test_chunked_prefill_flash_path_token_identical(population):
+    """Forcing the chunked online-softmax ("flash") attention path for the
+    intra-chunk prefill attention must not change served tokens."""
+    tr, clients, cap_start, gen_len = population
+    base = _engine(tr, gen_len)
+    done_b = base.run(_mixed_requests(clients, cap_start, gen_len,
+                                      per_client=1))
+    flash = _engine(tr, gen_len, prefill_chunk=4, prefill_flash=True)
+    done_f = flash.run(_mixed_requests(clients, cap_start, gen_len,
+                                       per_client=1))
+    assert _token_bags(done_f) == _token_bags(done_b)
+
+
+def test_grouped_kernel_backend_token_identical(population):
+    """The Pallas BGMV decode path (scalar-prefetch adapter gather,
+    interpret mode on CPU) must serve exactly the gather path's tokens —
+    for both the decode step and the chunked prefill step."""
+    tr, clients, cap_start, gen_len = population
+    gather = _engine(tr, gen_len, prefill_chunk=4)
+    done_g = gather.run(_mixed_requests(clients, cap_start, gen_len,
+                                        per_client=1))
+    kern = _engine(tr, gen_len, prefill_chunk=4, lora_backend="grouped")
+    done_k = kern.run(_mixed_requests(clients, cap_start, gen_len,
+                                      per_client=1))
+    assert _token_bags(done_k) == _token_bags(done_g)
+
+
+def test_engine_prefill_and_sampling_validation():
+    cfg = get_reduced_config("mamba2-130m")
+    with pytest.raises(NotImplementedError, match="mamba"):
+        ServingEngine(cfg, None, AdapterStore(slots=1, rank=4),
+                      lora_scale=1.0, prefill_chunk=4)
+    tiny = get_config("fedbench-tiny")
+    store = AdapterStore(slots=1, rank=4)
+    with pytest.raises(ValueError, match="prefill_chunk"):
+        ServingEngine(tiny, None, store, lora_scale=1.0, prefill_chunk=0)
+    with pytest.raises(ValueError, match="lora_backend"):
+        ServingEngine(tiny, None, store, lora_scale=1.0, lora_backend="bgmv")
+    with pytest.raises(ValueError, match="temperature"):
+        ServingEngine(tiny, None, store, lora_scale=1.0,
+                      sampling=SamplingConfig(temperature=0.0))
+    local = get_reduced_config("gemma3-12b")     # attn_local ring layers
+    ring = min(local.sliding_window, 4 + 4)
+    with pytest.raises(ValueError, match="ring"):
+        ServingEngine(local, None, store, lora_scale=1.0, max_prompt=4,
+                      max_gen=4, prefill_chunk=ring + 1)
+    # a chunk (>1) that would WRAP the ring loses intra-chunk window
+    # history (writes precede attends) — must be rejected even though the
+    # chunk itself fits the ring
+    with pytest.raises(ValueError, match="wrap"):
+        ServingEngine(local, None, store, lora_scale=1.0,
+                      max_prompt=local.sliding_window + 4, max_gen=8,
+                      prefill_chunk=4)
+    # chunk=1 prefill is write-then-attend per position, exactly streamed
+    # decode — wrapping prompts stay legal there
+    ServingEngine(local, {}, store, lora_scale=1.0,
+                  max_prompt=local.sliding_window + 4, max_gen=8,
+                  prefill_chunk=1, use_vision=False)
+
+
+# ---------------------------------------------------------------------------
+# sampling: per-slot PRNG keys, greedy stays the default path
+# ---------------------------------------------------------------------------
+
+def test_sampling_top_k_1_equals_greedy(population):
+    """top_k=1 keeps only the argmax logit, so the sampled path must
+    reproduce greedy token-for-token (any temperature)."""
+    tr, clients, cap_start, gen_len = population
+    greedy = _engine(tr, gen_len)
+    done_g = greedy.run(_mixed_requests(clients, cap_start, gen_len))
+    samp = _engine(tr, gen_len, prefill_chunk=4,
+                   sampling=SamplingConfig(temperature=0.7, top_k=1))
+    done_s = samp.run(_mixed_requests(clients, cap_start, gen_len))
+    assert _token_bags(done_s) == _token_bags(done_g)
+
+
+def test_sampling_reproducible_per_request_and_seed(population):
+    """Per-slot keys derive from sample_seed x request uid: resubmitting
+    the SAME requests reproduces their tokens exactly; a different engine
+    seed (high temperature) produces a different stream."""
+    tr, clients, cap_start, gen_len = population
+    reqs = _mixed_requests(clients, cap_start, gen_len, per_client=1)
+    eng = _engine(tr, gen_len, sampling=SamplingConfig(temperature=5.0),
+                  sample_seed=0)
+    a = {d["uid"]: np.asarray(d["tokens"]).tolist() for d in eng.run(reqs)}
+    eng.reset()
+    b = {d["uid"]: np.asarray(d["tokens"]).tolist() for d in eng.run(reqs)}
+    assert a == b
+    other = _engine(tr, gen_len, sampling=SamplingConfig(temperature=5.0),
+                    sample_seed=123)
+    c = {d["uid"]: np.asarray(d["tokens"]).tolist()
+         for d in other.run(reqs)}
+    assert c != a
+    greedy = _engine(tr, gen_len)
+    g = {d["uid"]: np.asarray(d["tokens"]).tolist()
+         for d in greedy.run(reqs)}
+    assert a != g                      # hot sampling actually samples
 
 
 # ---------------------------------------------------------------------------
