@@ -16,10 +16,21 @@ Results go to ``BENCH_fedround.json``: the latest run at the top level, plus
 a ``history`` list (one entry per run, keyed by git SHA + timestamp) so the
 perf trajectory is tracked across PRs instead of overwritten.
 
+A ``mesh`` section measures the round engine per mesh shape — 1×1, N×1
+(client-parallel), 1×N (tensor-parallel) and 2×2 (client × model) on forced
+host devices — recording rounds/sec AND the compiled round's HLO collective
+counts (model-axis psums appear on 1×N/2×2; the frozen base is never
+all-gathered).  The 2-core-container caveat is recorded in-artifact: forced
+host devices share two physical cores, so multi-device wall clocks measure
+slower here and only the collective structure is meaningful.
+
 ``--quick`` skips all wall-clock timing and instead checks the *dispatch
 counts* of every round driver and of the one-dispatch evaluation sweep — the
 regression signal (extra host syncs per round) without timing flakiness.
 The tier-2 smoke test (``pytest -m slow``) asserts on these counters.
+``--quick-mesh`` runs the dispatch-count asserts for a 2×2 (client, model)
+mesh round + padded cohort + population eval in-process (requires
+``XLA_FLAGS=--xla_force_host_platform_device_count=4`` — the CI mesh step).
 
 Scale: fedbench-tiny, K=10 clients, sampling rate 0.4 (the paper protocol),
 swept over local_steps; decode at gen_len 17 (≥16).
@@ -33,6 +44,9 @@ import sys
 import time
 
 _JSON_TAG = "BENCH_FEDROUND_JSON:"
+_MESH_JSON_TAG = "BENCH_FEDROUND_MESH_JSON:"
+MESH_SHAPES = ((1, 1), (2, 1), (1, 2), (2, 2))   # (client, model)
+MESH_TIMED_ROUNDS = 3
 ROUND_STEPS = (2, 8)        # local_steps sweep; 8 = paper-protocol default
 TIMED_ROUNDS = 6
 DECODE_CAPTION_LEN = 16     # gen_len = caption_len + 1 = 17 >= 16
@@ -250,6 +264,109 @@ def quick_check() -> dict:
     return out
 
 
+def _mesh_measure() -> dict:
+    """Rounds/sec + compiled-HLO collective counts per mesh shape (1×1,
+    N×1, 1×N, 2×2) — runs in a subprocess with 4 forced host devices."""
+    import jax
+    import jax.numpy as jnp
+    import numpy as np
+    from jax.sharding import Mesh
+
+    from benchmarks.common import build_trainer
+    from repro.launch.hlo_analysis import collective_bytes
+
+    out = {"devices": jax.device_count(), "timed_rounds": MESH_TIMED_ROUNDS,
+           "shapes": {}}
+    for nc, nm in MESH_SHAPES:
+        mesh = None
+        if nc * nm > 1:
+            mesh = Mesh(np.array(jax.devices()[: nc * nm]).reshape(nc, nm),
+                        ("client", "model"))
+        tr = build_trainer("samllava", aggregator="fedilora", local_steps=2)
+        tr.mesh = mesh
+        tr.run_round()                  # compile + place
+        t = _min_time(tr.run_round, MESH_TIMED_ROUNDS)
+        sampled, batch_idx = tr._build_round_inputs()
+        lowered = tr._get_round_step().lower(
+            tr.base_params, tr.stacked_lora, tr.server.global_lora,
+            tr.server.prev_global, tr._ranks_dev, tr._sizes_dev,
+            tr._stacked_data, jnp.asarray(sampled, jnp.int32),
+            jnp.asarray(batch_idx, jnp.int32),
+            jnp.asarray(tr.server.round, jnp.int32))
+        cb = collective_bytes(lowered.compile().as_text())
+        out["shapes"][f"{nc}x{nm}"] = {
+            "round_s": t, "rounds_per_sec": 1.0 / t,
+            "collective_counts": cb["counts"],
+            "collective_bytes": cb["total_bytes"],
+        }
+    out["caveat"] = (
+        "2-core container: the forced host devices share two physical "
+        "cores, so multi-device shapes measure SLOWER than 1x1 here — this "
+        "section tracks the collective structure (model-axis all-reduces "
+        "on 1xN/2x2, no frozen-base all-gather; asserted by "
+        "tests/test_mesh2d.py) and the per-shape trend across PRs; "
+        "re-measure rounds/sec on real accelerator meshes")
+    return out
+
+
+def quick_mesh_check() -> dict:
+    """Dispatch-count asserts for the 2-D mesh round, in-process (the CI
+    forced-host mesh step): a 2×2 (client, model) round is still ONE fused
+    dispatch per round, a padded (non-divisible) cohort adds none, and the
+    population eval stays one dispatch.  Raises on any mismatch."""
+    import jax
+    import numpy as np
+    from jax.sharding import Mesh
+
+    if jax.device_count() < 4:
+        raise RuntimeError(
+            f"--quick-mesh needs >= 4 devices (got {jax.device_count()}); "
+            "run with XLA_FLAGS=--xla_force_host_platform_device_count=4")
+
+    from repro.configs import get_config
+    from repro.core.editing import EditConfig
+    from repro.data.synthetic import (SyntheticTaskConfig,
+                                      make_federated_datasets)
+    from repro.federated import FederatedConfig, FederatedTrainer
+    from repro.optim import OptimizerConfig
+
+    tcfg = SyntheticTaskConfig(caption_len=8)
+    clients, gtest = make_federated_datasets(tcfg, 4,
+                                             np.array([24, 24, 24, 24]))
+
+    def mk(sample_rate):
+        fcfg = FederatedConfig(num_clients=4, sample_rate=sample_rate,
+                               ranks=(4, 8, 8, 16), local_steps=1,
+                               batch_size=4, aggregator="fedilora",
+                               edit=EditConfig(enabled=True))
+        mesh = Mesh(np.array(jax.devices()[:4]).reshape(2, 2),
+                    ("client", "model"))
+        return FederatedTrainer(get_config("fedbench-tiny"), fcfg,
+                                OptimizerConfig(peak_lr=3e-3, total_steps=20),
+                                clients, clients, gtest, seed=0, mesh=mesh)
+
+    out = {}
+    tr = mk(1.0)                        # n_sample 4 : divides the 2 groups
+    for _ in range(2):
+        tr.run_round()
+    tr.evaluate_personalized(generate=True, n=4)
+    out["mesh2x2"] = dict(tr.dispatch_count)
+    if tr.dispatch_count["round_step"] != 2:
+        raise RuntimeError(f"2-D round not fused: {tr.dispatch_count}")
+    if tr.dispatch_count["population_eval"] != 1 or \
+            tr.dispatch_count.get("eval_loss", 0):
+        raise RuntimeError(f"population eval regressed: {tr.dispatch_count}")
+
+    tp = mk(0.75)                       # n_sample 3 : padded to 4, no extras
+    for _ in range(2):
+        tp.run_round()
+    out["mesh2x2_padded"] = dict(tp.dispatch_count)
+    if dict(tp.dispatch_count) != {"round_step": 2}:
+        raise RuntimeError(
+            f"padded cohort changed dispatch counts: {tp.dispatch_count}")
+    return out
+
+
 def _append_history(res: dict, path: str = "BENCH_fedround.json") -> dict:
     """SHA-keyed history merge — shared with BENCH_serving.json (see
     ``benchmarks.common.append_history``)."""
@@ -266,10 +383,13 @@ def main(argv: list[str] | None = None) -> list[str]:
     ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
     ap.add_argument("--quick", action="store_true",
                     help="dispatch-count check only (no timing, no JSON)")
+    ap.add_argument("--quick-mesh", action="store_true",
+                    help="2-D mesh dispatch-count asserts only (needs 4 "
+                         "forced host devices; no timing, no JSON)")
     args = ap.parse_args([] if argv is None else argv)
 
-    if args.quick:
-        counts = quick_check()
+    if args.quick or args.quick_mesh:
+        counts = quick_mesh_check() if args.quick_mesh else quick_check()
         return [f"fedround/dispatch/{mode}/{name},0.0,{cnt}"
                 for mode, cc in sorted(counts.items())
                 for name, cnt in sorted(cc.items())]
@@ -284,6 +404,14 @@ def main(argv: list[str] | None = None) -> list[str]:
     code = ("import json; from benchmarks.bench_fedround import _measure, _JSON_TAG; "
             "print(_JSON_TAG + json.dumps(_measure()))")
     res = run_measurement_subprocess(code, _JSON_TAG, env=env)
+    # mesh section: its own subprocess — the shapes need 4 forced devices
+    env_m = dict(os.environ)
+    env_m["XLA_FLAGS"] = (flags +
+                          " --xla_force_host_platform_device_count=4").strip()
+    code_m = ("import json; from benchmarks.bench_fedround import "
+              "_mesh_measure, _MESH_JSON_TAG; "
+              "print(_MESH_JSON_TAG + json.dumps(_mesh_measure()))")
+    res["mesh"] = run_measurement_subprocess(code_m, _MESH_JSON_TAG, env=env_m)
     _append_history(res)
 
     lines = []
@@ -314,6 +442,12 @@ def main(argv: list[str] | None = None) -> list[str]:
     lines.append(f"fedround/eval_sweep/vmapped,{e['vmapped_s'] * 1e6:.1f},"
                  f"K={e['clients']}")
     lines.append(f"fedround/eval_sweep/speedup,0.0,{e['speedup']:.2f}x")
+    for shape, r in sorted(res["mesh"]["shapes"].items()):
+        cc = r["collective_counts"]
+        lines.append(
+            f"fedround/mesh/{shape},{r['round_s'] * 1e6:.1f},"
+            f"{r['rounds_per_sec']:.2f} rounds/s "
+            f"ar={cc['all-reduce']} ag={cc['all-gather']}")
     lines.append(f"fedround/devices,0.0,{res['config']['devices']}")
     return lines
 

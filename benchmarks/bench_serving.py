@@ -36,12 +36,14 @@ Results go to ``BENCH_serving.json`` — latest run at the top level plus a
 
 ``--quick`` skips wall-clock timing and checks the *dispatch counts* of the
 serving loop (exactly one ``serve_step`` per decode step, one
-``serve_admit`` per request, exactly ⌈P/chunk⌉ ``serve_prefill`` per
-admitted prompt, paging bounded by the bank size) plus the
-continuous-vs-static step-count ordering — the deterministic regression
-signal the tier-2 smoke test asserts on.  ``--quick-prefill`` runs the
-chunked-prefill dispatch check alone (the CI fail-fast step); both modes
-raise on a ⌈P/chunk⌉ mismatch.
+``serve_admit`` per request, exactly ``max_s ⌈P_s/chunk⌉`` shared
+``serve_prefill`` dispatches per admission burst — strictly fewer than the
+per-request ``Σ_s ⌈P_s/chunk⌉`` on this workload, paging bounded by the
+bank size) plus the continuous-vs-static step-count ordering — the
+deterministic regression signal the tier-2 smoke test asserts on.
+``--quick-prefill`` runs the chunked-prefill dispatch check alone (the CI
+fail-fast step); both modes raise on a burst-count mismatch or when shared
+prefill fails to beat the per-request count.
 """
 
 from __future__ import annotations
@@ -170,10 +172,14 @@ def _measure() -> dict:
     out["continuous"] = best_c
     out["static"] = best_s
     p_fill = eng_p._n_prefix + len(requests()[0].prompt_tokens) - 1
+    per_request = N_REQUESTS * -(-p_fill // PREFILL_CHUNK)
     out["prefill"] = dict(
         best_p, chunk=PREFILL_CHUNK, prompt_fill_positions=p_fill,
         dispatches_per_prompt=-(-p_fill // PREFILL_CHUNK),
-        streamed_positions_per_prompt=p_fill)
+        streamed_positions_per_prompt=p_fill,
+        # shared prefill: same-step admissions ride one max-⌈P/chunk⌉ burst
+        per_request_serve_prefill=per_request,
+        shared_serve_prefill=best_p["dispatch"].get("serve_prefill", 0))
     out["continuous_vs_static_throughput"] = (
         out["continuous"]["tokens_per_sec"] / out["static"]["tokens_per_sec"])
     out["continuous_vs_static_steps"] = (
@@ -201,27 +207,42 @@ def _measure() -> dict:
 
 
 def _quick_prefill(tr, requests, streamed_steps: int | None = None) -> dict:
-    """Chunked-prefill dispatch accounting: admitting a P-position prompt
-    must cost exactly ⌈P/chunk⌉ serve_prefill dispatches (raises on
-    mismatch — the CI fail-fast), and serve_step stops walking prompt
-    positions."""
+    """Chunked-prefill dispatch accounting: each admission burst must cost
+    exactly ``max_s ⌈P_s/chunk⌉`` shared serve_prefill dispatches (raises
+    on mismatch — the CI fail-fast), the total must STRICTLY beat the
+    per-request ``Σ_s ⌈P_s/chunk⌉`` (this workload's first step admits a
+    burst of 2), and serve_step stops walking prompt positions."""
     eng = _engine(tr, continuous=True, slots=2,
                   prefill_chunk=QUICK_PREFILL_CHUNK)
     reqs = requests()
     fills = [eng._n_prefix + len(r.prompt_tokens) - 1 for r in reqs]
-    expected = sum(-(-p // QUICK_PREFILL_CHUNK) for p in fills)
+    per_request = sum(-(-p // QUICK_PREFILL_CHUNK) for p in fills)
     done = eng.run(reqs)
+    bursts = eng.prefill_bursts
+    expected = sum(max(-(-f // QUICK_PREFILL_CHUNK) for f in b["fills"])
+                   for b in bursts)
     rec = {"chunk": QUICK_PREFILL_CHUNK, "requests": len(done),
            "prompt_fill_positions": fills[0], "steps": eng.steps,
            "expected_serve_prefill": expected,
+           "per_request_serve_prefill": per_request,
+           "bursts": len(bursts),
            "dispatch": dict(eng.dispatch_count)}
     if streamed_steps is not None:
         rec["streamed_steps"] = streamed_steps
     got = rec["dispatch"].get("serve_prefill")
+    if sum(len(b["fills"]) for b in bursts) != len(reqs):
+        raise RuntimeError(
+            f"prefill burst accounting lost admissions: "
+            f"{sum(len(b['fills']) for b in bursts)} != {len(reqs)}")
     if got != expected:
         raise RuntimeError(
             f"chunked prefill dispatch regression: {got} serve_prefill "
-            f"dispatches != sum ceil(P/chunk) = {expected}")
+            f"dispatches != sum over bursts of max ceil(P/chunk) = "
+            f"{expected}")
+    if got >= per_request:
+        raise RuntimeError(
+            f"shared prefill must strictly beat per-request admission: "
+            f"{got} dispatches >= per-request {per_request}")
     return rec
 
 

@@ -215,15 +215,26 @@ class FederatedTrainer:
                  opt_cfg: OptimizerConfig, client_train: list[dict],
                  client_eval: list[dict], global_test: dict,
                  base_params: Pytree | None = None, seed: int = 0,
-                 client_mesh: "jax.sharding.Mesh | None" = None):
-        """``client_mesh``: optional 1-D mesh whose single axis the sampled
-        client batches shard over — the fused round then runs the local
-        fine-tuning of different clients on different devices in parallel
-        (clients → mesh data axis, DESIGN.md §3).  ``None`` = single device."""
+                 client_mesh: "jax.sharding.Mesh | None" = None,
+                 mesh: "jax.sharding.Mesh | None" = None):
+        """``mesh``: optional device mesh the round engines run over —
+        either 1-D (any axis name; sampled clients split over it, exactly
+        the old ``client_mesh`` behaviour, bit-identical) or 2-D with axes
+        ``(client, "model")``: clients split over the first axis while each
+        client group's local training runs tensor-parallel over ``"model"``
+        (frozen base weights placed by ``sharding.param_spec``, LoRA state
+        replicated per group — see ``repro.launch.fedround``).  The
+        persistent stacked ``[K, ...]`` state and the device-resident
+        corpus are placed with ``NamedSharding``s up front on first use.
+        ``client_mesh`` is the legacy alias for the same argument.
+        ``None`` = single device."""
+        if mesh is not None and client_mesh is not None:
+            raise ValueError("pass either mesh= or client_mesh=, not both")
         self.mcfg = model_cfg
         self.fcfg = fed_cfg
         self.ocfg = opt_cfg
-        self.client_mesh = client_mesh
+        self.client_mesh = mesh if mesh is not None else client_mesh
+        self._mesh_placed = None       # mesh the state was last placed for
         self.global_test = global_test
         key = jax.random.PRNGKey(seed)
         self.base_params = base_params if base_params is not None \
@@ -402,8 +413,77 @@ class FederatedTrainer:
         return sorted(self.rng.choice(self.fcfg.num_clients, self._n_sample,
                                       replace=False))
 
+    # ------------------------------------------------------------------ mesh
+    @property
+    def client_mesh(self):
+        return self._client_mesh
+
+    @client_mesh.setter
+    def client_mesh(self, m):
+        """Reassigning the mesh invalidates the compiled round engines —
+        their shard_map mesh / sharding constraints and cohort padding are
+        baked in at build time, so a stale engine would crash on (or
+        silently ignore) operands re-placed for the new mesh."""
+        if getattr(self, "_client_mesh", None) is not m:
+            self._round_step = None
+            self._client_update_step = None
+            if getattr(self, "_pop_eval_cache", None):
+                self._pop_eval_cache = {}
+        self._client_mesh = m
+
+    @property
+    def mesh(self):
+        """The configured round mesh (alias of ``client_mesh``)."""
+        return self.client_mesh
+
+    @mesh.setter
+    def mesh(self, m):
+        self.client_mesh = m
+
+    def _place_mesh_state(self) -> None:
+        """Place the persistent device state with ``NamedSharding``s for the
+        configured mesh (idempotent; re-runs when the mesh changes):
+
+        * stacked client adapters + device-resident corpus: ``[K, ...]``
+          row axis over the client axis (replicated when K doesn't divide);
+        * frozen base params: ``sharding.param_spec`` — tensor-parallel
+          over ``"model"`` on a 2-D mesh, degrading to replication on a
+          1-D client mesh (no ``model``/``data`` axes to shard over);
+        * global/prev adapters, ranks, sizes: replicated (aggregation
+          objects).
+
+        Placement up front means no per-round resharding: the jitted round
+        consumes every operand where the shard_map/GSPMD partitioning
+        expects it."""
+        m = self.client_mesh
+        if m is None or self._mesh_placed is m:
+            return
+        from jax.sharding import NamedSharding, PartitionSpec as P
+
+        from repro import sharding as SH
+        client_ax, _ = SH.round_mesh_axes(m)
+        row = P(client_ax) if (self.fcfg.num_clients
+                               % m.shape[client_ax] == 0) else P()
+        rows = NamedSharding(m, row)
+        self.stacked_lora = jax.device_put(self.stacked_lora, rows)
+        self._stacked_data = jax.device_put(self._stacked_data, rows)
+        rep = SH.replicated(m)
+        self._ranks_dev = jax.device_put(self._ranks_dev, rep)
+        self._sizes_dev = jax.device_put(self._sizes_dev, rep)
+        self.server.global_lora = jax.device_put(self.server.global_lora, rep)
+        self.server.prev_global = jax.device_put(self.server.prev_global, rep)
+        # TP-only placement: the round mesh's first axis is the CLIENT
+        # axis whatever its name — FSDP'ing the frozen base over it would
+        # all-gather the weights per use
+        self.base_params = jax.device_put(
+            self.base_params,
+            SH.tree_param_shardings(self.base_params, m,
+                                    spec_fn=SH.param_spec_tp))
+        self._mesh_placed = m
+
     # ------------------------------------------------------------------ round
     def _get_round_step(self):
+        self._place_mesh_state()
         if self._round_step is None:
             fc = self.fcfg
             step = make_round_engine(
@@ -520,6 +600,7 @@ class FederatedTrainer:
 
     # ------------------------------------------------------------- async/buff
     def _get_client_update_step(self):
+        self._place_mesh_state()
         if self._client_update_step is None:
             fc = self.fcfg
             step = make_client_update_step(
@@ -849,31 +930,42 @@ class FederatedTrainer:
                  for k, c in enumerate(self.clients)])
             # uniformity across ALL clients' real rows: one static window
             cap_start, gen_len = _mask_decode_bounds(lm)
-        # shard the client axis over the client mesh when one is configured —
-        # the K personalized evals then run device-parallel inside the single
-        # dispatch (the per-client loop has no analogue of this)
+        # shard the client axis over the configured mesh — the K
+        # personalized evals then run device-parallel inside the single
+        # dispatch (the per-client loop has no analogue of this).  On a 2-D
+        # (client, "model") mesh each client group's eval additionally runs
+        # tensor-parallel: base params are placed by param_spec and the
+        # vmapped decode caches by cache_spec (spmd_axis_name threads the
+        # client axis through the vmap).
         stacked = self.stacked_lora
         mesh = self.client_mesh
-        sharded = (mesh is not None and len(mesh.axis_names) == 1
-                   and len(self.clients) % mesh.devices.size == 0)
+        client_ax = None
+        if mesh is not None:
+            from repro.sharding import round_mesh_axes
+            client_ax, _ = round_mesh_axes(mesh)
+        sharded = (mesh is not None
+                   and len(self.clients) % mesh.shape[client_ax] == 0)
         if mesh is not None and not sharded:
             warnings.warn(
                 f"client mesh {mesh} unusable for the population eval (need "
-                f"a 1-D mesh whose size divides K={len(self.clients)}); "
+                f"a client axis whose size divides K={len(self.clients)}); "
                 "running unsharded", stacklevel=2)
         if sharded:
             from jax.sharding import NamedSharding, PartitionSpec
-            spec = NamedSharding(mesh, PartitionSpec(mesh.axis_names[0]))
+            self._place_mesh_state()           # base params → param_spec
+            stacked = self.stacked_lora
+            spec = NamedSharding(mesh, PartitionSpec(client_ax))
             batch = jax.device_put(batch, spec)
             stacked = jax.device_put(stacked, spec)
         key = (len(self.clients), rows, loss_n, n, cap_start, gen_len,
-               "image" in keys, sharded)
+               "image" in keys, mesh if sharded else None)
         fn = self._pop_eval_cache.get(key)
         if fn is None:
             fn = jax.jit(make_population_eval(
                 self.mcfg, lora_scale=self.lora_scale, cap_start=cap_start,
                 gen_len=gen_len, loss_rows=min(loss_n, rows),
-                gen_rows=min(n, rows), generate=generate))
+                gen_rows=min(n, rows), generate=generate,
+                mesh=mesh if sharded else None))
             self._pop_eval_cache[key] = fn
         fetched = jax.device_get(self._dispatch(
             "population_eval", fn, self.base_params, stacked, batch))

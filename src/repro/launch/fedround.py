@@ -70,6 +70,23 @@ asynchronous (FedBuff-style) timeline driven by
 Both halves share :func:`_make_client_phases` with ``make_round_engine`` —
 the vmapped train → prune → edit pipeline (and its optional ``shard_map``
 client-axis parallelism) is built once and reused.
+
+2-D (client × model) meshes
+---------------------------
+
+Every engine accepts either a 1-D client mesh (``shard_map`` over the
+client axis, exactly as before) or a 2-D mesh whose axes are
+``(client, "model")``: sampled clients split over the client axis (pinned
+by ``with_sharding_constraint`` on every per-client operand/result) while
+GSPMD partitions each client group's forward/backward from the operands'
+shardings — placing the frozen base weights with ``sharding.param_spec``
+(tensor-parallel over ``"model"``, no FSDP: there is no data axis to
+gather over, and frozen weights would pay an all-gather per use) makes the
+local matmuls lower to psum collectives over ``"model"`` with the base
+weights never gathered (HLO-tested).  LoRA adapters, optimizer state and
+metrics stay replicated within a client group — they are the aggregation
+objects.  Cohorts that don't divide the client axis are padded with
+zero-weight dummy clients rather than falling back to a single device.
 """
 
 from __future__ import annotations
@@ -144,6 +161,39 @@ def _vmapped_edit(lora, ranks, prev_global, edit: EditConfig, r_g: int):
     return jax.vmap(_edit_one)(lora, ranks)
 
 
+def cohort_pad(n_sample: int, mesh) -> int:
+    """Padded cohort size: the next multiple of the mesh's client-axis size.
+
+    When ``n_sample`` doesn't divide over the client axis the engines pad
+    the sampled-client axis with zero-weight dummy clients (``p = 0``,
+    masked metrics, dropped scatters) instead of silently falling back to
+    single-device execution — see :func:`make_round_engine`."""
+    if mesh is None:
+        return n_sample
+    from repro.sharding import round_mesh_axes
+    client_ax, _ = round_mesh_axes(mesh)
+    n_client = mesh.shape[client_ax]
+    return -(-n_sample // n_client) * n_client
+
+
+def _pad_cohort(idx, batch_idx, n_pad: int, n_total: int):
+    """Pad ``(idx[n_s], batch_idx[n_s, ...])`` to ``n_pad`` rows with dummy
+    clients.  Dummies carry the out-of-range index ``n_total`` — gathers go
+    through a clipped copy (they read the last real client's data, wasted
+    but harmless compute) while scatters use the raw index with
+    ``mode="drop"`` so dummies never write back.  Returns
+    ``(idx, clipped_idx, batch_idx, valid[n_pad])``."""
+    n_s = idx.shape[0]
+    if n_pad > n_s:
+        idx = jnp.concatenate(
+            [idx, jnp.full((n_pad - n_s,), n_total, idx.dtype)])
+        batch_idx = jnp.concatenate(
+            [batch_idx,
+             jnp.zeros((n_pad - n_s,) + batch_idx.shape[1:], batch_idx.dtype)])
+    valid = jnp.arange(n_pad) < n_s
+    return idx, jnp.clip(idx, 0, n_total - 1), batch_idx, valid
+
+
 def _make_client_phases(cfg: ModelConfig, opt_cfg: OptimizerConfig, *,
                         lora_scale: float, r_g: int, edit: EditConfig,
                         edit_active: bool, prune_active: bool,
@@ -151,19 +201,29 @@ def _make_client_phases(cfg: ModelConfig, opt_cfg: OptimizerConfig, *,
                         mesh=None, n_sample: int | None = None) -> Callable:
     """Build the per-client half shared by the fused round and the async
     client-update step: ``(base_params, prev_global, lora0, ranks_s,
-    batches) -> (lora1, ranks_s, metrics)``, vmapped over the client axis
-    and optionally ``shard_map``-parallel over a 1-D client mesh."""
+    batches) -> (lora1, ranks_s, metrics)``, vmapped over the client axis.
+
+    ``mesh`` (optional, 1-D or 2-D — see ``sharding.round_mesh_axes``):
+
+    * 1-D: the phases wrap in ``shard_map`` with the sampled-client axis
+      split over the mesh (callers pad the cohort to a multiple of its
+      size via :func:`cohort_pad`) — unchanged from the original
+      client-parallel round, bit-identical;
+    * 2-D ``(client, "model")``: GSPMD partitioning with the client axis
+      pinned by ``with_sharding_constraint`` on every per-client operand
+      and result, while inside each client group the local AdamW
+      forward/backward is partitioned over ``"model"`` by propagation from
+      the operands' shardings (``sharding.param_spec`` places the frozen
+      base weights tensor-parallel over ``"model"``) — the TP matmuls
+      lower to psum collectives and the base weights are never gathered,
+      while LoRA adapters/optimizer state stay replicated per group (they
+      are the aggregation objects).  A partial-manual ``shard_map``
+      (client manual, model auto) would express the same program, but
+      ``lax.scan`` inside a manual-subgroup region trips XLA's partitioner
+      (``IsManualSubgroup`` check), so the 2-D path is constraint-driven
+      GSPMD end to end."""
     local_train = _make_local_train(cfg, opt_cfg, lora_scale=lora_scale,
                                     r_g=r_g)
-    use_mesh = (mesh is not None and n_sample is not None
-                and len(mesh.axis_names) == 1
-                and n_sample % mesh.devices.size == 0)
-    if mesh is not None and not use_mesh:
-        import warnings
-        warnings.warn(
-            f"client mesh {mesh} unusable (need a 1-D mesh whose size divides "
-            f"n_sample={n_sample}); falling back to single-device execution",
-            stacklevel=3)
 
     def _client_phases(base_params, prev_global, lora0, ranks_s, batches):
         """train → prune → edit, vmapped over the (local) client axis."""
@@ -179,15 +239,35 @@ def _make_client_phases(cfg: ModelConfig, opt_cfg: OptimizerConfig, *,
             metrics["edited"] = edited
         return lora1, ranks_s, metrics
 
-    if use_mesh:
+    if mesh is not None and n_sample is None:
+        raise ValueError(
+            "a round mesh needs n_sample (the static sampled-cohort size) "
+            "to shard the client axis — pass n_sample=... or drop mesh= "
+            "(silently running single-device on a configured mesh would "
+            "be an expensive no-op)")
+    if mesh is None:
+        return _client_phases
+
+    from jax.sharding import NamedSharding, PartitionSpec as P
+
+    from repro.sharding import round_mesh_axes
+    ax, model_ax = round_mesh_axes(mesh)        # raises on malformed meshes
+    if model_ax is None:
         from jax.experimental.shard_map import shard_map
-        from jax.sharding import PartitionSpec as P
-        ax = mesh.axis_names[0]
         return shard_map(
             _client_phases, mesh,
             in_specs=(P(), P(), P(ax), P(ax), P(ax)),
             out_specs=(P(ax), P(ax), P(ax)), check_rep=False)
-    return _client_phases
+
+    row = NamedSharding(mesh, P(ax))
+
+    def sharded_phases(base_params, prev_global, lora0, ranks_s, batches):
+        con = lambda t: jax.lax.with_sharding_constraint(t, row)
+        lora1, ranks_out, metrics = _client_phases(
+            base_params, prev_global, con(lora0), con(ranks_s), con(batches))
+        return con(lora1), con(ranks_out), con(metrics)
+
+    return sharded_phases
 
 
 def make_fed_round_step(cfg: ModelConfig, opt_cfg: OptimizerConfig, *,
@@ -248,30 +328,40 @@ def make_round_engine(cfg: ModelConfig, opt_cfg: OptimizerConfig, *,
     deltas folded in.  All phases run in one jit program; ``aggregator``
     selects the compiled variant statically.
 
-    ``mesh``: optional 1-D device mesh.  When given (and its size divides
-    ``n_sample``), the per-client phases (local AdamW training,
-    self-pruning, editing) run under ``shard_map`` with the sampled-client
-    axis split over the mesh — clients train on different devices in
-    parallel with zero cross-device traffic until aggregation.
+    ``mesh``: optional device mesh, 1-D (pure client parallelism) or 2-D
+    ``(client, "model")`` (client groups × tensor-parallel local training —
+    see :func:`_make_client_phases`).  When the client-axis size doesn't
+    divide ``n_sample`` the sampled-client axis is padded inside the
+    program with zero-weight dummy clients (``p = 0`` so every aggregator
+    ignores them, metrics sliced back to ``n_sample``, scatters dropped)
+    instead of falling back to single-device execution.
     """
     edit = edit or EditConfig()
     lcfg = LoRAConfig(rank=r_g)
     edit_active = edit.enabled and aggregator != "flora"
     prune_active = aggregator == "hetlora" and hetlora_prune_gamma > 0
+    n_pad = cohort_pad(n_sample, mesh) if (mesh is not None
+                                           and n_sample is not None) else None
     client_phases = _make_client_phases(
         cfg, opt_cfg, lora_scale=lora_scale, r_g=r_g, edit=edit,
         edit_active=edit_active, prune_active=prune_active,
         hetlora_prune_gamma=hetlora_prune_gamma, mesh=mesh,
-        n_sample=n_sample)
+        n_sample=n_pad)
 
     def round_step(base_params, stacked_lora, global_lora, prev_global,
                    ranks, sizes, data, idx, batch_idx, round_idx):
-        ranks_s = ranks[idx]
-        sizes_s = sizes[idx]
+        n_s = idx.shape[0]
+        idx, gidx, batch_idx, valid = _pad_cohort(
+            idx, batch_idx, n_pad or n_s, ranks.shape[0])
+        ranks_s = ranks[gidx]
+        # dummy rows carry zero weight: every registry strategy multiplies
+        # by p, so padded clients cannot perturb the aggregate
+        sizes_s = jnp.where(valid, sizes[gidx], 0.0)
         p = sizes_s / jnp.maximum(jnp.sum(sizes_s), 1e-12)
 
         # --- device-side batch gather: [n_s, steps, B, ...] ----------------
-        batches = {k: v[idx[:, None, None], batch_idx] for k, v in data.items()}
+        batches = {k: v[gidx[:, None, None], batch_idx]
+                   for k, v in data.items()}
 
         # --- server → client redistribution (on device) --------------------
         if aggregator == "flora":
@@ -298,13 +388,16 @@ def make_round_engine(cfg: ModelConfig, opt_cfg: OptimizerConfig, *,
 
         out = {
             # scatter the sampled clients back into the persistent stack
+            # (mode="drop" — the jax default — discards dummy rows, whose
+            # index is out of bounds by construction)
             "stacked_lora": jax.tree_util.tree_map(
-                lambda s, u: s.at[idx].set(u), stacked_lora, lora1),
-            "ranks": ranks.at[idx].set(ranks_s),
+                lambda s, u: s.at[idx].set(u, mode="drop"),
+                stacked_lora, lora1),
+            "ranks": ranks.at[idx].set(ranks_s, mode="drop"),
             # the input global becomes prev_global: an explicit pass-through
             # output, so donation of the input buffer stays safe
             "prev_global": global_lora,
-            "metrics": metrics,
+            "metrics": jax.tree_util.tree_map(lambda m: m[:n_s], metrics),
         }
         if base_delta is not None:  # flora
             out["base_params"] = apply_weight_deltas(base_params, base_delta)
@@ -344,30 +437,40 @@ def make_client_update_step(cfg: ModelConfig, opt_cfg: OptimizerConfig, *,
     if aggregator == "flora":
         raise ValueError("flora updates base weights; it has no "
                          "buffered-async client half")
+    n_pad = cohort_pad(n_sample, mesh) if (mesh is not None
+                                           and n_sample is not None) else None
     client_phases = _make_client_phases(
         cfg, opt_cfg, lora_scale=lora_scale, r_g=r_g, edit=edit,
         edit_active=edit.enabled,
         prune_active=aggregator == "hetlora" and hetlora_prune_gamma > 0,
         hetlora_prune_gamma=hetlora_prune_gamma, mesh=mesh,
-        n_sample=n_sample)
+        n_sample=n_pad)
 
     def client_update_step(base_params, stacked_lora, global_lora,
                            prev_global, ranks, sizes, data, idx, batch_idx):
-        ranks_s = ranks[idx]
-        sizes_s = sizes[idx]
-        batches = {k: v[idx[:, None, None], batch_idx] for k, v in data.items()}
+        n_s = idx.shape[0]
+        idx, gidx, batch_idx, _ = _pad_cohort(
+            idx, batch_idx, n_pad or n_s, ranks.shape[0])
+        ranks_s = ranks[gidx]
+        sizes_s = sizes[gidx]
+        batches = {k: v[gidx[:, None, None], batch_idx]
+                   for k, v in data.items()}
         lora0 = jax.vmap(
             lambda r: truncate_redistribute(global_lora, r, r_g))(ranks_s)
         lora1, ranks_s, metrics = client_phases(
             base_params, prev_global, lora0, ranks_s, batches)
+        # dummy rows (padded cohorts) are sliced off everything the server
+        # buffers and dropped from the scatters
         return {
             "stacked_lora": jax.tree_util.tree_map(
-                lambda s, u: s.at[idx].set(u), stacked_lora, lora1),
-            "ranks": ranks.at[idx].set(ranks_s),
-            "update": lora1,              # [n_s, ...] cohort delta to buffer
-            "update_ranks": ranks_s,
-            "update_sizes": sizes_s,
-            "metrics": metrics,
+                lambda s, u: s.at[idx].set(u, mode="drop"),
+                stacked_lora, lora1),
+            "ranks": ranks.at[idx].set(ranks_s, mode="drop"),
+            "update": jax.tree_util.tree_map(
+                lambda x: x[:n_s], lora1),    # [n_s, ...] delta to buffer
+            "update_ranks": ranks_s[:n_s],
+            "update_sizes": sizes_s[:n_s],
+            "metrics": jax.tree_util.tree_map(lambda m: m[:n_s], metrics),
         }
 
     return client_update_step

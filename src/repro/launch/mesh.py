@@ -20,3 +20,24 @@ def make_production_mesh(*, multi_pod: bool = False):
 def make_debug_mesh(n_data: int = 2, n_model: int = 2):
     """Small host-device mesh for tests (requires XLA host-device override)."""
     return jax.make_mesh((n_data, n_model), ("data", "model"))
+
+
+def make_round_mesh(n_client: int, n_model: int = 1):
+    """Federated-round mesh for ``FederatedTrainer(mesh=...)``: sampled
+    clients split over ``"client"`` (``n_client`` groups), each group's
+    local training tensor-parallel over ``"model"`` (``n_model`` devices).
+    ``n_model=1`` returns the 1-D client mesh (pure client parallelism —
+    the ``shard_map`` path); needs ``n_client * n_model`` devices."""
+    need = n_client * n_model
+    have = len(jax.devices())
+    if have < need:
+        raise ValueError(
+            f"make_round_mesh({n_client}, {n_model}) needs {need} devices, "
+            f"have {have} (set XLA_FLAGS="
+            f"--xla_force_host_platform_device_count={need} before jax "
+            "initialises to force host devices)")
+    if n_model == 1:
+        import numpy as np
+        return jax.sharding.Mesh(
+            np.asarray(jax.devices()[:n_client]), ("client",))
+    return jax.make_mesh((n_client, n_model), ("client", "model"))

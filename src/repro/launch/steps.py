@@ -208,7 +208,8 @@ def make_chunked_prefill_step(cfg: ModelConfig, *, lora_scale: float,
 
 
 def make_greedy_generate(cfg: ModelConfig, *, lora_scale: float,
-                         cap_start: int, gen_len: int) -> Callable:
+                         cap_start: int, gen_len: int,
+                         cache_sharding: Callable | None = None) -> Callable:
     """KV-cached greedy caption generation:
     ``(params, lora, tokens[B,S], vision?) -> gen[B, gen_len]``.
 
@@ -220,6 +221,10 @@ def make_greedy_generate(cfg: ModelConfig, *, lora_scale: float,
     Token-for-token identical to the uncached argmax loop (tested).
 
     ``cap_start``/``gen_len`` are static — jit once per evaluation shape.
+    ``cache_sharding``: optional cache-tree → cache-tree placement hook
+    (e.g. a ``with_sharding_constraint`` built from ``sharding.cache_spec``)
+    applied to the freshly initialised decode cache — the population sweep
+    uses it to pin per-client caches onto a 2-D mesh.
     """
     serve_step = make_serve_step(cfg, lora_scale=lora_scale)
 
@@ -234,6 +239,8 @@ def make_greedy_generate(cfg: ModelConfig, *, lora_scale: float,
         cache = T.init_cache(
             cfg, params, B, n_prefix + cap_start + 1 + gen_len,
             vision=vision if cfg.vision_mode == "cross" else None)
+        if cache_sharding is not None:
+            cache = cache_sharding(cache)
 
         def prefill(carry, inp):
             x_t, t = inp
@@ -259,8 +266,30 @@ def make_greedy_generate(cfg: ModelConfig, *, lora_scale: float,
     return generate
 
 
+def _population_mesh_tools(mesh):
+    """(client_axis, cache-placement hook) for a population sweep mesh.
+
+    The hook constrains a per-client decode cache with ``sharding.
+    cache_spec`` (feature dims over ``"model"`` where divisible; batch/seq
+    rules degrade on axes the mesh doesn't carry); the client axis itself
+    is threaded through the vmap via ``spmd_axis_name`` so the stacked
+    ``[K, ...]`` caches land split over the client axis with their inner
+    dims placed by the spec."""
+    if mesh is None:
+        return None, None
+    from repro.sharding import round_mesh_axes, tree_cache_shardings
+    client_ax, _ = round_mesh_axes(mesh)
+
+    def cache_sharding(cache):
+        return jax.lax.with_sharding_constraint(
+            cache, tree_cache_shardings(cache, mesh))
+
+    return client_ax, cache_sharding
+
+
 def make_population_generate(cfg: ModelConfig, *, lora_scale: float,
-                             cap_start: int, gen_len: int) -> Callable:
+                             cap_start: int, gen_len: int,
+                             mesh=None) -> Callable:
     """KV-cached greedy decode vmapped over a stacked client axis:
     ``(params, stacked_lora[K,...], tokens[K,B,S], vision[K,B,...]?) ->
     gen[K, B, gen_len]``.
@@ -269,16 +298,22 @@ def make_population_generate(cfg: ModelConfig, *, lora_scale: float,
     generate dispatch each; this collapses the population into ONE jitted
     dispatch over the trainer's persistent stacked ``[K, ...]`` adapter
     state (base params broadcast, per-client KV caches batched by vmap).
-    Token-for-token identical to the per-client loop (tested)."""
+    Token-for-token identical to the per-client loop (tested).
+
+    ``mesh``: optional 1-D / 2-D ``(client, "model")`` mesh — the vmapped
+    population axis shards over the client axis (``spmd_axis_name``) and
+    the per-client decode caches are placed by ``sharding.cache_spec``."""
+    client_ax, cache_sharding = _population_mesh_tools(mesh)
     gen = make_greedy_generate(cfg, lora_scale=lora_scale,
-                               cap_start=cap_start, gen_len=gen_len)
+                               cap_start=cap_start, gen_len=gen_len,
+                               cache_sharding=cache_sharding)
 
     def population_generate(params, stacked_lora, tokens, vision=None):
+        vm = lambda f: jax.vmap(f, spmd_axis_name=client_ax)
         if vision is None:
-            return jax.vmap(lambda lo, t: gen(params, lo, t)
-                            )(stacked_lora, tokens)
-        return jax.vmap(lambda lo, t, v: gen(params, lo, t, v)
-                        )(stacked_lora, tokens, vision)
+            return vm(lambda lo, t: gen(params, lo, t))(stacked_lora, tokens)
+        return vm(lambda lo, t, v: gen(params, lo, t, v)
+                  )(stacked_lora, tokens, vision)
 
     return population_generate
 
@@ -288,7 +323,7 @@ def make_population_eval(cfg: ModelConfig, *, lora_scale: float,
                          gen_len: int | None = None,
                          loss_rows: int | None = None,
                          gen_rows: int | None = None,
-                         generate: bool = True) -> Callable:
+                         generate: bool = True, mesh=None) -> Callable:
     """The full personalized evaluation sweep as ONE program:
     ``(params, stacked_lora[K,...], batch {key: [K, rows, ...]}) ->
     {"loss"[K], "acc"[K], "gen"[K, gen_rows, gen_len]?}``.
@@ -296,12 +331,16 @@ def make_population_eval(cfg: ModelConfig, *, lora_scale: float,
     Eval loss (over the first ``loss_rows`` rows) and the KV-cached greedy
     decode (first ``gen_rows`` rows) are vmapped together over the client
     axis, so evaluating all K personalized adapters is a single jit call
-    instead of ~2K.  ``generate=False`` drops the decode half."""
-
+    instead of ~2K.  ``generate=False`` drops the decode half.  ``mesh``:
+    optional population mesh — client axis through ``spmd_axis_name``,
+    decode caches placed by ``sharding.cache_spec`` (see
+    :func:`make_population_generate`)."""
+    client_ax, cache_sharding = _population_mesh_tools(mesh)
     gen_fn = None
     if generate:
         gen_fn = make_greedy_generate(cfg, lora_scale=lora_scale,
-                                      cap_start=cap_start, gen_len=gen_len)
+                                      cap_start=cap_start, gen_len=gen_len,
+                                      cache_sharding=cache_sharding)
 
     def population_eval(params, stacked_lora, batch):
         def one_client(lora, b):
@@ -318,6 +357,7 @@ def make_population_eval(cfg: ModelConfig, *, lora_scale: float,
                 out["gen"] = gen_fn(params, lora, toks, vis)
             return out
 
-        return jax.vmap(one_client)(stacked_lora, batch)
+        return jax.vmap(one_client, spmd_axis_name=client_ax)(
+            stacked_lora, batch)
 
     return population_eval

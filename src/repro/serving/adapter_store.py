@@ -60,11 +60,15 @@ class AdapterStore:
     """
 
     def __init__(self, *, slots: int, rank: int,
-                 dispatch_count: collections.Counter | None = None):
+                 dispatch_count: collections.Counter | None = None,
+                 mesh=None):
         if slots < 1:
             raise ValueError(f"need at least one slot, got {slots}")
         self.slots = slots
         self.rank = rank
+        # optional serving mesh: the bank's slot axis shards over "data"
+        # (and nothing else — adapters are tiny; see bank_sharding below)
+        self.mesh = mesh
         self._host: dict[Hashable, Pytree] = {}    # id -> padded np tree
         self.ranks: dict[Hashable, int] = {}       # id -> true (unpadded) rank
         self._slot_of: dict[Hashable, int] = {}    # resident id -> slot
@@ -109,15 +113,47 @@ class AdapterStore:
     def resident_ids(self) -> list[Hashable]:
         return [i for i in self._id_at if i is not None]
 
+    def _bank_sharding(self, slot_dim: int):
+        """NamedSharding for a bank leaf whose slot axis sits at
+        ``slot_dim`` — slots over the mesh's ``"data"`` axis when they
+        divide (multi-device serving splits slots exactly like the decode
+        cache's batch rows); replicated otherwise, or without a mesh."""
+        if self.mesh is None:
+            return None
+        from jax.sharding import NamedSharding, PartitionSpec as P
+        n = self.mesh.shape.get("data", 1)
+        if n <= 1 or self.slots % n != 0:
+            return NamedSharding(self.mesh, P())
+        spec = [None] * (slot_dim + 1)
+        spec[slot_dim] = "data"
+        return NamedSharding(self.mesh, P(*spec))
+
+    def set_mesh(self, mesh) -> None:
+        """Adopt a serving mesh after construction, re-placing an
+        already-materialised bank — a stack committed to single-device
+        sharding before the mesh arrived (e.g. a store first used by an
+        unsharded engine) would otherwise crash the sharded engine's jit
+        dispatch with incompatible devices."""
+        self.mesh = mesh
+        if self._stack is not None:
+            sh = self._bank_sharding(0)
+            if sh is not None:
+                self._stack = jax.device_put(self._stack, sh)
+            self._scan_stack = None       # rebuilt (and re-placed) lazily
+
     @property
     def stack(self) -> Pytree:
-        """The device-resident ``[slots, ...]`` bank (built lazily)."""
+        """The device-resident ``[slots, ...]`` bank (built lazily; slot
+        axis sharded over the serving mesh when one is configured)."""
         if self._stack is None:
             if not self._host:
                 raise RuntimeError("no adapters registered")
             proto = next(iter(self._host.values()))
             self._stack = jax.tree_util.tree_map(
                 lambda x: jnp.zeros((self.slots,) + x.shape, x.dtype), proto)
+            sh = self._bank_sharding(0)
+            if sh is not None:
+                self._stack = jax.device_put(self._stack, sh)
         return self._stack
 
     @property
@@ -133,6 +169,9 @@ class AdapterStore:
             self._scan_stack = {
                 k: jax.tree_util.tree_map(lambda x: jnp.swapaxes(x, 0, 1), v)
                 for k, v in self.stack.items() if k.startswith("s")}
+            sh = self._bank_sharding(1)      # [L, slots, ...]
+            if sh is not None:
+                self._scan_stack = jax.device_put(self._scan_stack, sh)
         return self._scan_stack
 
     # ------------------------------------------------------------ residency
@@ -189,19 +228,19 @@ class AdapterStore:
     # ---------------------------------------------------------- constructors
     @classmethod
     def from_trainer(cls, trainer, *, slots: int | None = None,
-                     dispatch_count=None) -> "AdapterStore":
+                     dispatch_count=None, mesh=None) -> "AdapterStore":
         """Register every personalized client adapter of a live
         ``FederatedTrainer`` (ids ``"client0"``, ``"client1"``, ...)."""
         adapters = trainer.export_adapters()
         store = cls(slots=slots or len(adapters), rank=trainer.lcfg.rank,
-                    dispatch_count=dispatch_count)
+                    dispatch_count=dispatch_count, mesh=mesh)
         for cid, (lora, rank) in adapters.items():
             store.register(cid, lora, rank)
         return store
 
     @classmethod
     def from_checkpoint(cls, dirpath: str, *, slots: int | None = None,
-                        dispatch_count=None) -> "AdapterStore":
+                        dispatch_count=None, mesh=None) -> "AdapterStore":
         """Register the per-client adapters of a ``save_federated``
         checkpoint directory."""
         import json
@@ -218,7 +257,7 @@ class AdapterStore:
         # rank below the padding the arrays are stored at
         r_pad = int(next(iter(loras[0].values()))["A"].shape[1])
         store = cls(slots=slots or len(ranks), rank=r_pad,
-                    dispatch_count=dispatch_count)
+                    dispatch_count=dispatch_count, mesh=mesh)
         for k, rank in enumerate(ranks):
             store.register(f"client{k}", loras[k], rank)
         return store

@@ -16,13 +16,15 @@ buffers, one adapter-bank index.  The decode loop is:
    request's *projected* vision-prefix vectors (the ``vision_proj`` matmul
    runs once here, not per step) into the slot's device buffers and zeroes
    the slot's cache rows — one small jitted scatter per admitted request
-   (``serve_admit``).  With ``prefill_chunk`` set, admission then fills the
-   slot's cache rows by **chunked prefill**: ⌈P/chunk⌉ ``serve_prefill``
-   dispatches (``repro.launch.steps.make_chunked_prefill_step``) each push
-   up to ``chunk`` teacher-forced positions through the decode-cache write
-   path in one program — no logits, intra-chunk causal attention at the
-   slot's ragged offset — so a freshly admitted long prompt never steals
-   decode steps from active slots.
+   (``serve_admit``).  With ``prefill_chunk`` set, the whole ready burst
+   is admitted first and then filled by **shared chunked prefill**:
+   ``max_s ⌈P_s/chunk⌉`` ``serve_prefill`` dispatches
+   (``repro.launch.steps.make_chunked_prefill_step``) each push up to
+   ``chunk`` teacher-forced positions of EVERY prefill-phase slot through
+   the decode-cache write path in one program — no logits, intra-chunk
+   causal attention at each slot's ragged offset — so same-step admissions
+   share dispatches (vs the per-request ``Σ_s ⌈P_s/chunk⌉``) and a freshly
+   admitted long prompt never steals decode steps from active slots.
 2. **step** — ONE jitted dispatch (``serve_step``) advances every occupied
    slot by one token.  Inside the program each slot muxes its own input:
    vision-prefix vector while ``pos < n_prefix``, teacher-forced prompt
@@ -46,8 +48,9 @@ buffers, one adapter-bank index.  The decode loop is:
 What is fetched when: nothing per step — generated tokens cross to host
 only when a request completes.  ``dispatch_count`` tallies ``serve_step``
 (exactly one per decode step — asserted by tests), ``serve_prefill``
-(exactly ⌈P/chunk⌉ per admitted P-position prompt — asserted),
-``serve_admit``, ``adapter_load`` and ``fetch``.  Completion records carry
+(exactly ``max_s ⌈P_s/chunk⌉`` per admission burst, recorded in
+``prefill_bursts`` and asserted), ``serve_admit``, ``adapter_load`` and
+``fetch``.  Completion records carry
 ``latency_s`` and ``ttft_s`` (submit → the step() call that emitted the
 request's first token; dispatch-clock, not device-sync — the scheduling
 delay chunked prefill attacks).
@@ -129,7 +132,16 @@ class ServingEngine:
                  prefill_flash: bool | None = None,
                  lora_backend: str = "gather",
                  sampling: SamplingConfig | None = None,
-                 sample_seed: int = 0):
+                 sample_seed: int = 0, mesh=None):
+        """``mesh``: optional serving mesh — a 1-D ``("data",)`` mesh
+        shards the SLOT axis (decode-cache batch rows, slot-state rows,
+        adapter bank) over its devices via ``sharding.cache_spec`` /
+        ``batch_spec``, exactly like the federated round shards its client
+        axis; a 2-D ``("data", "model")`` mesh additionally places the
+        base weights tensor-parallel via ``param_spec_tp`` (TP only —
+        never FSDP over the slot axis).  Token-identical to the unsharded
+        engine (tested).  Slot-axis sharding requires ``max_slots`` to
+        divide over ``"data"``."""
         bad = {k for k in cfg.pattern if k not in ("attn", "attn_local",
                                                    "mamba")}
         if bad or cfg.family == "encdec":
@@ -188,9 +200,49 @@ class ServingEngine:
                         "grow the window, or use streamed prefill "
                         "(prefill_chunk=None)")
         self.prefill_chunk = prefill_chunk
+        self.mesh = mesh
+        if mesh is None and getattr(store, "mesh", None) is not None:
+            raise ValueError(
+                "AdapterStore carries a serving mesh but the engine is "
+                "unsharded — pass the same mesh to ServingEngine too "
+                "(a mesh-committed bank feeding an unsharded dispatch "
+                "fails with an opaque incompatible-devices error)")
+        if mesh is not None:
+            if "data" not in mesh.axis_names:
+                raise ValueError(
+                    f"serving mesh needs a 'data' axis for the slot "
+                    f"dimension, got axes {tuple(mesh.axis_names)}")
+            if max_slots % mesh.shape["data"] != 0:
+                raise ValueError(
+                    f"max_slots={max_slots} does not divide over the "
+                    f"mesh's data axis ({mesh.shape['data']} devices)")
+            from repro import sharding as SH
+            # frozen base weights: TP over "model" when the mesh carries
+            # one, replicated otherwise — NEVER FSDP over "data" (that
+            # axis is the SLOT axis here; data-sharded frozen weights
+            # would all-gather per decode step)
+            self.params = params = jax.device_put(
+                params, SH.tree_param_shardings(params, mesh,
+                                                spec_fn=SH.param_spec_tp))
+            if store.mesh is None:
+                # adopt + re-place: the bank may already be materialised
+                # on the default device (store shared with an unsharded
+                # engine first)
+                store.set_mesh(mesh)
+            elif store.mesh is not mesh:
+                raise ValueError(
+                    "AdapterStore was built for a different mesh than the "
+                    "engine's — pass the SAME mesh to both (mixed "
+                    "placements would crash the jitted decode dispatch)")
 
         B = max_slots
         self._cache = T.init_cache(cfg, params, B, self.cache_len)
+        if mesh is not None:
+            from repro import sharding as SH
+            # decode cache: batch (slot) rows over "data", feature dims
+            # over "model" where divisible — the cache_spec baseline rules
+            self._cache = jax.device_put(
+                self._cache, SH.tree_cache_shardings(self._cache, mesh))
         state = {
             "ptoks": jnp.zeros((B, max_prompt), jnp.int32),
             "aidx": jnp.zeros((B,), jnp.int32),
@@ -207,6 +259,10 @@ class ServingEngine:
                 (B, cfg.num_vision_tokens, cfg.d_model), jnp.dtype(cfg.dtype))
         if sampling is not None:
             state["rng"] = jnp.zeros((B, 2), jnp.uint32)  # per-slot PRNG key
+        if mesh is not None:
+            from repro import sharding as SH
+            # slot-state rows over "data" (batch_spec: dim 0 when divisible)
+            state = jax.device_put(state, SH.tree_batch_shardings(state, mesh))
         self._state = state
         self._step_fn = jax.jit(self._build_step(), donate_argnums=(2, 3))
         self._admit_fn = jax.jit(self._build_admit(), donate_argnums=(1, 2))
@@ -227,6 +283,9 @@ class ServingEngine:
         self.queue: collections.deque[Request] = collections.deque()
         self.completed: list[dict] = []
         self.steps = 0
+        # one record per shared-prefill burst: the admitted slots' fill
+        # lengths and the max-⌈P/chunk⌉ dispatches that covered them all
+        self.prefill_bursts: list[dict] = []
         self.dispatch_count: collections.Counter = store.dispatch_count
 
     # ------------------------------------------------------------ step fns
@@ -353,6 +412,7 @@ class ServingEngine:
         if not self.continuous and busy:
             return 0            # static batching: wait for the batch to drain
         admitted = 0
+        newly: list[int] = []   # slots admitted this call (one prefill burst)
         free = [s for s in range(self.max_slots) if self._requests[s] is None]
         while self.queue and free:
             req = self.queue[0]
@@ -385,23 +445,32 @@ class ServingEngine:
             self._pos_h[slot] = 0
             self._plen_h[slot] = plen
             self._tlen_h[slot] = tlen
+            newly.append(slot)
             admitted += 1
-            if self.prefill_chunk is not None:
-                # chunked prefill: fill the slot's plen-1 teacher-forced
-                # cache rows NOW, in ⌈P/chunk⌉ dispatches (asserted by
-                # bench --quick) — serve_step then starts at the last
-                # prompt position and every one of its steps emits a token
-                n_fill = plen - 1
-                for _ in range(-(-n_fill // self.prefill_chunk)):
-                    self.dispatch_count["serve_prefill"] += 1
-                    with warnings.catch_warnings():
-                        warnings.filterwarnings(
-                            "ignore",
-                            message="Some donated buffers were not usable")
-                        self._state, self._cache = self._prefill_fn(
-                            self.params, self.store.scan_stack, self._state,
-                            self._cache)
-                self._pos_h[slot] = n_fill
+        if self.prefill_chunk is not None and newly:
+            # SHARED chunked prefill: one burst of max_s ⌈P_s/chunk⌉
+            # dispatches fills EVERY slot admitted this step together (the
+            # prefill program advances every prefill-phase slot, so
+            # same-step admissions ride the same dispatches; a slot whose
+            # shorter prompt finishes early just stops advancing).  Beats
+            # the per-request Σ_s ⌈P_s/chunk⌉ whenever a step admits more
+            # than one request — burst accounting is recorded in
+            # ``prefill_bursts`` and asserted by bench --quick-prefill.
+            fills = [int(self._plen_h[s]) - 1 for s in newly]
+            n_disp = max(-(-f // self.prefill_chunk) for f in fills)
+            self.prefill_bursts.append(
+                {"fills": fills, "dispatches": n_disp})
+            for _ in range(n_disp):
+                self.dispatch_count["serve_prefill"] += 1
+                with warnings.catch_warnings():
+                    warnings.filterwarnings(
+                        "ignore",
+                        message="Some donated buffers were not usable")
+                    self._state, self._cache = self._prefill_fn(
+                        self.params, self.store.scan_stack, self._state,
+                        self._cache)
+            for s, n_fill in zip(newly, fills):
+                self._pos_h[s] = n_fill
         return admitted
 
     def _retire_finished(self) -> list[dict]:
@@ -481,4 +550,5 @@ class ServingEngine:
         self._plen_h[:] = 0
         self._tlen_h[:] = 0
         self.steps = 0
+        self.prefill_bursts = []
         self.dispatch_count.clear()

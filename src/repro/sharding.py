@@ -34,18 +34,33 @@ _REPLICATED = {"ln1", "ln2", "lnx", "final_ln", "gate", "gate_norm", "A_log",
 
 
 def _axis_size(mesh: Mesh, axis) -> int:
+    """Product of the named axes' sizes; axes absent from the mesh count as
+    1 (the rule then degrades via :func:`fit_spec`, which drops them)."""
     if axis is None:
         return 1
     if isinstance(axis, tuple):
-        return int(np.prod([mesh.shape[a] for a in axis]))
-    return mesh.shape[axis]
+        return int(np.prod([mesh.shape.get(a, 1) for a in axis]))
+    return mesh.shape.get(axis, 1)
+
+
+def _axes_in_mesh(mesh: Mesh, axis) -> bool:
+    if axis is None:
+        return True
+    names = mesh.axis_names
+    if isinstance(axis, tuple):
+        return all(a in names for a in axis)
+    return axis in names
 
 
 def fit_spec(mesh: Mesh, shape: tuple, spec: P) -> P:
-    """Drop sharding on any dim whose size isn't divisible by its axis."""
+    """Drop sharding on any dim whose size isn't divisible by its axis, and
+    on any axis the mesh doesn't carry (e.g. ``param_spec`` rules applied to
+    a round mesh without a ``data`` axis, or a 1-D serving mesh without
+    ``model``) — every rule degrades axis-by-axis to replication."""
     out = []
     for dim, axis in zip(shape, tuple(spec) + (None,) * (len(shape) - len(spec))):
-        out.append(axis if dim % _axis_size(mesh, axis) == 0 else None)
+        ok = _axes_in_mesh(mesh, axis) and dim % _axis_size(mesh, axis) == 0
+        out.append(axis if ok else None)
     return P(*out)
 
 
@@ -95,6 +110,28 @@ def param_spec(path: tuple, shape: tuple, mesh: Mesh, mode: str = "baseline") ->
     if name in _DOWN_LIKE:
         return fit_spec(mesh, shape, P(*prefix, "model", da))
     return P()                                # default: replicate
+
+
+def param_spec_tp(path: tuple, shape: tuple, mesh: Mesh,
+                  mode: str = "baseline") -> P:
+    """:func:`param_spec` with the FSDP ``"data"`` component stripped —
+    tensor-parallel over ``"model"`` only, replicated elsewhere.
+
+    For meshes whose ``"data"``-named axis is NOT a weight-sharding axis:
+    serving meshes (slots over ``"data"``) and federated-round meshes
+    (clients over the first axis, whatever its name).  FSDP'ing frozen
+    weights there would all-gather them per use — exactly the per-step
+    base gather the round path is designed to avoid."""
+    def _strip_data(ax):
+        if ax == "data":
+            return None
+        if isinstance(ax, tuple):          # keep non-"data" components
+            kept = tuple(a for a in ax if a != "data")
+            return kept[0] if len(kept) == 1 else (kept or None)
+        return ax
+
+    spec = param_spec(path, shape, mesh, mode)
+    return fit_spec(mesh, shape, P(*[_strip_data(ax) for ax in spec]))
 
 
 def lora_spec(path: tuple, shape: tuple, mesh: Mesh, mode: str = "baseline") -> P:
@@ -199,6 +236,31 @@ def tree_batch_shardings(tree: Pytree, mesh: Mesh) -> Pytree:
         return NamedSharding(mesh, batch_spec(leaf.shape, mesh))
 
     return jax.tree_util.tree_map(_one, tree)
+
+
+def round_mesh_axes(mesh: Mesh) -> tuple:
+    """Classify a federated-round mesh into ``(client_axis, model_axis)``.
+
+    * 1-D mesh (any axis name, e.g. ``("clients",)``): the whole mesh is the
+      client axis — today's pure client-parallel round;
+    * 2-D mesh whose LAST axis is named ``"model"`` (e.g.
+      ``("client", "model")``): sampled clients split over the first axis
+      while each client group's local training runs tensor-parallel over
+      ``"model"`` (the ``param_spec`` / ``cache_spec`` partition rules apply
+      directly — they shard over ``"model"`` and ignore axes the mesh
+      doesn't carry).
+
+    Anything else is rejected loudly — a silent single-device fallback on a
+    256-chip mesh would be an expensive no-op.
+    """
+    names = tuple(mesh.axis_names)
+    if len(names) == 1:
+        return names[0], None
+    if len(names) == 2 and names[1] == "model" and names[0] != "model":
+        return names[0], "model"
+    raise ValueError(
+        f"round mesh must be 1-D (client axis) or 2-D with axes "
+        f"(client, 'model'); got axes {names}")
 
 
 def replicated(mesh: Mesh) -> NamedSharding:

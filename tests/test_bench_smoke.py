@@ -74,10 +74,14 @@ def test_bench_serving_quick_dispatch_counts():
 
     pre = counts["prefill"]
     assert pre["requests"] == N_REQUESTS
-    # admission dispatches: P → ⌈P/chunk⌉, per prompt, exactly
+    # admission dispatches: max ⌈P/chunk⌉ per burst, exactly — and shared
+    # bursts STRICTLY beat per-request Σ ⌈P/chunk⌉ (the first step admits
+    # both slots together)
     per_prompt = -(-pre["prompt_fill_positions"] // pre["chunk"])
-    assert pre["dispatch"]["serve_prefill"] == N_REQUESTS * per_prompt
+    assert pre["per_request_serve_prefill"] == N_REQUESTS * per_prompt
     assert pre["dispatch"]["serve_prefill"] == pre["expected_serve_prefill"]
+    assert pre["dispatch"]["serve_prefill"] < pre["per_request_serve_prefill"]
+    assert pre["bursts"] < N_REQUESTS          # >=1 multi-admission burst
     assert pre["dispatch"]["serve_step"] == pre["steps"]
     # serve_step no longer advances through prompt positions: every decode
     # step emits a token, so the same workload needs strictly fewer steps
@@ -107,6 +111,7 @@ def test_bench_serving_quick_prefill_cli_lines(monkeypatch):
         "prefill": {"steps": 4, "requests": 2, "chunk": 4,
                     "prompt_fill_positions": 15,
                     "expected_serve_prefill": 8,
+                    "per_request_serve_prefill": 8, "bursts": 2,
                     "dispatch": {"serve_step": 4, "serve_prefill": 8}}})
     lines = B.main(["--quick-prefill"])
     assert "serving/dispatch/prefill/steps,0.0,4" in lines

@@ -169,9 +169,11 @@ def test_serving_from_checkpoint_matches_live_store(population, tmp_path):
 def test_chunked_prefill_token_identical_and_dispatch_exact(population):
     """Chunked prefill must (a) serve tokens bit-identical to the streamed
     engine (and hence to per-client ``make_greedy_generate``), (b) cost
-    exactly ⌈P/chunk⌉ ``serve_prefill`` dispatches per admitted P-position
-    prompt, and (c) free ``serve_step`` from walking prompt positions —
-    strictly fewer decode steps for the same workload."""
+    exactly ``max ⌈P/chunk⌉`` shared ``serve_prefill`` dispatches per
+    admission burst — strictly fewer than per-request admission, since the
+    first step admits every free slot at once — and (c) free ``serve_step``
+    from walking prompt positions: strictly fewer decode steps for the
+    same workload."""
     tr, clients, cap_start, gen_len = population
     chunk = 3
     streamed = _engine(tr, gen_len)
@@ -183,9 +185,18 @@ def test_chunked_prefill_token_identical_and_dispatch_exact(population):
 
     n_prefix = tr.mcfg.num_vision_tokens
     p_fill = n_prefix + (cap_start + 1) - 1      # teacher-forced cache fill
-    expect = len(reqs) * -(-p_fill // chunk)
+    per_prompt = -(-p_fill // chunk)
     dc = chunked.dispatch_count
-    assert dc["serve_prefill"] == expect
+    bursts = chunked.prefill_bursts
+    # every admission lands in exactly one burst; each burst costs the max
+    # (here: uniform) ⌈P/chunk⌉ regardless of how many slots it admitted
+    assert sum(len(b["fills"]) for b in bursts) == len(reqs)
+    assert all(b["dispatches"] == per_prompt for b in bursts)
+    assert dc["serve_prefill"] == sum(b["dispatches"] for b in bursts)
+    # the first step admits all 4 free slots in ONE shared burst, so the
+    # total strictly beats per-request admission
+    assert len(bursts[0]["fills"]) == 4
+    assert dc["serve_prefill"] < len(reqs) * per_prompt
     assert dc["serve_step"] == chunked.steps
     assert dc["serve_admit"] == len(reqs)
     assert set(dc) <= {"serve_step", "serve_prefill", "serve_admit",
