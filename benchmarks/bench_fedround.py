@@ -32,6 +32,16 @@ The tier-2 smoke test (``pytest -m slow``) asserts on these counters.
 mesh round + padded cohort + population eval in-process (requires
 ``XLA_FLAGS=--xla_force_host_platform_device_count=4`` — the CI mesh step).
 
+A ``population`` section scales the HOSTED client count through the paged
+``ClientStateStore`` (``FederatedConfig.paged``): K = 10^3 / 10^4 / 10^5
+clients sharing a small pool of synthetic shards, cohort fixed at 8 —
+recording rounds/sec, the device-bank bytes (constant in K) and the host-
+tier bytes, page-in dispatches and the peak number of device-resident
+client rows.  ``--quick-population`` asserts the paging invariants instead
+of timing: the bank never holds more client rows than its cohort-sized
+slot count, prefetch/write-back add ZERO ``round_step`` dispatches, and a
+hosted K=10^5 population completes rounds in the container.
+
 Scale: fedbench-tiny, K=10 clients, sampling rate 0.4 (the paper protocol),
 swept over local_steps; decode at gen_len 17 (≥16).
 """
@@ -45,6 +55,10 @@ import time
 
 _JSON_TAG = "BENCH_FEDROUND_JSON:"
 _MESH_JSON_TAG = "BENCH_FEDROUND_MESH_JSON:"
+_POP_JSON_TAG = "BENCH_FEDROUND_POP_JSON:"
+POP_SIZES = (1_000, 10_000, 100_000)    # hosted clients (paged store)
+POP_COHORT = 8                          # sampled clients per round
+POP_TIMED_ROUNDS = 3
 MESH_SHAPES = ((1, 1), (2, 1), (1, 2), (2, 2))   # (client, model)
 MESH_TIMED_ROUNDS = 3
 ROUND_STEPS = (2, 8)        # local_steps sweep; 8 = paper-protocol default
@@ -264,6 +278,113 @@ def quick_check() -> dict:
     return out
 
 
+def _build_population_trainer(K: int, n_s: int, *, slots: int = 0,
+                              rounds_budget: int = 20, seed: int = 0):
+    """Paged trainer hosting K clients over a SHARED pool of synthetic
+    shards (clients alias pool entries, so host corpus RAM is O(pool) not
+    O(K); adapters materialise lazily, so only ever-sampled clients cost
+    anything) — the K-scaling harness for the population section."""
+    import numpy as np
+
+    from repro.configs import get_config
+    from repro.core.editing import EditConfig
+    from repro.data.synthetic import (SyntheticTaskConfig,
+                                      make_federated_datasets)
+    from repro.federated import FederatedConfig, FederatedTrainer
+    from repro.optim import OptimizerConfig
+
+    tcfg = SyntheticTaskConfig(caption_len=8)
+    pool, gtest = make_federated_datasets(tcfg, 4, np.array([24] * 4))
+    data = [pool[k % len(pool)] for k in range(K)]
+    fcfg = FederatedConfig(
+        num_clients=K, sample_rate=n_s / K,
+        ranks=tuple((4, 8, 8, 16)[k % 4] for k in range(K)),
+        local_steps=1, batch_size=4, aggregator="fedilora",
+        edit=EditConfig(enabled=True), paged=True, store_slots=slots)
+    return FederatedTrainer(get_config("fedbench-tiny"), fcfg,
+                            OptimizerConfig(peak_lr=3e-3,
+                                            total_steps=rounds_budget),
+                            data, data, gtest, seed=seed)
+
+
+def _population_measure() -> dict:
+    """Rounds/sec + memory footprint scaling the HOSTED client population
+    (paged store, cohort fixed at POP_COHORT)."""
+    out: dict = {"cohort": POP_COHORT, "timed_rounds": POP_TIMED_ROUNDS,
+                 "sizes": {}}
+    for K in POP_SIZES:
+        tr = _build_population_trainer(K, POP_COHORT)
+        tr.run_round()                      # compile + first page-in
+        t = _min_time(tr.run_round, POP_TIMED_ROUNDS)
+        out["sizes"][str(K)] = {
+            "round_s": t, "rounds_per_sec": 1.0 / t,
+            "device_bank_bytes": tr.store.device_bytes(),
+            "host_tier_bytes": tr.store.host_bytes(),
+            "peak_resident_rows": tr.store.peak_resident,
+            "bank_slots": tr.store.slots,
+            "page_ins": int(tr.dispatch_count["page_in"]),
+            "materialized_clients": len(tr.store.materialized_ids),
+        }
+    out["caveat"] = (
+        "2-core container: absolute rounds/sec is CPU-bound here; this "
+        "section tracks the K-scaling SHAPE — device-bank bytes must stay "
+        "constant in K (the store pages cohorts, never residents the "
+        "population) and round time must stay ~flat as K grows 100x")
+    return out
+
+
+def quick_population_check() -> dict:
+    """Paged-store invariant checks (CI, in-process, no timing): the device
+    bank never holds more client rows than its cohort-sized slot count,
+    pipelined prefetch/write-back add ZERO ``round_step`` dispatches beyond
+    one per round, and a hosted K=10^5 population completes rounds in the
+    container.  Raises on any violation."""
+    import jax
+
+    out = {}
+    tr = _build_population_trainer(50, 4)
+    for _ in range(3):
+        tr.run_round()
+    for _ in range(3):
+        tr.run_round_pipelined()       # prefetch under the overlap window
+    tr.flush_rounds()
+    counts = dict(tr.dispatch_count)
+    out["population"] = counts
+    if counts.get("round_step") != 6:
+        raise RuntimeError(
+            f"paging changed the round dispatch count: {counts} "
+            "(expected exactly one round_step per round; prefetch must "
+            "ride the page_in counter)")
+    S = tr.store.slots
+    if S != tr._n_sample:
+        raise RuntimeError(
+            f"store defaulted to {S} slots for a {tr._n_sample}-cohort")
+    if tr.store.peak_resident > S or len(tr.store.pager.slot_of) > S:
+        raise RuntimeError(
+            f"device bank resided {tr.store.peak_resident} client rows "
+            f"(now {len(tr.store.pager.slot_of)}) > cohort size {S}")
+    bad = [leaf.shape[0] for leaf in jax.tree_util.tree_leaves(
+        (tr.store.lora_bank, tr.store.ranks_bank, tr.store.sizes_bank,
+         tr.store.data_bank)) if leaf.shape[0] != S]
+    if bad:
+        raise RuntimeError(f"bank leading dims {bad} != slots {S}")
+
+    big = _build_population_trainer(100_000, POP_COHORT)
+    for _ in range(2):
+        big.run_round()
+    if big.store.peak_resident > big.store.slots:
+        raise RuntimeError(
+            f"100k population resided {big.store.peak_resident} rows > "
+            f"bank {big.store.slots}")
+    if len(big.store.materialized_ids) > 2 * POP_COHORT:
+        raise RuntimeError(
+            "lazy init materialised "
+            f"{len(big.store.materialized_ids)} clients for two "
+            f"{POP_COHORT}-cohorts — the population is not lazy")
+    out["population_100k"] = dict(big.dispatch_count)
+    return out
+
+
 def _mesh_measure() -> dict:
     """Rounds/sec + compiled-HLO collective counts per mesh shape (1×1,
     N×1, 1×N, 2×2) — runs in a subprocess with 4 forced host devices."""
@@ -291,6 +412,7 @@ def _mesh_measure() -> dict:
             tr.base_params, tr.stacked_lora, tr.server.global_lora,
             tr.server.prev_global, tr._ranks_dev, tr._sizes_dev,
             tr._stacked_data, jnp.asarray(sampled, jnp.int32),
+            jnp.asarray(sampled, jnp.int32),
             jnp.asarray(batch_idx, jnp.int32),
             jnp.asarray(tr.server.round, jnp.int32))
         cb = collective_bytes(lowered.compile().as_text())
@@ -386,10 +508,16 @@ def main(argv: list[str] | None = None) -> list[str]:
     ap.add_argument("--quick-mesh", action="store_true",
                     help="2-D mesh dispatch-count asserts only (needs 4 "
                          "forced host devices; no timing, no JSON)")
+    ap.add_argument("--quick-population", action="store_true",
+                    help="paged-store invariant asserts only (bank bounded "
+                         "by the cohort, no extra round dispatches, 100k "
+                         "hosted clients; no timing, no JSON)")
     args = ap.parse_args([] if argv is None else argv)
 
-    if args.quick or args.quick_mesh:
-        counts = quick_mesh_check() if args.quick_mesh else quick_check()
+    if args.quick or args.quick_mesh or args.quick_population:
+        counts = (quick_mesh_check() if args.quick_mesh
+                  else quick_population_check() if args.quick_population
+                  else quick_check())
         return [f"fedround/dispatch/{mode}/{name},0.0,{cnt}"
                 for mode, cc in sorted(counts.items())
                 for name, cnt in sorted(cc.items())]
@@ -412,6 +540,12 @@ def main(argv: list[str] | None = None) -> list[str]:
               "_mesh_measure, _MESH_JSON_TAG; "
               "print(_MESH_JSON_TAG + json.dumps(_mesh_measure()))")
     res["mesh"] = run_measurement_subprocess(code_m, _MESH_JSON_TAG, env=env_m)
+    # population section: its own subprocess — single device, hosted K sweep
+    code_p = ("import json; from benchmarks.bench_fedround import "
+              "_population_measure, _POP_JSON_TAG; "
+              "print(_POP_JSON_TAG + json.dumps(_population_measure()))")
+    res["population"] = run_measurement_subprocess(code_p, _POP_JSON_TAG,
+                                                   env=dict(os.environ))
     _append_history(res)
 
     lines = []
@@ -448,6 +582,13 @@ def main(argv: list[str] | None = None) -> list[str]:
             f"fedround/mesh/{shape},{r['round_s'] * 1e6:.1f},"
             f"{r['rounds_per_sec']:.2f} rounds/s "
             f"ar={cc['all-reduce']} ag={cc['all-gather']}")
+    for K, r in sorted(res["population"]["sizes"].items(),
+                       key=lambda kv: int(kv[0])):
+        lines.append(
+            f"fedround/population/K{K},{r['round_s'] * 1e6:.1f},"
+            f"{r['rounds_per_sec']:.2f} rounds/s "
+            f"dev={r['device_bank_bytes']}B host={r['host_tier_bytes']}B "
+            f"resident<={r['peak_resident_rows']}")
     lines.append(f"fedround/devices,0.0,{res['config']['devices']}")
     return lines
 

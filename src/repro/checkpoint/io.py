@@ -72,34 +72,83 @@ def save_federated(dirpath: str, trainer) -> None:
     os.makedirs(dirpath, exist_ok=True)
     save_pytree(os.path.join(dirpath, "global_lora.npz"), trainer.server.global_lora)
     save_pytree(os.path.join(dirpath, "prev_global.npz"), trainer.server.prev_global)
-    for i, c in enumerate(trainer.clients):
-        save_pytree(os.path.join(dirpath, f"client_{i}.npz"), c.lora)
-    if trainer.fcfg.aggregator == "flora":
-        save_pytree(os.path.join(dirpath, "base_params.npz"),
-                    trainer.base_params)
     meta = {"round": trainer.server.round,
             "ranks": [c.rank for c in trainer.clients],
             "aggregator": trainer.fcfg.aggregator,
             "global_version": getattr(trainer, "_global_version", 0),
             "async_tick": getattr(trainer, "_async_tick", 0)}
+    store = getattr(trainer, "store", None)
+    if store is not None:
+        # paged trainer: flush first (in-flight eviction captures land on
+        # host, dirty bank rows write back) and stream ONLY materialised
+        # clients — every other client is still its deterministic lazy
+        # init, which any loader reconstructs from the trainer seed
+        if any(v > 0 for v in store.pager.pins.values()):
+            raise ValueError(
+                "client store has pinned rows (an in-flight cohort); "
+                "retire it before checkpointing")
+        store.flush()
+        mat = [int(k) for k in store.materialized_ids]
+        for k in mat:
+            save_pytree(os.path.join(dirpath, f"client_{k}.npz"),
+                        store.host_adapter(k))
+        meta["paged"] = True
+        meta["materialized"] = mat
+        # resident set in LRU order (coldest first): replaying it through
+        # prefetch() restores both residency and eviction order
+        meta["resident"] = [int(k) for k in sorted(
+            store.pager.slot_of, key=lambda i: store.pager.lru[i])]
+    else:
+        for i, c in enumerate(trainer.clients):
+            save_pytree(os.path.join(dirpath, f"client_{i}.npz"), c.lora)
+    if trainer.fcfg.aggregator == "flora":
+        save_pytree(os.path.join(dirpath, "base_params.npz"),
+                    trainer.base_params)
     with open(os.path.join(dirpath, "meta.json"), "w") as f:
         json.dump(meta, f)
 
 
 def load_federated(dirpath: str, trainer) -> None:
+    """Restore a ``save_federated`` snapshot into ``trainer``.  Checkpoint
+    format and trainer mode cross freely: a paged checkpoint stores only
+    MATERIALISED clients (meta ``materialized``) — missing clients are
+    reconstructed through the trainer's deterministic per-client init, which
+    is exactly what they still were when saved."""
     with open(os.path.join(dirpath, "meta.json")) as f:
         meta = json.load(f)
     trainer.server.global_lora = load_pytree(os.path.join(dirpath, "global_lora.npz"))
     trainer.server.prev_global = load_pytree(os.path.join(dirpath, "prev_global.npz"))
     trainer.server.round = meta["round"]
-    # client adapters live stacked [K, ...] on the trainer (client .lora is a
-    # read-only view) — restore by restacking the per-client snapshots
-    loras = [load_pytree(os.path.join(dirpath, f"client_{i}.npz"))
-             for i in range(len(trainer.clients))]
-    trainer.stacked_lora = jax.tree_util.tree_map(
-        lambda *xs: jnp.stack(xs), *loras)
-    trainer.client_ranks = np.asarray(meta["ranks"], np.int32)
-    trainer._ranks_dev = jnp.asarray(trainer.client_ranks)
+    K = len(trainer.clients)
+    mat = set(int(k) for k in meta.get("materialized", range(K)))
+
+    def _client_lora(k):
+        if k in mat:
+            return load_pytree(os.path.join(dirpath, f"client_{k}.npz"))
+        return trainer._init_lora_fn(k)
+
+    store = getattr(trainer, "store", None)
+    if store is not None:
+        # paged trainer: drop all residency + host state, rebuild the host
+        # tier from the snapshot (unmaterialised clients stay lazy), then
+        # replay the saved LRU order so eviction behaviour resumes exactly
+        store.invalidate()
+        trainer.client_ranks[:] = np.asarray(meta["ranks"], np.int32)
+        for k in sorted(mat):
+            store.write_client(k, _client_lora(k),
+                               rank=int(meta["ranks"][k]))
+        resident = [int(k) for k in meta.get("resident", [])]
+        for k in resident[-store.slots:]:    # coldest→hottest
+            store.prefetch([k])
+    else:
+        # client adapters live stacked [K, ...] on the trainer (client
+        # .lora is a read-only view) — restore by restacking the
+        # per-client snapshots
+        loras = [_client_lora(i) for i in range(K)]
+        trainer.stacked_lora = jax.tree_util.tree_map(
+            lambda *xs: jnp.stack(xs), *loras)
+        trainer.client_ranks = np.asarray(meta["ranks"], np.int32)
+        trainer._ranks_dev = jnp.asarray(trainer.client_ranks)
     base = os.path.join(dirpath, "base_params.npz")
     if os.path.exists(base):                     # flora-mutated base weights
         trainer.base_params = load_pytree(base)

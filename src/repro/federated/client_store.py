@@ -1,0 +1,383 @@
+"""Host-backed client-state store: the full federated population lives on
+host (adapters, ranks, sizes, corpus shards — optionally disk-spilled), and
+the device only ever holds a cohort-sized bank of ``slots`` rows.
+
+This is the training-side generalisation of ``repro.serving.AdapterStore``:
+both build on ``repro.core.paging.LRUPager`` for slot residency, but the
+client store is READ-WRITE — a federated round mutates its cohort's bank
+rows in place (the fused engine scatters trained adapters back by slot), so
+eviction must *write back*:
+
+* :meth:`acquire_cohort` maps a sampled cohort to bank slots: resident
+  clients are touched + pinned; cold clients are assigned slots (evicting
+  LRU unpinned residents — their dirty rows are captured from the bank
+  FIRST), lazily materialised through ``init_fn`` on first ever use (the
+  same per-client PRNG fold the resident trainer uses, so paged state is
+  bit-identical), and paged in with ONE jitted, donated scatter over the
+  whole bank tree (adapters + ranks + sizes + corpus rows).
+* Everything stays asynchronous: eviction captures are device-side row
+  gathers enqueued on the stream (they read the post-round bank without a
+  host sync) and convert to numpy only at :meth:`flush` — the pipelined
+  driver's prefetch window therefore pages round t+1's cohort while round
+  t still executes, with JAX's dispatch ordering guaranteeing the scatter
+  lands after the round that produced the bank.
+* :meth:`adopt` swaps in the round's output banks (the engine donates the
+  inputs); :meth:`mark_trained` marks the cohort's rows dirty so a later
+  eviction/flush writes them back to host.
+
+The optional cold tier (``host_slots`` + ``spill_dir``) LRU-spills
+materialised host adapters to per-client npz shards via
+``repro.checkpoint.io`` — the population is then bounded by disk, not RAM.
+Corpus shards and the ``[K]`` rank/size vectors always stay in RAM (they
+are the sampler's inputs).
+"""
+
+from __future__ import annotations
+
+import collections
+import os
+import warnings
+from typing import Any, Callable, Iterable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.paging import LRUPager
+
+Pytree = Any
+
+
+def _pad_rows(x: np.ndarray, n_max: int) -> np.ndarray:
+    """Zero-pad a shard's leading (example) axis to ``n_max`` — identical to
+    the resident trainer's stacked-corpus padding, so gathered batches are
+    bit-identical (batch indices never reach the padding)."""
+    x = np.asarray(x)
+    if x.shape[0] < n_max:
+        x = np.pad(x, [(0, n_max - x.shape[0])] + [(0, 0)] * (x.ndim - 1))
+    return x
+
+
+class ClientStateStore:
+    """LRU-paged device bank of per-client federated state.
+
+    ``ranks``/``sizes`` are the trainer's host ``[K]`` vectors (shared by
+    reference, not copied — the trainer's metric fetches keep them fresh).
+    ``data`` is the per-client list of host shard dicts; ``batch_keys``
+    selects the keys that ride the round; ``init_fn(k)`` materialises
+    client ``k``'s initial adapter on first use.
+    """
+
+    def __init__(self, *, num_clients: int, slots: int,
+                 init_fn: Callable[[int], Pytree],
+                 ranks: np.ndarray, sizes: np.ndarray,
+                 data: list[dict], batch_keys: list[str],
+                 dispatch_count: collections.Counter | None = None,
+                 host_slots: int | None = None,
+                 spill_dir: str | None = None):
+        if host_slots is not None and spill_dir is None:
+            raise ValueError("host_slots needs spill_dir (a cold tier to "
+                             "spill cold host adapters into)")
+        self.num_clients = num_clients
+        self.pager = LRUPager(slots, kind="client")
+        self.init_fn = init_fn
+        self.ranks = ranks                       # host [K] i32 (shared ref)
+        self.sizes = sizes                       # host [K] f32 (shared ref)
+        self.data = data
+        self.batch_keys = list(batch_keys)
+        self.n_max = int(max(d["tokens"].shape[0] for d in data))
+        self.host_slots = host_slots
+        self.spill_dir = spill_dir
+        self.dispatch_count = (collections.Counter()
+                               if dispatch_count is None else dispatch_count)
+        # device banks (built lazily from the first materialised adapter)
+        self.lora_bank: Pytree | None = None     # [S, ...]
+        self.ranks_bank = None                   # [S] i32
+        self.sizes_bank = None                   # [S] f32
+        self.data_bank: dict | None = None       # {key: [S, n_max, ...]}
+        # host tier: id -> adapter tree (numpy, or device rows captured by an
+        # eviction and not yet flushed — see _capture)
+        self._host_lora: dict[int, Pytree] = {}
+        self._pending_rank: dict[int, Any] = {}  # device rank of captures
+        self._dirty: set[int] = set()            # resident rows newer than host
+        self._host_lru: dict[int, int] = {}
+        self._host_tick = 0
+        self._spilled: set[int] = set()
+        self._page_in_fn = None
+        self.loads = 0
+        self.spills = 0
+        self.spill_loads = 0
+        self.peak_resident = 0
+
+    # --------------------------------------------------------------- queries
+    @property
+    def slots(self) -> int:
+        return self.pager.slots
+
+    @property
+    def evictions(self) -> int:
+        return self.pager.evictions
+
+    @property
+    def resident_ids(self) -> list[int]:
+        return self.pager.resident_ids
+
+    @property
+    def materialized_ids(self) -> list[int]:
+        """Clients whose adapter state has ever been realised (everything
+        else is still the deterministic lazy init)."""
+        return sorted(set(self._host_lora) | self._spilled | self._dirty)
+
+    def device_bytes(self) -> int:
+        banks = [self.lora_bank, self.ranks_bank, self.sizes_bank,
+                 self.data_bank]
+        return sum(leaf.nbytes for b in banks if b is not None
+                   for leaf in jax.tree_util.tree_leaves(b))
+
+    def host_bytes(self) -> int:
+        """Host-tier RAM: materialised adapters + corpus shards (shards
+        shared between clients — e.g. a pooled synthetic corpus — are
+        counted once, keyed by array identity)."""
+        n = sum(np.asarray(leaf).nbytes
+                for t in self._host_lora.values()
+                for leaf in jax.tree_util.tree_leaves(t))
+        seen: set[int] = set()
+        for d in self.data:
+            for v in d.values():
+                if id(v) not in seen:
+                    seen.add(id(v))
+                    n += np.asarray(v).nbytes
+        return n
+
+    # ------------------------------------------------------------- host tier
+    def _host_touch(self, k: int) -> None:
+        self._host_tick += 1
+        self._host_lru[k] = self._host_tick
+
+    def _host_set(self, k: int, tree: Pytree) -> None:
+        self._host_lora[k] = tree
+        self._host_touch(k)
+        if self.host_slots is None:
+            return
+        while len(self._host_lora) > self.host_slots:
+            # spill the coldest host adapter to its npz shard; resident ids
+            # keep their device row, so spilling one is still safe
+            victim = min(self._host_lru, key=self._host_lru.get)
+            if victim == k and len(self._host_lora) == 1:
+                break                      # never spill the row being used
+            self._spill(victim)
+
+    def _spill(self, k: int) -> None:
+        from repro.checkpoint.io import save_pytree
+        tree = self._flush_entry(k)
+        os.makedirs(self.spill_dir, exist_ok=True)
+        save_pytree(os.path.join(self.spill_dir, f"client_{k}.npz"), tree)
+        self._spilled.add(k)
+        del self._host_lora[k]
+        del self._host_lru[k]
+        self.spills += 1
+
+    def _flush_entry(self, k: int) -> Pytree:
+        """Numpy-ify a host entry (device-captured rows block here — the
+        lazy half of the asynchronous eviction write-back)."""
+        tree = jax.tree_util.tree_map(np.asarray, self._host_lora[k])
+        self._host_lora[k] = tree
+        if k in self._pending_rank:
+            self.ranks[k] = int(np.asarray(self._pending_rank.pop(k)))
+        return tree
+
+    def host_adapter(self, k: int) -> Pytree:
+        """Client ``k``'s host adapter tree (materialising lazily / loading
+        from the spill tier; NOT necessarily current if ``k`` is resident
+        and dirty — callers wanting the latest state use
+        :meth:`client_lora` or :meth:`flush` first)."""
+        if k in self._host_lora:
+            self._host_touch(k)
+            return self._host_lora[k]
+        if k in self._spilled:
+            from repro.checkpoint.io import load_pytree
+            tree = jax.tree_util.tree_map(
+                np.asarray,
+                load_pytree(os.path.join(self.spill_dir, f"client_{k}.npz")))
+            self._spilled.discard(k)
+            self.spill_loads += 1
+        else:
+            tree = jax.tree_util.tree_map(np.asarray, self.init_fn(k))
+        self._host_set(k, tree)
+        return tree
+
+    # ----------------------------------------------------------- device bank
+    def _build_banks(self, proto: Pytree) -> None:
+        S = self.slots
+        self.lora_bank = jax.tree_util.tree_map(
+            lambda x: jnp.zeros((S,) + np.asarray(x).shape,
+                                np.asarray(x).dtype), proto)
+        self.ranks_bank = jnp.zeros((S,), jnp.int32)
+        self.sizes_bank = jnp.zeros((S,), jnp.float32)
+        d0 = self.data[0]
+        self.data_bank = {
+            kk: jnp.zeros(
+                (S, self.n_max) + np.asarray(d0[kk]).shape[1:],
+                jax.dtypes.canonicalize_dtype(np.asarray(d0[kk]).dtype))
+            for kk in self.batch_keys}
+
+    def _capture(self, k: int, slot: int) -> None:
+        """Asynchronous eviction write-back: gather the (dirty) bank row as
+        device arrays — enqueued on the stream, reading the post-round bank
+        without a host sync; numpy conversion is deferred to flush()."""
+        self._host_set(k, jax.tree_util.tree_map(
+            lambda x: x[slot], self.lora_bank))
+        self._pending_rank[k] = self.ranks_bank[slot]
+        self._dirty.discard(k)
+
+    def acquire_cohort(self, ids: Iterable[int]) -> np.ndarray:
+        """Pin the cohort into bank slots; returns ``[C]`` slot indices.
+        Cold rows page in with ONE jitted scatter (``page_in`` in
+        ``dispatch_count``); evicted dirty rows are captured first."""
+        ids = [int(k) for k in ids]
+        if len(ids) > self.slots:
+            raise ValueError(
+                f"cohort of {len(ids)} exceeds the {self.slots}-slot device "
+                "bank; grow FederatedConfig.store_slots")
+        slots_out, cold = [], []
+        for k in ids:
+            slot = self.pager.lookup(k)
+            if slot is None:
+                if self.lora_bank is None:
+                    self._build_banks(self.host_adapter(k))
+                slot, evicted = self.pager.assign(k)
+                if evicted is not None and (
+                        evicted in self._dirty
+                        or (evicted not in self._host_lora
+                            and evicted not in self._spilled)):
+                    self._capture(evicted, slot)
+                cold.append((k, slot))
+            else:
+                self.pager.touch(k)
+            self.pager.pin(k)
+            slots_out.append(slot)
+        if cold:
+            self._page_in(cold)
+        self.peak_resident = max(self.peak_resident,
+                                 len(self.pager.slot_of))
+        return np.asarray(slots_out, np.int32)
+
+    def _page_in(self, cold: list[tuple[int, int]]) -> None:
+        ks = [k for k, _ in cold]
+        slots = jnp.asarray([s for _, s in cold], jnp.int32)
+        rows = {
+            "lora": jax.tree_util.tree_map(
+                lambda *xs: jnp.stack(xs),
+                *[self.host_adapter(k) for k in ks]),
+            "ranks": jnp.stack([
+                jnp.asarray(self._pending_rank[k], jnp.int32)
+                if k in self._pending_rank
+                else jnp.asarray(int(self.ranks[k]), jnp.int32)
+                for k in ks]),
+            "sizes": jnp.asarray([float(self.sizes[k]) for k in ks],
+                                 jnp.float32),
+            "data": {kk: jnp.asarray(np.stack(
+                [_pad_rows(self.data[k][kk], self.n_max) for k in ks]))
+                for kk in self.batch_keys},
+        }
+        if self._page_in_fn is None:
+            self._page_in_fn = jax.jit(
+                lambda banks, r, s: jax.tree_util.tree_map(
+                    lambda b, x: b.at[s].set(x), banks, r),
+                donate_argnums=(0,))
+        banks = {"lora": self.lora_bank, "ranks": self.ranks_bank,
+                 "sizes": self.sizes_bank, "data": self.data_bank}
+        self.dispatch_count["page_in"] += 1
+        with warnings.catch_warnings():
+            warnings.filterwarnings(
+                "ignore", message="Some donated buffers were not usable")
+            banks = self._page_in_fn(banks, rows, slots)
+        self.lora_bank, self.ranks_bank = banks["lora"], banks["ranks"]
+        self.sizes_bank, self.data_bank = banks["sizes"], banks["data"]
+        self.loads += len(cold)
+
+    def release_cohort(self, ids: Iterable[int]) -> None:
+        for k in ids:
+            self.pager.unpin(int(k))
+
+    def mark_trained(self, ids: Iterable[int]) -> None:
+        """A round's scatter made these bank rows newer than host."""
+        self._dirty.update(int(k) for k in ids)
+
+    def adopt(self, lora_bank: Pytree, ranks_bank) -> None:
+        """Swap in a round's output banks (the dispatch donated the
+        inputs); sizes/data are round-invariant."""
+        self.lora_bank = lora_bank
+        self.ranks_bank = ranks_bank
+
+    def prefetch(self, ids: Iterable[int]) -> np.ndarray:
+        """Page rows in without leaving them pinned (checkpoint restore /
+        warm-up)."""
+        ids = list(ids)
+        slots = self.acquire_cohort(ids)
+        self.release_cohort(ids)
+        return slots
+
+    # ------------------------------------------------------------- state I/O
+    def client_lora(self, k: int) -> Pytree:
+        """Client ``k``'s CURRENT adapter: the bank row when resident and
+        dirty (device gather), the host tier otherwise."""
+        k = int(k)
+        slot = self.pager.lookup(k)
+        if slot is not None and k in self._dirty:
+            return jax.tree_util.tree_map(lambda x: x[slot], self.lora_bank)
+        return jax.tree_util.tree_map(jnp.asarray, self.host_adapter(k))
+
+    def write_client(self, k: int, lora: Pytree,
+                     rank: int | None = None) -> None:
+        """Overwrite client ``k``'s state from the host side (reference
+        loop, checkpoint restore).  A resident copy is invalidated — the
+        next acquire re-pages the new state."""
+        k = int(k)
+        if self.pager.pinned(k):
+            raise RuntimeError(
+                f"client {k} is pinned by an in-flight cohort; retire it "
+                "before overwriting its state")
+        if self.pager.lookup(k) is not None:
+            self.pager.drop(k)
+        self._dirty.discard(k)
+        self._pending_rank.pop(k, None)
+        self._spilled.discard(k)
+        self._host_set(k, jax.tree_util.tree_map(np.asarray, lora))
+        if rank is not None:
+            self.ranks[k] = int(rank)
+
+    def flush(self) -> None:
+        """Synchronise the host tier: capture every dirty resident row
+        (rows stay resident and become clean) and numpy-ify deferred
+        eviction captures.  After flush, ``host_adapter(k)`` is current for
+        every materialised client."""
+        for k in sorted(self._dirty):
+            slot = self.pager.lookup(k)
+            self._host_set(k, jax.tree_util.tree_map(
+                lambda x: x[slot], self.lora_bank))
+            self._pending_rank[k] = self.ranks_bank[slot]
+        self._dirty.clear()
+        for k in list(self._host_lora):
+            self._flush_entry(k)
+
+    def invalidate(self) -> None:
+        """Forget all residency and materialised host state (checkpoint
+        load into a used trainer).  Pins must be drained first."""
+        if any(v > 0 for v in self.pager.pins.values()):
+            raise RuntimeError("cannot invalidate a store with pinned rows")
+        for k in list(self.pager.slot_of):
+            self.pager.drop(k)
+        self._host_lora.clear()
+        self._host_lru.clear()
+        self._pending_rank.clear()
+        self._dirty.clear()
+        self._spilled.clear()
+
+    def stack_clients(self, ids: Iterable[int]) -> Pytree:
+        """Stack a tile of CURRENT client adapters to a device ``[T, ...]``
+        tree (tiled population eval).  Blocking (flushes dirty rows)."""
+        self.flush()
+        return jax.tree_util.tree_map(
+            lambda *xs: jnp.stack(xs),
+            *[self.host_adapter(int(k)) for k in ids])

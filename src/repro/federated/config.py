@@ -47,6 +47,29 @@ class FederatedConfig:
     # pays one blocking sync per tick only while unmeasured clients remain.
     measure_delays: bool = False
     delay_ema_beta: float = 0.5              # EMA smoothing for step times
+    # ---- host-backed client-state store (paged cohorts) -------------------
+    # paged=True: the device holds only a cohort-sized bank of client rows
+    # (adapters + ranks + sizes + corpus shards); the full population lives
+    # on host in a ClientStateStore and cohorts page in/out with LRU
+    # eviction + write-back.  Bit-identical to the resident [K, ...] path
+    # (tested) — the unlock for populations far beyond device memory.
+    paged: bool = False
+    # device bank rows; 0 → exactly the sampled cohort size.  Grow it for
+    # run_round_async with delays (every in-flight cohort stays pinned) or
+    # to keep recurring clients hot across rounds.
+    store_slots: int = 0
+    # host adapters kept in RAM before LRU-spilling to npz shards under
+    # store_spill_dir; None → unbounded host tier (no disk spill)
+    store_host_slots: int | None = None
+    store_spill_dir: str | None = None
+    # ---- client sampling --------------------------------------------------
+    # "uniform": every client equally likely (the paper protocol).
+    # "availability": down-weight slow/unavailable clients by their
+    # measured local-step EMA — w_k ∝ (fastest_ema / ema_k)^alpha for
+    # measured clients, 1.0 for unmeasured ones (AFLoRA-style
+    # resource-aware sampling; falls back to uniform until any EMA lands).
+    sampling: str = "uniform"
+    availability_alpha: float = 1.0
 
     @property
     def global_rank(self) -> int:

@@ -39,6 +39,26 @@ program (``repro.launch.fedround.make_round_engine``):
   therefore cannot invalidate it (the use-after-donate hazard the old
   ``prev_global = global_lora`` aliasing would have caused).
 
+Paged population (``FederatedConfig.paged``)
+--------------------------------------------
+
+With ``paged=True`` the persistent ``[K, ...]`` stacks are replaced by a
+host-backed ``repro.federated.client_store.ClientStateStore``: the device
+holds only a cohort-sized bank of client rows (adapters, ranks, sizes,
+corpus shards), cohorts page in through LRU slot assignment with
+write-back-on-evict, and the SAME fused engine dispatches over the bank
+with ``idx`` = bank slots — still ONE jitted ``round_step`` per round, and
+bit-identical to the resident path because every per-client computation is
+row-local.  Page-in scatters and eviction captures are enqueued on the
+device stream *behind* the in-flight round (they consume its output bank
+references), so prefetch and write-back cost no host synchronisation; under
+``run_round_pipelined`` they overlap the previous round's execution.
+``run_round_async`` keeps each in-flight cohort pinned until retirement.
+Device residency is O(cohort), host residency O(K) (optionally LRU-spilled
+to disk via ``store_host_slots``/``store_spill_dir``) — the unlock for
+populations of 10^5+ clients (see ``benchmarks/bench_fedround.py
+--population``).
+
 ``run_round_reference`` preserves the host-driven per-client loop — the
 numerical reference for the fused path and the sequential baseline measured
 by ``benchmarks/bench_fedround.py``.  Evaluation decode
@@ -206,8 +226,10 @@ class ClientState:
     @property
     def lora(self) -> Pytree:
         k = self._index
-        return jax.tree_util.tree_map(lambda x: x[k],
-                                      self._trainer.stacked_lora)
+        tr = self._trainer
+        if tr.fcfg.paged:
+            return jax.tree_util.tree_map(jnp.asarray, tr.store.client_lora(k))
+        return jax.tree_util.tree_map(lambda x: x[k], tr.stacked_lora)
 
 
 class FederatedTrainer:
@@ -246,26 +268,18 @@ class FederatedTrainer:
         g0 = init_lora_params(jax.random.fold_in(key, 1), self.specs, self.lcfg)
         self.server = ServerState(global_lora=g0,
                                   prev_global=jax.tree_util.tree_map(jnp.copy, g0))
-        # ---- persistent stacked client state [K, ...] --------------------
-        loras = [init_lora_params(jax.random.fold_in(key, 100 + k), self.specs,
-                                  self.lcfg, client_rank=fed_cfg.ranks[k])
-                 for k in range(fed_cfg.num_clients)]
-        self.stacked_lora: Pytree = jax.tree_util.tree_map(
-            lambda *xs: jnp.stack(xs), *loras)
+        # every jitted dispatch is tallied here by name — the benchmark's
+        # --quick modes and the tier-2 smoke test assert on these counts
+        self.dispatch_count: collections.Counter = collections.Counter()
         self.client_ranks = np.asarray(fed_cfg.ranks, np.int32)   # host mirror
-        self._ranks_dev = jnp.asarray(self.client_ranks)
         sizes = np.asarray([d["tokens"].shape[0] for d in client_train],
                            np.float32)
-        self._sizes_dev = jnp.asarray(sizes)
         self.clients: list[ClientState] = []
         for k in range(fed_cfg.num_clients):
             self.clients.append(ClientState(
                 self, k, data=client_train[k], eval_data=client_eval[k],
                 size=int(sizes[k]),
                 rng=np.random.default_rng(seed + 7 * k + 1)))
-        # device-resident training corpus [K, N_max, ...] (zero-padded to the
-        # longest shard; batch indices never reach the padding) — the fused
-        # round gathers its minibatches from this in-program
         keys = [kk for kk in _BATCH_KEYS
                 if all(kk in d for d in client_train)]
         partial = [kk for kk in _BATCH_KEYS
@@ -275,14 +289,61 @@ class FederatedTrainer:
                 f"batch keys {partial} present in only some client shards; "
                 "the stacked corpus needs uniform keys (add the key — e.g. an "
                 "all-ones mask — to every client or drop it everywhere)")
-        n_max = max(d["tokens"].shape[0] for d in client_train)
-        self._stacked_data = {
-            kk: jnp.stack([
-                np.pad(np.asarray(d[kk]),
-                       [(0, n_max - d[kk].shape[0])]
-                       + [(0, 0)] * (np.asarray(d[kk]).ndim - 1))
-                for d in client_train])
-            for kk in keys}
+        # per-client initial adapter (deterministic PRNG fold — shared by
+        # the eager resident stack, the store's lazy materialisation, and
+        # checkpoint restores of never-materialised paged clients)
+        self._init_lora_fn = lambda k: init_lora_params(
+            jax.random.fold_in(key, 100 + k), self.specs, self.lcfg,
+            client_rank=fed_cfg.ranks[k])
+        if fed_cfg.paged:
+            # ---- host-backed population, cohort-sized device bank --------
+            if self.client_mesh is not None:
+                raise NotImplementedError(
+                    "paged=True with a round mesh is not supported yet — "
+                    "page the population or shard the cohort, not both")
+            from repro.federated.client_store import ClientStateStore
+
+            slots = fed_cfg.store_slots or self._n_sample
+            if slots < self._n_sample:
+                raise ValueError(
+                    f"store_slots={slots} is smaller than the sampled "
+                    f"cohort ({self._n_sample}); the bank must hold at "
+                    "least one whole cohort")
+            # lazy per-client adapter init with the SAME per-client PRNG
+            # fold the resident path stacks eagerly — paged state is
+            # therefore bit-identical, and K=10^5 costs nothing up front
+            self.store = ClientStateStore(
+                num_clients=fed_cfg.num_clients, slots=slots,
+                init_fn=self._init_lora_fn,
+                ranks=self.client_ranks, sizes=sizes,
+                data=client_train, batch_keys=keys,
+                dispatch_count=self.dispatch_count,
+                host_slots=fed_cfg.store_host_slots,
+                spill_dir=fed_cfg.store_spill_dir)
+            self.stacked_lora = None
+            self._stacked_data = None
+            self._ranks_dev = None
+            self._sizes_dev = None
+        else:
+            # ---- persistent stacked client state [K, ...] ----------------
+            self.store = None
+            loras = [self._init_lora_fn(k)
+                     for k in range(fed_cfg.num_clients)]
+            self.stacked_lora: Pytree = jax.tree_util.tree_map(
+                lambda *xs: jnp.stack(xs), *loras)
+            self._ranks_dev = jnp.asarray(self.client_ranks)
+            self._sizes_dev = jnp.asarray(sizes)
+            # device-resident training corpus [K, N_max, ...] (zero-padded
+            # to the longest shard; batch indices never reach the padding)
+            # — the fused round gathers its minibatches from this in-program
+            n_max = max(d["tokens"].shape[0] for d in client_train)
+            self._stacked_data = {
+                kk: jnp.stack([
+                    np.pad(np.asarray(d[kk]),
+                           [(0, n_max - d[kk].shape[0])]
+                           + [(0, 0)] * (np.asarray(d[kk]).ndim - 1))
+                    for d in client_train])
+                for kk in keys}
         self._opt_init, self._opt_update = make_optimizer(opt_cfg)
         self._round_step = None        # fused engine, built on first round
         self._local_train = None       # reference per-client jit, lazy
@@ -292,12 +353,10 @@ class FederatedTrainer:
         self._next_logits = jax.jit(self._next_logits_impl)
         self.rng = np.random.default_rng(seed)
         self.history: list[dict] = []
-        # every jitted dispatch is tallied here by name — the benchmark's
-        # --quick mode and the tier-2 smoke test assert on these counts
-        self.dispatch_count: collections.Counter = collections.Counter()
-        # ---- pipelined rounds: the in-flight (round, sampled, out) whose
-        # metrics have not been fetched yet (one round of lag by design)
+        # ---- pipelined rounds: the in-flight (round, sampled, out, slots)
+        # whose metrics have not been fetched yet (one round of lag by design)
         self._pending: tuple | None = None
+        self._last_slots = None        # bank slots of the last paged cohort
         # ---- buffered async (fedbuff) state ------------------------------
         self._client_update_step = None
         self._merge_step = None
@@ -409,9 +468,36 @@ class FederatedTrainer:
         fc = self.fcfg
         return max(int(round(fc.sample_rate * fc.num_clients)), 1)
 
-    def _sample_clients(self) -> list[int]:
-        return sorted(self.rng.choice(self.fcfg.num_clients, self._n_sample,
-                                      replace=False))
+    def _sample_clients(self, pool: list | None = None) -> list[int]:
+        """Sample one cohort.  ``pool`` restricts the draw (run_round_async
+        passes the idle clients).  ``sampling="availability"`` down-weights
+        slow clients by their measured local-step EMA —
+        ``w_k ∝ (fastest_ema / ema_k)^alpha`` for measured clients, 1.0 for
+        unmeasured ones — and falls back to uniform until any EMA lands, so
+        the default configuration's RNG stream is untouched."""
+        fc = self.fcfg
+        if fc.sampling not in ("uniform", "availability"):
+            raise ValueError(
+                f"unknown sampling {fc.sampling!r} "
+                "(expected 'uniform' or 'availability')")
+        n = self._n_sample
+        ids = None if pool is None else np.asarray(pool, np.int64)
+        if fc.sampling == "availability":
+            seen = self._ema_seen if ids is None else self._ema_seen[ids]
+            if seen.any():
+                ema = (self.client_step_ema if ids is None
+                       else self.client_step_ema[ids])
+                w = np.ones(seen.shape[0], np.float64)
+                base = float(ema[seen].min())
+                if base > 0:
+                    w[seen] = (base / ema[seen]) ** fc.availability_alpha
+                src = np.arange(fc.num_clients) if ids is None else ids
+                return sorted(int(k) for k in self.rng.choice(
+                    src, n, replace=False, p=w / w.sum()))
+        if ids is None:
+            # keep the historical call shape — bit-identical RNG stream
+            return sorted(self.rng.choice(fc.num_clients, n, replace=False))
+        return sorted(self.rng.choice(ids, n, replace=False))
 
     # ------------------------------------------------------------------ mesh
     @property
@@ -424,6 +510,11 @@ class FederatedTrainer:
         their shard_map mesh / sharding constraints and cohort padding are
         baked in at build time, so a stale engine would crash on (or
         silently ignore) operands re-placed for the new mesh."""
+        if m is not None and getattr(self, "fcfg", None) is not None \
+                and self.fcfg.paged:
+            raise NotImplementedError(
+                "paged=True with a round mesh is not supported yet — "
+                "page the population or shard the cohort, not both")
         if getattr(self, "_client_mesh", None) is not m:
             self._round_step = None
             self._client_update_step = None
@@ -517,33 +608,65 @@ class FederatedTrainer:
                        batch_idx: np.ndarray) -> dict:
         """ENQUEUE the fused round dispatch (no host sync — JAX dispatch is
         async) and swap device state references to the new (in-flight)
-        buffers."""
+        buffers.  Paged mode pages the cohort into the store's bank and
+        dispatches the SAME engine over bank operands with ``idx`` = bank
+        slots (``cids`` always carries the global ids — flora's fresh-init
+        PRNG folds them, never slots)."""
+        paged = self.fcfg.paged
+        cids = jnp.asarray(sampled, jnp.int32)
+        if paged:
+            slots = self.store.acquire_cohort(sampled)
+            idx = jnp.asarray(slots, jnp.int32)
+            lora, ranks, sizes, data = (
+                self.store.lora_bank, self.store.ranks_bank,
+                self.store.sizes_bank, self.store.data_bank)
+        else:
+            slots = None
+            idx = cids
+            lora, ranks, sizes, data = (self.stacked_lora, self._ranks_dev,
+                                        self._sizes_dev, self._stacked_data)
         with warnings.catch_warnings():
             # donation is a no-op off TPU/GPU; silence only this dispatch
             warnings.filterwarnings(
                 "ignore", message="Some donated buffers were not usable")
             out = self._dispatch(
                 "round_step", self._get_round_step(),
-                self.base_params, self.stacked_lora, self.server.global_lora,
-                self.server.prev_global, self._ranks_dev, self._sizes_dev,
-                self._stacked_data, jnp.asarray(sampled, jnp.int32),
+                self.base_params, lora, self.server.global_lora,
+                self.server.prev_global, ranks, sizes, data, idx, cids,
                 jnp.asarray(batch_idx, jnp.int32),
                 jnp.asarray(self.server.round, jnp.int32))
-        self.stacked_lora = out["stacked_lora"]
+        if paged:
+            # adopt the in-flight output banks (donation consumed the old
+            # refs), mark the cohort rows dirty for eviction write-back,
+            # and unpin — the NEXT round's page-in scatters enqueue behind
+            # this round in the device stream, so no host sync is needed
+            self.store.adopt(out["stacked_lora"], out["ranks"])
+            self.store.mark_trained(sampled)
+            self.store.release_cohort(sampled)
+        else:
+            self.stacked_lora = out["stacked_lora"]
+            self._ranks_dev = out["ranks"]
         self.server.prev_global = out["prev_global"]
         self.server.global_lora = out["global_lora"]
-        self._ranks_dev = out["ranks"]
         if "base_params" in out:           # flora folded deltas into base
             self.base_params = out["base_params"]
         self.server.round += 1
+        self._last_slots = slots
         return out
 
     def _fetch_round_record(self, round_no: int, sampled: list[int],
-                            out: dict) -> dict:
-        """The one blocking host sync per round: metrics + post-prune ranks."""
+                            out: dict, slots=None) -> dict:
+        """The one blocking host sync per round: metrics + post-prune ranks.
+        ``slots`` (paged mode) maps the fetched bank-shaped ``ranks[S]``
+        back onto the sampled clients' entries of the host mirror."""
         fetched = jax.device_get({"metrics": out["metrics"],
                                   "ranks": out["ranks"]})
-        self.client_ranks = np.asarray(fetched["ranks"])
+        if slots is None:
+            self.client_ranks = np.asarray(fetched["ranks"])
+        else:
+            # in-place: the store shares this array as its rank tier
+            self.client_ranks[np.asarray(sampled, np.int64)] = \
+                np.asarray(fetched["ranks"])[np.asarray(slots, np.int64)]
         edited = fetched["metrics"].get("edited")
         rec = {"round": round_no, "sampled": list(map(int, sampled)),
                "train_loss": float(np.mean(fetched["metrics"]["last_loss"])),
@@ -558,7 +681,8 @@ class FederatedTrainer:
         self.flush_rounds()                # drain any pipelined round first
         sampled, batch_idx = self._build_round_inputs()
         out = self._enqueue_round(sampled, batch_idx)
-        return self._fetch_round_record(self.server.round, sampled, out)
+        return self._fetch_round_record(self.server.round, sampled, out,
+                                        self._last_slots)
 
     def run_round_pipelined(self) -> dict | None:
         """Pipelined round: build round t's host inputs (sampling + batch
@@ -572,7 +696,7 @@ class FederatedTrainer:
         sampled, batch_idx = self._build_round_inputs()
         rec = self.flush_rounds()
         out = self._enqueue_round(sampled, batch_idx)
-        self._pending = (self.server.round, sampled, out)
+        self._pending = (self.server.round, sampled, out, self._last_slots)
         return rec
 
     def flush_rounds(self) -> dict | None:
@@ -590,8 +714,15 @@ class FederatedTrainer:
         One device fetch for the whole stacked state; the zero-rank-padding
         invariant makes the padded trees directly servable (see
         ``repro.serving.AdapterStore``).  Drains a pending pipelined round
-        first so the exported adapters are the latest ones."""
+        first so the exported adapters are the latest ones.  Paged mode
+        streams per-client from the host tier (one bank flush, then zero
+        device traffic — never materialises a ``[K, ...]`` stack)."""
         self.flush_rounds()
+        if self.fcfg.paged:
+            self.store.flush()
+            return {f"client{k}": (self.store.host_adapter(k),
+                                   int(self.client_ranks[k]))
+                    for k in range(self.fcfg.num_clients)}
         host = jax.device_get(self.stacked_lora)
         return {
             f"client{k}": (jax.tree_util.tree_map(lambda x, k=k: x[k], host),
@@ -665,18 +796,30 @@ class FederatedTrainer:
         busy = {e["client"] for e in self._inflight}
         avail = [k for k in range(fc.num_clients) if k not in busy]
         if len(avail) >= n_s:
-            sampled = sorted(self.rng.choice(np.asarray(avail), n_s,
-                                             replace=False))
+            sampled = self._sample_clients(pool=avail)
             batch_idx = np.stack([self._batch_indices(self.clients[k])
                                   for k in sampled])
             measure = fc.measure_delays and \
                 not self._ema_seen[list(map(int, sampled))].all()
+            if fc.paged:
+                # the cohort stays PINNED until it retires — its bank rows
+                # hold the post-update adapters the eviction write-back
+                # would otherwise have to capture mid-flight
+                slots = self.store.acquire_cohort(sampled)
+                idx = jnp.asarray(slots, jnp.int32)
+                lora_in, ranks_in, sizes_in, data_in = (
+                    self.store.lora_bank, self.store.ranks_bank,
+                    self.store.sizes_bank, self.store.data_bank)
+            else:
+                idx = jnp.asarray(sampled, jnp.int32)
+                lora_in, ranks_in, sizes_in, data_in = (
+                    self.stacked_lora, self._ranks_dev, self._sizes_dev,
+                    self._stacked_data)
             t0 = time.perf_counter()
             out = self._dispatch(
                 "client_update", self._get_client_update_step(),
-                self.base_params, self.stacked_lora, self.server.global_lora,
-                self.server.prev_global, self._ranks_dev, self._sizes_dev,
-                self._stacked_data, jnp.asarray(sampled, jnp.int32),
+                self.base_params, lora_in, self.server.global_lora,
+                self.server.prev_global, ranks_in, sizes_in, data_in, idx,
                 jnp.asarray(batch_idx, jnp.int32))
             if measure:
                 # the wall clock needs the cohort finished: one sync per
@@ -687,8 +830,12 @@ class FederatedTrainer:
                 self._record_step_time(sampled, time.perf_counter() - t0,
                                        path="client_update",
                                        only_unseen=True)
-            self.stacked_lora = out["stacked_lora"]
-            self._ranks_dev = out["ranks"]
+            if fc.paged:
+                self.store.adopt(out["stacked_lora"], out["ranks"])
+                self.store.mark_trained(sampled)
+            else:
+                self.stacked_lora = out["stacked_lora"]
+                self._ranks_dev = out["ranks"]
             # the buffer holds (cohort, row) references — hold only the
             # update halves so superseded stacked_lora buffers can free
             cohort = {"update": out["update"], "ranks": out["update_ranks"],
@@ -705,6 +852,10 @@ class FederatedTrainer:
         done = [e for e in self._inflight if e["finish"] <= tick]
         self._inflight = [e for e in self._inflight if e["finish"] > tick]
         self._buffer.extend(done)
+        if fc.paged and done:
+            # retirement = write-back point: unpin so the rows become
+            # evictable (the dirty flag makes eviction capture them)
+            self.store.release_cohort([e["client"] for e in done])
 
         # ---- 3. merge M-delta batches through the fedbuff registry -------
         M = fc.buffer_size or n_s
@@ -743,9 +894,15 @@ class FederatedTrainer:
             merged_losses.extend(b["cohort"]["loss"][b["row"]]
                                  for b in batch)
         if merged_losses:
-            fetched = jax.device_get({"losses": merged_losses,
-                                      "ranks": self._ranks_dev})
-            self.client_ranks = np.asarray(fetched["ranks"])
+            if fc.paged:
+                # ranks cannot change under fedbuff (no self-pruning) and
+                # the bank-shaped [S] ranks are not the [K] host mirror —
+                # fetch only the losses
+                fetched = jax.device_get({"losses": merged_losses})
+            else:
+                fetched = jax.device_get({"losses": merged_losses,
+                                          "ranks": self._ranks_dev})
+                self.client_ranks = np.asarray(fetched["ranks"])
             rec["train_loss"] = float(np.mean(fetched["losses"]))
         rec["buffer_fill"] = len(self._buffer)
         self._async_tick += 1
@@ -806,10 +963,15 @@ class FederatedTrainer:
         # ---- stack once: aggregation input + one batched scatter ---------
         stacked = jax.tree_util.tree_map(
             lambda *xs: jnp.stack(xs), *[client_lora[k] for k in sampled])
-        ks = np.asarray(sampled)
-        self.stacked_lora = jax.tree_util.tree_map(
-            lambda s, u: s.at[ks].set(u), self.stacked_lora, stacked)
-        self._ranks_dev = jnp.asarray(self.client_ranks)
+        if fc.paged:
+            for k in sampled:
+                self.store.write_client(k, client_lora[k],
+                                        rank=int(self.client_ranks[k]))
+        else:
+            ks = np.asarray(sampled)
+            self.stacked_lora = jax.tree_util.tree_map(
+                lambda s, u: s.at[ks].set(u), self.stacked_lora, stacked)
+            self._ranks_dev = jnp.asarray(self.client_ranks)
 
         # ---- aggregate (through the shared registry) ---------------------
         ranks = jnp.asarray([int(self.client_ranks[k]) for k in sampled])
@@ -920,8 +1082,6 @@ class FederatedTrainer:
                            + [(0, 0)] * (x.ndim - 1))
             return x
 
-        batch = {k: jnp.stack([jnp.asarray(_pad(c.eval_data[k]))
-                               for c in self.clients]) for k in keys}
         gen_rows = [min(n, r) for r in shard_rows]
         cap_start = gen_len = None
         if generate:
@@ -930,6 +1090,63 @@ class FederatedTrainer:
                  for k, c in enumerate(self.clients)])
             # uniformity across ALL clients' real rows: one static window
             cap_start, gen_len = _mask_decode_bounds(lm)
+
+        if self.fcfg.paged:
+            # ---- tiled paged sweep: the device never sees more than one
+            # bank-sized [T, ...] adapter stack + eval batch at a time (T =
+            # store slots) — one population_eval dispatch per tile, padded
+            # tiles repeat client 0 and their rows are discarded
+            K = len(self.clients)
+            T = min(K, self.store.slots)
+            self.store.flush()           # host tier now holds every row
+            ck = ("paged", T, rows, loss_n, n, cap_start, gen_len,
+                  "image" in keys)
+            fn = self._pop_eval_cache.get(ck)
+            if fn is None:
+                fn = jax.jit(make_population_eval(
+                    self.mcfg, lora_scale=self.lora_scale,
+                    cap_start=cap_start, gen_len=gen_len,
+                    loss_rows=min(loss_n, rows), gen_rows=min(n, rows),
+                    generate=generate, mesh=None))
+                self._pop_eval_cache[ck] = fn
+            loss_v = np.zeros(K)
+            acc_v = np.zeros(K)
+            gens: list = [None] * K
+            for t0 in range(0, K, T):
+                ids = list(range(t0, min(t0 + T, K)))
+                pad_ids = ids + [ids[0]] * (T - len(ids))
+                lora_t = jax.tree_util.tree_map(
+                    lambda *xs: jnp.stack(xs),
+                    *[self.store.host_adapter(k) for k in pad_ids])
+                batch_t = {kk: jnp.asarray(np.stack(
+                    [_pad(self.clients[k].eval_data[kk]) for k in pad_ids]))
+                    for kk in keys}
+                fetched = jax.device_get(self._dispatch(
+                    "population_eval", fn, self.base_params, lora_t,
+                    batch_t))
+                for i, k in enumerate(ids):
+                    loss_v[k] = fetched["loss"][i]
+                    acc_v[k] = fetched["acc"][i]
+                    if generate:
+                        gens[k] = fetched["gen"][i]
+            out = {"loss": float(np.dot(w, loss_v)),
+                   "acc": float(np.dot(w, acc_v))}
+            if generate:
+                bleus, rsums = [], []
+                for k, c in enumerate(self.clients):
+                    nk = gen_rows[k]       # drop padded generation rows
+                    sc = _score_generated(
+                        gens[k][:nk],
+                        np.asarray(c.eval_data["labels"][:nk]),
+                        np.asarray(c.eval_data["loss_mask"][:nk]))
+                    bleus.append(sc["bleu"])
+                    rsums.append(sc["rsum"])
+                out["bleu"] = float(np.dot(w, bleus))
+                out["rsum"] = float(np.dot(w, rsums))
+            return out
+
+        batch = {k: jnp.stack([jnp.asarray(_pad(c.eval_data[k]))
+                               for c in self.clients]) for k in keys}
         # shard the client axis over the configured mesh — the K
         # personalized evals then run device-parallel inside the single
         # dispatch (the per-client loop has no analogue of this).  On a 2-D

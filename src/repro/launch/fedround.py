@@ -314,8 +314,16 @@ def make_round_engine(cfg: ModelConfig, opt_cfg: OptimizerConfig, *,
 
         round_step(base_params, stacked_lora[K,...], global_lora,
                    prev_global, ranks[K] i32, sizes[K] f32,
-                   data {key: [K, N, ...]}, idx[n_s] i32,
+                   data {key: [K, N, ...]}, idx[n_s] i32, cids[n_s] i32,
                    batch_idx[n_s, steps, B] i32, round_idx i32) -> dict
+
+    ``idx`` indexes rows of the stacked state — GLOBAL client ids for the
+    resident ``[K, ...]`` trainer, bank SLOTS for the paged
+    ``ClientStateStore`` trainer (the math is row-local either way, so the
+    two are bit-identical).  ``cids`` always carries the global client ids
+    of the cohort: FLoRA's fresh per-(round, client) re-init folds the
+    client IDENTITY into its PRNG, which must not change when rows move
+    between bank slots (resident callers pass ``cids == idx``).
 
     ``data`` is the device-resident training corpus stacked over ALL
     clients (shards zero-padded to the longest); the round's minibatches
@@ -349,10 +357,14 @@ def make_round_engine(cfg: ModelConfig, opt_cfg: OptimizerConfig, *,
         n_sample=n_pad)
 
     def round_step(base_params, stacked_lora, global_lora, prev_global,
-                   ranks, sizes, data, idx, batch_idx, round_idx):
+                   ranks, sizes, data, idx, cids, batch_idx, round_idx):
         n_s = idx.shape[0]
         idx, gidx, batch_idx, valid = _pad_cohort(
             idx, batch_idx, n_pad or n_s, ranks.shape[0])
+        if cids.shape[0] < idx.shape[0]:   # dummy ids match the dummy idx
+            cids = jnp.concatenate(
+                [cids, jnp.full((idx.shape[0] - cids.shape[0],),
+                                ranks.shape[0], cids.dtype)])
         ranks_s = ranks[gidx]
         # dummy rows carry zero weight: every registry strategy multiplies
         # by p, so padded clients cannot perturb the aggregate
@@ -372,7 +384,7 @@ def make_round_engine(cfg: ModelConfig, opt_cfg: OptimizerConfig, *,
                     jax.random.PRNGKey(1000 * round_idx + k), specs, lcfg)
 
             lora0 = jax.vmap(lambda k, r: mask_lora_params(_init(k), r, r_g))(
-                idx, ranks_s)
+                cids, ranks_s)
         else:
             lora0 = jax.vmap(
                 lambda r: truncate_redistribute(global_lora, r, r_g))(ranks_s)

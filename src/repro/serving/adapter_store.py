@@ -23,6 +23,11 @@ The stack plus per-row slot indices feed
 The serving hot path consumes :attr:`scan_stack`, a cached scan-major
 ``[L, slots, ...]`` copy refreshed only on page-in, so no per-token
 dispatch ever transposes the bank.
+
+Slot residency (LRU + pinning) is delegated to the shared
+``repro.core.paging.LRUPager`` — the same protocol backs the federated
+trainer's host-backed ``ClientStateStore``; this store stays the read-only
+specialisation (eviction never copies out).
 """
 
 from __future__ import annotations
@@ -34,6 +39,8 @@ from typing import Any, Hashable
 import jax
 import jax.numpy as jnp
 import numpy as np
+
+from repro.core.paging import LRUPager
 
 Pytree = Any
 
@@ -62,8 +69,6 @@ class AdapterStore:
     def __init__(self, *, slots: int, rank: int,
                  dispatch_count: collections.Counter | None = None,
                  mesh=None):
-        if slots < 1:
-            raise ValueError(f"need at least one slot, got {slots}")
         self.slots = slots
         self.rank = rank
         # optional serving mesh: the bank's slot axis shards over "data"
@@ -71,17 +76,25 @@ class AdapterStore:
         self.mesh = mesh
         self._host: dict[Hashable, Pytree] = {}    # id -> padded np tree
         self.ranks: dict[Hashable, int] = {}       # id -> true (unpadded) rank
-        self._slot_of: dict[Hashable, int] = {}    # resident id -> slot
-        self._id_at: list[Hashable | None] = [None] * slots
-        self._pins: collections.Counter = collections.Counter()
-        self._lru: dict[Hashable, int] = {}        # resident id -> last-use tick
-        self._tick = 0
+        self._pager = LRUPager(slots, kind="adapter")  # raises on slots < 1
         self._stack: Pytree | None = None          # device [S, ...] bank
         self._scan_stack: Pytree | None = None     # cached [L, S, ...] view
         self.loads = 0
-        self.evictions = 0
         self.dispatch_count = (collections.Counter()
                                if dispatch_count is None else dispatch_count)
+
+    # legacy aliases (tests and older callers poke these directly)
+    @property
+    def _pins(self) -> collections.Counter:
+        return self._pager.pins
+
+    @property
+    def _slot_of(self) -> dict:
+        return self._pager.slot_of
+
+    @property
+    def evictions(self) -> int:
+        return self._pager.evictions
 
     # ------------------------------------------------------------- registry
     def register(self, adapter_id: Hashable, lora: Pytree, rank: int) -> None:
@@ -93,13 +106,13 @@ class AdapterStore:
                   for name, entry in lora.items()}
         if self._host and set(padded) != set(next(iter(self._host.values()))):
             raise ValueError("adapter spec names differ from registered ones")
-        if self._pins.get(adapter_id, 0) > 0:
+        if self._pager.pinned(adapter_id):
             raise RuntimeError(
                 f"adapter {adapter_id!r} is pinned by in-flight requests; "
                 "overwriting it would silently swap weights under them — "
                 "drain those requests first")
-        if adapter_id in self._slot_of:          # overwrite of a hot adapter
-            self._drop(adapter_id)
+        if self._pager.lookup(adapter_id) is not None:  # overwrite hot copy
+            self._pager.drop(adapter_id)
         self._host[adapter_id] = padded
         self.ranks[adapter_id] = int(rank)
 
@@ -111,7 +124,7 @@ class AdapterStore:
 
     @property
     def resident_ids(self) -> list[Hashable]:
-        return [i for i in self._id_at if i is not None]
+        return self._pager.resident_ids
 
     def _bank_sharding(self, slot_dim: int):
         """NamedSharding for a bank leaf whose slot axis sits at
@@ -175,55 +188,29 @@ class AdapterStore:
         return self._scan_stack
 
     # ------------------------------------------------------------ residency
-    def _drop(self, adapter_id: Hashable) -> None:
-        slot = self._slot_of.pop(adapter_id)
-        self._id_at[slot] = None
-        self._lru.pop(adapter_id, None)
-        self._pins.pop(adapter_id, None)
-
-    def _find_slot(self) -> int:
-        for s, occupant in enumerate(self._id_at):
-            if occupant is None:
-                return s
-        # evict the least-recently-used unpinned resident
-        victims = [i for i in self._slot_of if self._pins[i] == 0]
-        if not victims:
-            raise RuntimeError(
-                f"all {self.slots} adapter slots are pinned by in-flight "
-                "requests; release one or grow the store")
-        victim = min(victims, key=lambda i: self._lru[i])
-        slot = self._slot_of[victim]
-        self._drop(victim)
-        self.evictions += 1
-        return slot
-
     def acquire(self, adapter_id: Hashable) -> int:
         """Pin ``adapter_id`` into the device bank; returns its slot index.
-        Pages the adapter in (one scatter dispatch) when cold."""
+        Pages the adapter in (one scatter dispatch) when cold.  Eviction of
+        the LRU unpinned resident never copies out — serving is read-only,
+        the host always holds the master."""
         if adapter_id not in self._host:
             raise KeyError(f"unknown adapter {adapter_id!r}")
-        self._tick += 1
-        if adapter_id in self._slot_of:
-            slot = self._slot_of[adapter_id]
-        else:
-            slot = self._find_slot()
+        slot = self._pager.lookup(adapter_id)
+        if slot is None:
+            slot, _ = self._pager.assign(adapter_id)
             self.dispatch_count["adapter_load"] += 1
             self._stack = jax.tree_util.tree_map(
                 lambda s, h: s.at[slot].set(jnp.asarray(h)),
                 self.stack, self._host[adapter_id])
             self._scan_stack = None        # derived copy is now stale
-            self._slot_of[adapter_id] = slot
-            self._id_at[slot] = adapter_id
             self.loads += 1
-        self._lru[adapter_id] = self._tick
-        self._pins[adapter_id] += 1
+        self._pager.touch(adapter_id)
+        self._pager.pin(adapter_id)
         return slot
 
     def release(self, adapter_id: Hashable) -> None:
         """Unpin (the adapter stays hot until LRU-evicted)."""
-        if self._pins.get(adapter_id, 0) <= 0:
-            raise RuntimeError(f"adapter {adapter_id!r} is not pinned")
-        self._pins[adapter_id] -= 1
+        self._pager.unpin(adapter_id)
 
     # ---------------------------------------------------------- constructors
     @classmethod
@@ -242,7 +229,10 @@ class AdapterStore:
     def from_checkpoint(cls, dirpath: str, *, slots: int | None = None,
                         dispatch_count=None, mesh=None) -> "AdapterStore":
         """Register the per-client adapters of a ``save_federated``
-        checkpoint directory."""
+        checkpoint directory.  A PAGED checkpoint carries only the
+        materialised clients (meta ``materialized``) — the rest never
+        trained, so there is nothing personalized to serve; only the
+        materialised ones are registered."""
         import json
 
         from repro.checkpoint import load_pytree
@@ -250,14 +240,19 @@ class AdapterStore:
         with open(os.path.join(dirpath, "meta.json")) as f:
             meta = json.load(f)
         ranks = meta["ranks"]
-        loras = [load_pytree(os.path.join(dirpath, f"client_{k}.npz"))
-                 for k in range(len(ranks))]
+        ids = [int(k) for k in meta.get("materialized", range(len(ranks)))]
+        if not ids:
+            raise ValueError(
+                f"checkpoint {dirpath} has no materialised client adapters "
+                "(paged trainer saved before any round ran)")
+        loras = {k: load_pytree(os.path.join(dirpath, f"client_{k}.npz"))
+                 for k in ids}
         # bank rank = the checkpointed arrays' materialised padding (r_g),
         # NOT max(meta ranks): hetlora self-pruning can shrink every true
         # rank below the padding the arrays are stored at
-        r_pad = int(next(iter(loras[0].values()))["A"].shape[1])
-        store = cls(slots=slots or len(ranks), rank=r_pad,
+        r_pad = int(next(iter(loras[ids[0]].values()))["A"].shape[1])
+        store = cls(slots=slots or len(ids), rank=r_pad,
                     dispatch_count=dispatch_count, mesh=mesh)
-        for k, rank in enumerate(ranks):
-            store.register(f"client{k}", loras[k], rank)
+        for k in ids:
+            store.register(f"client{k}", loras[k], ranks[k])
         return store

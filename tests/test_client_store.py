@@ -1,0 +1,320 @@
+"""Host-backed client-state store (paged cohorts): LRUPager semantics,
+paged-vs-resident bit-identity across aggregators and round drivers,
+bounded device residency, lazy materialisation, the disk cold tier,
+availability-aware sampling, and serving export parity."""
+
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.core.editing import EditConfig
+from repro.core.paging import LRUPager
+from repro.data.synthetic import SyntheticTaskConfig, make_federated_datasets
+from repro.federated import FederatedConfig, FederatedTrainer
+from repro.optim import OptimizerConfig
+
+
+def _mk(aggregator="fedilora", edit=True, n_clients=3, sizes=(24, 24, 24),
+        sample_rate=0.67, ranks=(4, 8, 16), seed=0, **fed_kw):
+    tcfg = SyntheticTaskConfig(caption_len=8)
+    clients, gtest = make_federated_datasets(tcfg, n_clients,
+                                             np.asarray(sizes))
+    fcfg = FederatedConfig(num_clients=n_clients, sample_rate=sample_rate,
+                           ranks=ranks, local_steps=1, batch_size=4,
+                           aggregator=aggregator,
+                           edit=EditConfig(enabled=edit), **fed_kw)
+    return FederatedTrainer(get_config("fedbench-tiny"), fcfg,
+                            OptimizerConfig(peak_lr=3e-3, total_steps=30),
+                            clients, clients, gtest, seed=seed)
+
+
+def _assert_tree_equal(a, b, tag=""):
+    a, b = jax.device_get(a), jax.device_get(b)
+    la = jax.tree_util.tree_leaves_with_path(a)
+    lb = jax.tree_util.tree_leaves_with_path(b)
+    assert len(la) == len(lb)
+    for (pa, xa), (_, xb) in zip(la, lb):
+        np.testing.assert_array_equal(np.asarray(xa), np.asarray(xb),
+                                      err_msg=f"{tag}{pa}")
+
+
+def _assert_same_state(tr, tp, tag=""):
+    assert list(tr.client_ranks) == list(tp.client_ranks), tag
+    _assert_tree_equal(tr.server.global_lora, tp.server.global_lora,
+                       f"{tag}/global")
+    _assert_tree_equal(tr.server.prev_global, tp.server.prev_global,
+                       f"{tag}/prev")
+    ra, rb = tr.export_adapters(), tp.export_adapters()
+    assert ra.keys() == rb.keys()
+    for cid in ra:
+        assert ra[cid][1] == rb[cid][1], (tag, cid)
+        _assert_tree_equal(ra[cid][0], rb[cid][0], f"{tag}/{cid}")
+
+
+# ---------------------------------------------------------------------------
+# LRUPager (shared residency protocol)
+# ---------------------------------------------------------------------------
+
+def test_lru_pager_assign_evict_order():
+    p = LRUPager(2, kind="client")
+    s0, ev = p.assign("a")
+    assert ev is None and p.lookup("a") == s0
+    s1, ev = p.assign("b")
+    assert ev is None and s1 != s0
+    p.touch("a")                        # b is now LRU
+    s2, ev = p.assign("c")
+    assert ev == "b" and s2 == s1
+    assert p.evictions == 1
+    assert p.lookup("b") is None
+    assert sorted(p.resident_ids) == ["a", "c"]
+
+
+def test_lru_pager_pins_block_eviction():
+    p = LRUPager(2, kind="client")
+    p.assign("a")
+    p.assign("b")
+    p.pin("a")
+    p.pin("b")
+    with pytest.raises(RuntimeError, match="pinned by in-flight"):
+        p.assign("c")
+    p.unpin("b")
+    _, ev = p.assign("c")               # b was evictable again
+    assert ev == "b"
+    with pytest.raises(RuntimeError, match="not pinned"):
+        p.unpin("b")
+    with pytest.raises(KeyError):
+        p.pin("zzz")                    # not resident
+
+
+def test_lru_pager_rejects_zero_slots():
+    with pytest.raises(ValueError):
+        LRUPager(0)
+
+
+# ---------------------------------------------------------------------------
+# paged == resident, bit for bit (tentpole)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("aggregator,kw", [
+    ("fedavg", {}),
+    ("hetlora", dict(hetlora_prune_gamma=0.9)),
+    ("fedilora", {}),
+    ("fedilora_kernel", {}),
+    ("flora", dict(edit=False)),
+])
+def test_paged_rounds_bit_identical_sync(aggregator, kw):
+    """Paged cohorts through the SAME fused engine must reproduce the
+    resident [K, ...] path exactly — records, ranks, global adapter and
+    every exported client adapter, across rounds with real eviction churn
+    (slots == cohort < K)."""
+    tr = _mk(aggregator, **kw)
+    tp = _mk(aggregator, paged=True, **kw)
+    for _ in range(3):
+        a, b = tr.run_round(), tp.run_round()
+        assert a == b
+    _assert_same_state(tr, tp, aggregator)
+    # still ONE fused dispatch per round; paging rides its own counter
+    assert tp.dispatch_count["round_step"] == 3
+    assert 0 < tp.dispatch_count["page_in"] <= 3
+
+
+def test_paged_rounds_bit_identical_pipelined():
+    tr, tp = _mk(), _mk(paged=True, store_slots=3)
+    ra = [tr.run_round_pipelined() for _ in range(4)] + [tr.flush_rounds()]
+    rb = [tp.run_round_pipelined() for _ in range(4)] + [tp.flush_rounds()]
+    assert ra == rb
+    _assert_same_state(tr, tp, "pipelined")
+    assert tp.dispatch_count["round_step"] == 4
+
+
+def test_paged_rounds_bit_identical_async_with_delays():
+    """FedBuff ticks with a straggler: the paged driver pins each in-flight
+    cohort until retirement and must reproduce the resident timeline
+    tick-for-tick (records, merges, staleness, final state)."""
+    kw = dict(aggregator="fedbuff", async_delays=(0, 1, 0), buffer_size=2,
+              edit=False)
+    tr = _mk(**kw)
+    tp = _mk(paged=True, store_slots=3, **kw)
+    for _ in range(6):
+        a, b = tr.run_round_async(), tp.run_round_async()
+        assert a == b
+    _assert_same_state(tr, tp, "async")
+
+
+def test_paged_reference_loop_matches_fused():
+    """run_round_reference on a paged trainer (write_client path) tracks the
+    paged fused engine within the usual tolerance."""
+    tf = _mk("fedilora", paged=True)
+    tr = _mk("fedilora", paged=True)
+    for _ in range(2):
+        rec_f = tf.run_round()
+        rec_r = tr.run_round_reference()
+        assert rec_f["sampled"] == rec_r["sampled"]
+        assert abs(rec_f["train_loss"] - rec_r["train_loss"]) < 1e-4
+    assert list(tf.client_ranks) == list(tr.client_ranks)
+
+
+def test_paged_eval_matches_resident():
+    tr, tp = _mk(), _mk(paged=True)
+    tr.run_round()
+    tp.run_round()
+    ea = tr.evaluate_personalized(n=4, loss_n=8)
+    eb = tp.evaluate_personalized(n=4, loss_n=8)
+    assert ea.keys() == eb.keys()
+    for k in ea:
+        assert abs(ea[k] - eb[k]) < 1e-5, (k, ea, eb)
+    # paged tiling: ceil(K / slots) population_eval dispatches
+    assert tp.dispatch_count["population_eval"] == 2
+
+
+# ---------------------------------------------------------------------------
+# residency bounds, lazy init, config validation
+# ---------------------------------------------------------------------------
+
+def test_paged_device_residency_bounded_by_cohort():
+    tp = _mk(paged=True)                # store_slots=0 -> cohort size (2)
+    for _ in range(4):
+        tp.run_round()
+    S = tp.store.slots
+    assert S == tp._n_sample == 2
+    assert tp.store.peak_resident <= S
+    for leaf in jax.tree_util.tree_leaves(
+            (tp.store.lora_bank, tp.store.ranks_bank,
+             tp.store.sizes_bank, tp.store.data_bank)):
+        assert leaf.shape[0] == S
+
+
+def test_paged_lazy_init_materialises_only_sampled():
+    tp = _mk(paged=True, n_clients=6, sizes=(24,) * 6,
+             ranks=(4, 8, 8, 16, 16, 8), sample_rate=1 / 3)
+    tp.run_round()
+    mat = tp.store.materialized_ids
+    assert mat == tp.history[-1]["sampled"]
+    assert len(mat) == 2 < 6
+
+
+def test_paged_config_validation():
+    with pytest.raises(ValueError, match="store_slots"):
+        _mk(paged=True, store_slots=1)  # cohort is 2
+    with pytest.raises(ValueError, match="spill_dir"):
+        _mk(paged=True, store_host_slots=1)
+
+
+def test_paged_rejects_mesh():
+    from jax.sharding import Mesh
+    mesh = Mesh(np.array(jax.devices()[:1]).reshape(1, 1),
+                ("client", "model"))
+    tcfg = SyntheticTaskConfig(caption_len=8)
+    clients, gtest = make_federated_datasets(tcfg, 3, np.array([24] * 3))
+    fcfg = FederatedConfig(num_clients=3, sample_rate=0.67, ranks=(4, 8, 16),
+                           local_steps=1, batch_size=4, paged=True)
+    with pytest.raises(NotImplementedError, match="mesh"):
+        FederatedTrainer(get_config("fedbench-tiny"), fcfg,
+                         OptimizerConfig(peak_lr=3e-3, total_steps=10),
+                         clients, clients, gtest, seed=0, mesh=mesh)
+    tp = _mk(paged=True)
+    with pytest.raises(NotImplementedError, match="mesh"):
+        tp.mesh = mesh
+
+
+def test_paged_cohort_larger_than_bank_raises():
+    tp = _mk(paged=True, store_slots=2)
+    with pytest.raises(ValueError, match="store_slots"):
+        tp.store.acquire_cohort([0, 1, 2])
+
+
+def test_client_state_lora_view_and_rank_subspace():
+    tp = _mk(paged=True)
+    tp.run_round()
+    for c in tp.clients:
+        for entry in c.lora.values():
+            tail = float(jnp.abs(entry["A"][:, c.rank:, :]).sum())
+            tail += float(jnp.abs(entry["B"][..., c.rank:]).sum())
+            assert tail == 0.0
+
+
+# ---------------------------------------------------------------------------
+# disk cold tier
+# ---------------------------------------------------------------------------
+
+def test_paged_disk_spill_tier_roundtrips_state(tmp_path):
+    spill = os.path.join(str(tmp_path), "spill")
+    tr = _mk()
+    tp = _mk(paged=True, store_host_slots=1, store_spill_dir=spill)
+    for _ in range(3):
+        a, b = tr.run_round(), tp.run_round()
+        assert a == b
+    assert tp.store.spills > 0          # the cold tier actually engaged
+    assert os.listdir(spill)
+    _assert_same_state(tr, tp, "spill")  # export pulls spilled shards back
+    assert tp.store.spill_loads > 0
+
+
+# ---------------------------------------------------------------------------
+# availability-aware sampling (satellite)
+# ---------------------------------------------------------------------------
+
+def test_uniform_sampling_stream_unchanged_by_flag():
+    """sampling="availability" with NO measured EMAs must fall back to the
+    exact uniform draw (same RNG stream), so enabling the flag is a no-op
+    until measurements land."""
+    a = _mk()
+    b = _mk(sampling="availability")
+    for _ in range(3):
+        assert a._sample_clients() == b._sample_clients()
+
+
+def test_availability_sampling_downweights_slow_clients():
+    tp = _mk(sampling="availability", availability_alpha=3.0,
+             n_clients=4, sizes=(24,) * 4, ranks=(4, 8, 8, 16),
+             sample_rate=0.25)
+    # client 3 measured 100x slower than the rest
+    tp.client_step_ema[:] = [0.01, 0.01, 0.01, 1.0]
+    tp._ema_seen[:] = True
+    draws = [tp._sample_clients()[0] for _ in range(60)]
+    counts = np.bincount(draws, minlength=4)
+    assert counts[3] <= 3               # ~1e-6 weight vs 1.0 each
+    assert counts[:3].min() > 0
+
+
+def test_availability_sampling_drives_async_pool():
+    """run_round_async samples through _sample_clients(pool=idle): with
+    availability weighting and a slow measured client, that client is
+    dispatched less often across ticks."""
+    kw = dict(aggregator="fedbuff", edit=False, n_clients=4,
+              sizes=(24,) * 4, ranks=(4, 8, 8, 16), sample_rate=0.5,
+              sampling="availability", availability_alpha=4.0)
+    tp = _mk(paged=True, store_slots=4, **kw)
+    tp.client_step_ema[:] = [0.01, 0.01, 0.01, 2.0]
+    tp._ema_seen[:] = True
+    picked = []
+    for _ in range(8):
+        picked += tp.run_round_async()["sampled"]
+    assert picked.count(3) < 4          # far below the uniform ~8/2
+
+
+def test_unknown_sampling_raises():
+    tp = _mk(sampling="nope")
+    with pytest.raises(ValueError, match="sampling"):
+        tp._sample_clients()
+
+
+# ---------------------------------------------------------------------------
+# serving export (satellite)
+# ---------------------------------------------------------------------------
+
+def test_adapter_store_from_paged_trainer():
+    from repro.serving.adapter_store import AdapterStore
+
+    tp = _mk(paged=True)
+    tp.run_round()
+    store = AdapterStore.from_trainer(tp)
+    assert len(store) == 3
+    for k in range(3):
+        slot = store.acquire(f"client{k}")
+        assert 0 <= slot < store.slots
+        store.release(f"client{k}")

@@ -123,6 +123,7 @@ def test_round_2d_hlo_model_collectives_no_base_gather():
         tr.base_params, tr.stacked_lora, tr.server.global_lora,
         tr.server.prev_global, tr._ranks_dev, tr._sizes_dev,
         tr._stacked_data, jnp.asarray(sampled, jnp.int32),
+        jnp.asarray(sampled, jnp.int32),
         jnp.asarray(batch_idx, jnp.int32),
         jnp.asarray(tr.server.round, jnp.int32))
     txt = lowered.compile().as_text()

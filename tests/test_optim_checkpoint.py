@@ -126,6 +126,115 @@ def test_save_federated_rejects_unmerged_async_state(tmp_path):
         save_federated(os.path.join(tmp_path, "fed"), tr)
 
 
+def _mk_paged_kwargs(tmp_path=None, **kw):
+    kw.setdefault("paged", True)
+    if tmp_path is not None:
+        kw.setdefault("store_host_slots", 2)
+        kw.setdefault("store_spill_dir", os.path.join(str(tmp_path), "spill"))
+    return kw
+
+
+def test_paged_checkpoint_roundtrip_host_and_disk(tmp_path):
+    """A paged trainer (host tier + disk-spill cold tier) must checkpoint
+    through save_federated with a pending pipelined round in flight —
+    flushed first — and restore BIT-identical state into (a) a fresh paged
+    trainer and (b) a fresh resident trainer.  The meta records the paged
+    layout: materialised clients only, plus the LRU-ordered resident set."""
+    import json
+
+    from repro.checkpoint import load_federated, save_federated
+    from repro.configs import get_config
+    from repro.data.synthetic import SyntheticTaskConfig, make_federated_datasets
+    from repro.federated import FederatedConfig, FederatedTrainer
+
+    tcfg = SyntheticTaskConfig(caption_len=8)
+    clients, gtest = make_federated_datasets(tcfg, 4, np.array([24] * 4))
+
+    def mk(**kw):
+        fcfg = FederatedConfig(num_clients=4, sample_rate=0.5,
+                               ranks=(4, 8, 8, 16), local_steps=1,
+                               batch_size=4, aggregator="fedilora", **kw)
+        return FederatedTrainer(get_config("fedbench-tiny"), fcfg,
+                                OptimizerConfig(peak_lr=3e-3, total_steps=20),
+                                clients, clients, gtest, seed=0)
+
+    tr = mk(**_mk_paged_kwargs(tmp_path, store_slots=3))
+    tr.run_round()
+    tr.run_round_pipelined()            # pending fetch + prefetched cohort
+    d = os.path.join(tmp_path, "fed")
+    save_federated(d, tr)               # must flush the in-flight round
+    assert tr._pending is None
+    with open(os.path.join(d, "meta.json")) as f:
+        meta = json.load(f)
+    assert meta["paged"] is True
+    assert meta["materialized"] == tr.store.materialized_ids
+    assert sorted(meta["resident"]) == sorted(tr.store.resident_ids)
+    # only materialised clients have shards on disk
+    for k in range(4):
+        on_disk = os.path.exists(os.path.join(d, f"client_{k}.npz"))
+        assert on_disk == (k in set(meta["materialized"]))
+    ev = tr.evaluate_personalized(generate=False)
+
+    tp = mk(**_mk_paged_kwargs(tmp_path=None, store_slots=3))
+    tp.run_round()                      # diverge, then restore over it
+    load_federated(d, tp)
+    assert tp.server.round == tr.server.round
+    assert list(tp.client_ranks) == list(tr.client_ranks)
+    assert tp.store.materialized_ids == tr.store.materialized_ids
+    assert tp.evaluate_personalized(generate=False) == ev
+    # restored residency replays the saved LRU order (coldest first)
+    assert sorted(tp.store.resident_ids) == sorted(tr.store.resident_ids)
+    assert sorted(tp.store.pager.lru, key=tp.store.pager.lru.get) \
+        == meta["resident"]
+
+    trr = mk()                          # resident trainer, paged checkpoint
+    load_federated(d, trr)
+    assert list(trr.client_ranks) == list(tr.client_ranks)
+    assert trr.evaluate_personalized(generate=False) == ev
+
+    # resident checkpoint into a paged trainer (reverse direction)
+    d2 = os.path.join(tmp_path, "fed2")
+    save_federated(d2, trr)
+    tq = mk(**_mk_paged_kwargs(tmp_path=None))
+    load_federated(d2, tq)
+    assert tq.evaluate_personalized(generate=False) == ev
+
+
+def test_paged_checkpoint_preserves_spilled_state(tmp_path):
+    """Clients spilled to the disk cold tier (host_slots=1) round-trip: the
+    snapshot pulls them back through the spill loader, and a fresh paged
+    trainer restores bit-identically."""
+    from repro.checkpoint import load_federated, save_federated
+    from repro.configs import get_config
+    from repro.data.synthetic import SyntheticTaskConfig, make_federated_datasets
+    from repro.federated import FederatedConfig, FederatedTrainer
+
+    tcfg = SyntheticTaskConfig(caption_len=8)
+    clients, gtest = make_federated_datasets(tcfg, 3, np.array([24] * 3))
+
+    def mk(spill):
+        fcfg = FederatedConfig(num_clients=3, sample_rate=0.67,
+                               ranks=(4, 8, 16), local_steps=1, batch_size=4,
+                               aggregator="fedilora", paged=True,
+                               store_host_slots=1, store_spill_dir=spill)
+        return FederatedTrainer(get_config("fedbench-tiny"), fcfg,
+                                OptimizerConfig(peak_lr=3e-3, total_steps=20),
+                                clients, clients, gtest, seed=0)
+
+    tr = mk(os.path.join(tmp_path, "s1"))
+    for _ in range(3):
+        tr.run_round()
+    assert tr.store.spills > 0          # the cold tier actually engaged
+    d = os.path.join(tmp_path, "fed")
+    save_federated(d, tr)
+    ev = tr.evaluate_personalized(generate=False)
+    tp = mk(os.path.join(tmp_path, "s2"))
+    load_federated(d, tp)
+    assert tp.evaluate_personalized(generate=False) == ev
+    # training continues from the restored state without error
+    tp.run_round()
+
+
 def test_federated_checkpoint_roundtrip(tmp_path):
     from repro.checkpoint import load_federated, save_federated
     from repro.configs import get_config

@@ -1,0 +1,144 @@
+"""Property sweep: the host-backed client-state store under random paging
+churn.  Between rounds (and async ticks) hypothesis injects arbitrary
+``prefetch`` interleavings — page-ins that LRU-evict whatever was resident —
+and the paged trainer must still reproduce the fully resident reference
+timeline BIT FOR BIT: every round record, every async retirement tick, the
+final per-client ranks and every exported client adapter.
+
+The reference timelines are computed ONCE (module fixtures); each example
+replays them on a fresh paged trainer whose device bank is smaller than the
+population, so the injected churn really does evict live rows.  In the
+pipelined variant the pending round is drained before churn — prefetch
+donates the device banks, the same reason checkpoint save flushes first.
+
+Conftest-gated like the other hypothesis property tests."""
+
+import hypothesis.strategies as st
+import jax
+import numpy as np
+import pytest
+from hypothesis import HealthCheck, given, settings
+
+from repro.configs import get_config
+from repro.core.editing import EditConfig
+from repro.data.synthetic import SyntheticTaskConfig, make_federated_datasets
+from repro.federated import FederatedConfig, FederatedTrainer
+from repro.optim import OptimizerConfig
+
+N_CLIENTS = 5
+RANKS = (4, 8, 8, 16, 8)
+ASYNC_DELAYS = (0, 1, 0, 2, 0)
+SYNC_ROUNDS = 3
+ASYNC_TICKS = 5
+
+
+def _mk(paged, *, store_slots=0, aggregator="fedilora", **fed_kw):
+    tcfg = SyntheticTaskConfig(caption_len=8)
+    clients, gtest = make_federated_datasets(tcfg, N_CLIENTS,
+                                             np.array([24] * N_CLIENTS))
+    fcfg = FederatedConfig(num_clients=N_CLIENTS, sample_rate=0.4,
+                           ranks=RANKS, local_steps=1, batch_size=4,
+                           aggregator=aggregator,
+                           edit=EditConfig(enabled=False),
+                           paged=paged, store_slots=store_slots, **fed_kw)
+    return FederatedTrainer(get_config("fedbench-tiny"), fcfg,
+                            OptimizerConfig(peak_lr=3e-3, total_steps=30),
+                            clients, clients, gtest, seed=0)
+
+
+def _snapshot(tr):
+    out = {}
+    for cid, (lora, rank) in tr.export_adapters().items():
+        out[cid] = (rank, [np.asarray(x)
+                           for x in jax.tree_util.tree_leaves(lora)])
+    return out
+
+
+def _assert_snapshot_equal(a, b):
+    assert a.keys() == b.keys()
+    for cid in a:
+        assert a[cid][0] == b[cid][0], cid
+        for xa, xb in zip(a[cid][1], b[cid][1]):
+            np.testing.assert_array_equal(xa, xb, err_msg=cid)
+
+
+@pytest.fixture(scope="module")
+def sync_reference():
+    tr = _mk(False)
+    recs = [tr.run_round() for _ in range(SYNC_ROUNDS)]
+    return recs, _snapshot(tr), list(tr.client_ranks)
+
+
+@pytest.fixture(scope="module")
+def async_reference():
+    tr = _mk(False, aggregator="fedbuff", async_delays=ASYNC_DELAYS,
+             buffer_size=2)
+    recs = [tr.run_round_async() for _ in range(ASYNC_TICKS)]
+    return recs, _snapshot(tr), list(tr.client_ranks)
+
+
+# one churn step = a set of client ids to prefetch (page in, LRU-evicting
+# unpinned residents); a per-boundary list of such steps, one boundary
+# before every round/tick
+_churn_steps = st.lists(
+    st.lists(st.integers(0, N_CLIENTS - 1), min_size=1, max_size=2,
+             unique=True),
+    min_size=0, max_size=3)
+
+
+@settings(max_examples=5, deadline=None,
+          suppress_health_check=[HealthCheck.too_slow])
+@given(churns=st.lists(_churn_steps, min_size=SYNC_ROUNDS,
+                       max_size=SYNC_ROUNDS),
+       pipelined=st.booleans())
+def test_random_paging_churn_preserves_sync_timeline(sync_reference, churns,
+                                                     pipelined):
+    """Sync/pipelined rounds with a 2-slot bank over 5 clients: arbitrary
+    page-in/page-out churn between rounds never changes what the rounds
+    compute."""
+    ref_recs, ref_snap, ref_ranks = sync_reference
+    tp = _mk(True, store_slots=2)
+    got = []
+    for round_churn in churns:
+        if pipelined and round_churn:
+            rec = tp.flush_rounds()     # prefetch donates the banks the
+            if rec is not None:         # pending fetch still references
+                got.append(rec)
+        for ids in round_churn:
+            tp.store.prefetch(ids)
+        if pipelined:
+            rec = tp.run_round_pipelined()
+        else:
+            rec = tp.run_round()
+        if rec is not None:
+            got.append(rec)
+    if pipelined:
+        tail = tp.flush_rounds()
+        if tail is not None:
+            got.append(tail)
+    assert got == ref_recs
+    assert list(tp.client_ranks) == ref_ranks
+    _assert_snapshot_equal(_snapshot(tp), ref_snap)
+    assert tp.store.peak_resident <= tp.store.slots == 2
+
+
+@settings(max_examples=5, deadline=None,
+          suppress_health_check=[HealthCheck.too_slow])
+@given(churns=st.lists(_churn_steps, min_size=ASYNC_TICKS,
+                       max_size=ASYNC_TICKS))
+def test_random_paging_churn_preserves_async_retirement(async_reference,
+                                                        churns):
+    """FedBuff ticks with stragglers (delays 0/1/0/2/0) pin each in-flight
+    cohort until retirement; churn between ticks only ever evicts unpinned
+    rows (at most two stragglers are pinned between ticks, the bank has
+    four slots), and the retirement timeline stays bit-identical."""
+    ref_recs, ref_snap, ref_ranks = async_reference
+    tp = _mk(True, store_slots=4, aggregator="fedbuff",
+             async_delays=ASYNC_DELAYS, buffer_size=2)
+    for tick, tick_churn in enumerate(churns):
+        for ids in tick_churn:
+            tp.store.prefetch(ids)
+        assert tp.run_round_async() == ref_recs[tick]
+    assert list(tp.client_ranks) == ref_ranks
+    _assert_snapshot_equal(_snapshot(tp), ref_snap)
+    assert tp.store.peak_resident <= tp.store.slots
