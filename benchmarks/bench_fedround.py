@@ -42,6 +42,18 @@ of timing: the bank never holds more client rows than its cohort-sized
 slot count, prefetch/write-back add ZERO ``round_step`` dispatches, and a
 hosted K=10^5 population completes rounds in the container.
 
+A ``robustness`` section fault-injects the federation: global-eval loss vs
+the fraction of persistently sign-flipping (Byzantine) clients for the plain
+``fedilora`` aggregation and its robust variants (``fedilora_clip``,
+``fedilora_trimmed``), recording whether the dimension-wise trimmed mean
+beats plain aggregation at >= 20% flipped clients, plus the rounds/sec
+overhead of running the fused round with live fault operands (dropout +
+straggler forfeits + wire corruption) versus the clean program.
+``--quick-robust`` asserts the fault-mode invariants instead of timing: a
+hostile round is still exactly ONE ``round_step`` dispatch for the plain
+and robust aggregators (sync and pipelined), one ``client_update`` per
+async tick, and every global that leaves a faulted round stays finite.
+
 Scale: fedbench-tiny, K=10 clients, sampling rate 0.4 (the paper protocol),
 swept over local_steps; decode at gen_len 17 (≥16).
 """
@@ -56,6 +68,14 @@ import time
 _JSON_TAG = "BENCH_FEDROUND_JSON:"
 _MESH_JSON_TAG = "BENCH_FEDROUND_MESH_JSON:"
 _POP_JSON_TAG = "BENCH_FEDROUND_POP_JSON:"
+_ROBUST_JSON_TAG = "BENCH_FEDROUND_ROBUST_JSON:"
+ROBUST_BYZ_FRACS = (0.0, 0.2, 0.4)      # sign-flipping fraction of clients
+ROBUST_AGGS = ("fedilora", "fedilora_clip", "fedilora_trimmed")
+ROBUST_ROUNDS = 14                      # past the prefix-collapse regime
+ROBUST_SAMPLE_RATE = 0.8                # cohort 8: the trimmed mean needs
+                                        # survivors on both sides of the trim
+ROBUST_CLIP = 1.0                       # update-norm ceiling (clip variant)
+ROBUST_TRIM = 0.3                       # trim fraction (trimmed variant)
 POP_SIZES = (1_000, 10_000, 100_000)    # hosted clients (paged store)
 POP_COHORT = 8                          # sampled clients per round
 POP_TIMED_ROUNDS = 3
@@ -385,6 +405,144 @@ def quick_population_check() -> dict:
     return out
 
 
+def _robustness_measure() -> dict:
+    """Global-eval loss vs the sign-flipped (Byzantine) client fraction for
+    the plain and robust aggregators, plus the fused round's fault-injection
+    overhead (live fault operands vs the clean program)."""
+    from benchmarks.common import NUM_CLIENTS, build_trainer
+    from repro.federated import FaultConfig
+
+    out: dict = {"rounds": ROBUST_ROUNDS, "cohort_rate": ROBUST_SAMPLE_RATE,
+                 "clip_norm": ROBUST_CLIP, "trim_frac": ROBUST_TRIM,
+                 "byz_fracs": list(ROBUST_BYZ_FRACS), "aggregators": {}}
+    for agg in ROBUST_AGGS:
+        per = {}
+        for frac in ROBUST_BYZ_FRACS:
+            n_byz = int(round(frac * NUM_CLIENTS))
+            tr = build_trainer(
+                "samllava", aggregator=agg, local_steps=8,
+                sample_rate=ROBUST_SAMPLE_RATE,
+                faults=FaultConfig(enabled=True,
+                                   byzantine_clients=tuple(range(n_byz))),
+                clip_norm=ROBUST_CLIP if agg == "fedilora_clip" else 0.0,
+                trim_frac=ROBUST_TRIM if agg == "fedilora_trimmed" else 0.0)
+            for _ in range(ROBUST_ROUNDS):
+                tr.run_round()
+            ev = tr.evaluate_global(generate=False)
+            per[f"{frac:.1f}"] = {"eval_loss": ev["loss"],
+                                  "eval_acc": ev["acc"],
+                                  "n_byzantine": n_byz}
+        out["aggregators"][agg] = per
+    plain = out["aggregators"]["fedilora"]
+    trimmed = out["aggregators"]["fedilora_trimmed"]
+    out["trimmed_beats_plain_at_20pct"] = bool(
+        trimmed["0.2"]["eval_loss"] < plain["0.2"]["eval_loss"])
+
+    # fault-injection overhead: identical protocol, clean program vs live
+    # dropout/straggler/corruption operands (still one dispatch per round)
+    clean = build_trainer("samllava", aggregator="fedilora", local_steps=8)
+    clean.run_round()
+    tc = _min_time(clean.run_round, TIMED_ROUNDS)
+    hostile = build_trainer(
+        "samllava", aggregator="fedilora", local_steps=8,
+        faults=FaultConfig(enabled=True, dropout_rate=0.25,
+                           straggler_rate=0.25, corrupt_rate=0.3))
+    hostile.run_round()
+    tf = _min_time(hostile.run_round, TIMED_ROUNDS)
+    out["overhead"] = {"clean_s": tc, "faulted_s": tf,
+                       "overhead_pct": (tf / tc - 1.0) * 100.0,
+                       "faulted_rounds_per_sec": 1.0 / tf,
+                       "health": {k: float(v)
+                                  for k, v in hostile.health.items()}}
+    out["caveat"] = (
+        "clip targets scaled-outlier corruption (a sign-flip keeps its "
+        "norm), so fedilora_clip is expected to track plain fedilora on "
+        "this sweep; the trimmed mean is the sign-flip defence")
+    return out
+
+
+def quick_robust_check() -> dict:
+    """Fault-mode dispatch asserts (CI, in-process, no timing): a hostile
+    round — mid-round dropout + straggler forfeits + NaN wire corruption +
+    a persistent Byzantine client — is still exactly ONE ``round_step``
+    dispatch per round for the plain AND robust aggregators (sync and
+    pipelined), the async driver keeps one ``client_update`` per tick, and
+    every global that leaves a faulted round is finite.  Raises on any
+    violation."""
+    import jax
+    import numpy as np
+
+    from repro.configs import get_config
+    from repro.core.editing import EditConfig
+    from repro.data.synthetic import (SyntheticTaskConfig,
+                                      make_federated_datasets)
+    from repro.federated import (FaultConfig, FederatedConfig,
+                                 FederatedTrainer)
+    from repro.optim import OptimizerConfig
+
+    faults = FaultConfig(enabled=True, dropout_rate=0.3, straggler_rate=0.2,
+                         corrupt_rate=0.3, corrupt_mode="nan",
+                         byzantine_clients=(1,), seed=3)
+    tcfg = SyntheticTaskConfig(caption_len=8)
+    clients, gtest = make_federated_datasets(tcfg, 4, np.array([24] * 4))
+
+    def mk(aggregator, **kw):
+        fcfg = FederatedConfig(num_clients=4, sample_rate=1.0,
+                               ranks=(4, 8, 8, 16), local_steps=1,
+                               batch_size=4, aggregator=aggregator,
+                               edit=EditConfig(enabled=True), faults=faults,
+                               **kw)
+        return FederatedTrainer(get_config("fedbench-tiny"), fcfg,
+                                OptimizerConfig(peak_lr=3e-3, total_steps=20),
+                                clients, clients, gtest, seed=0)
+
+    def check_finite(tr, tag):
+        for leaf in jax.tree_util.tree_leaves(
+                jax.device_get(tr.server.global_lora)):
+            if not np.isfinite(np.asarray(leaf)).all():
+                raise RuntimeError(
+                    f"{tag}: non-finite global left a faulted round")
+
+    out = {}
+    for agg, kw in (("fedilora", {}),
+                    ("fedilora_clip", {"clip_norm": 0.5}),
+                    ("fedilora_trimmed", {"trim_frac": 0.3})):
+        tr = mk(agg, **kw)
+        for _ in range(3):
+            tr.run_round()
+        check_finite(tr, agg)
+        out[agg] = dict(tr.dispatch_count)
+        if tr.dispatch_count["round_step"] != 3:
+            raise RuntimeError(
+                f"faulted {agg} round not fused: {tr.dispatch_count}")
+        if tr.health.get("fault_rounds", 0) != 3:
+            raise RuntimeError(
+                f"{agg} fault health not tracked: {dict(tr.health)}")
+
+    tp = mk("fedilora")
+    for _ in range(3):
+        tp.run_round_pipelined()
+    tp.flush_rounds()
+    check_finite(tp, "pipelined")
+    out["pipelined"] = dict(tp.dispatch_count)
+    if tp.dispatch_count["round_step"] != 3:
+        raise RuntimeError(
+            f"faulted pipelined round not fused: {tp.dispatch_count}")
+
+    ta = mk("fedbuff", async_delays=(0, 1, 0, 2), buffer_size=2)
+    recs = [ta.run_round_async() for _ in range(4)]
+    check_finite(ta, "async")
+    out["async"] = dict(ta.dispatch_count)
+    # a tick dispatches one client_update IFF it found an idle cohort;
+    # faults must not add dispatches beyond that
+    expected = sum(1 for r in recs if r["sampled"])
+    if expected < 1 or ta.dispatch_count["client_update"] != expected:
+        raise RuntimeError(
+            f"faulted async tick dispatch regressed: {ta.dispatch_count} "
+            f"(expected {expected} cohort dispatches)")
+    return out
+
+
 def _mesh_measure() -> dict:
     """Rounds/sec + compiled-HLO collective counts per mesh shape (1×1,
     N×1, 1×N, 2×2) — runs in a subprocess with 4 forced host devices."""
@@ -512,11 +670,17 @@ def main(argv: list[str] | None = None) -> list[str]:
                     help="paged-store invariant asserts only (bank bounded "
                          "by the cohort, no extra round dispatches, 100k "
                          "hosted clients; no timing, no JSON)")
+    ap.add_argument("--quick-robust", action="store_true",
+                    help="fault-mode dispatch asserts only (faulted rounds "
+                         "stay one dispatch, globals stay finite; no "
+                         "timing, no JSON)")
     args = ap.parse_args([] if argv is None else argv)
 
-    if args.quick or args.quick_mesh or args.quick_population:
+    if args.quick or args.quick_mesh or args.quick_population \
+            or args.quick_robust:
         counts = (quick_mesh_check() if args.quick_mesh
                   else quick_population_check() if args.quick_population
+                  else quick_robust_check() if args.quick_robust
                   else quick_check())
         return [f"fedround/dispatch/{mode}/{name},0.0,{cnt}"
                 for mode, cc in sorted(counts.items())
@@ -546,6 +710,13 @@ def main(argv: list[str] | None = None) -> list[str]:
               "print(_POP_JSON_TAG + json.dumps(_population_measure()))")
     res["population"] = run_measurement_subprocess(code_p, _POP_JSON_TAG,
                                                    env=dict(os.environ))
+    # robustness section: its own subprocess — single device, fault sweep
+    code_r = ("import json; from benchmarks.bench_fedround import "
+              "_robustness_measure, _ROBUST_JSON_TAG; "
+              "print(_ROBUST_JSON_TAG + json.dumps(_robustness_measure()))")
+    res["robustness"] = run_measurement_subprocess(code_r, _ROBUST_JSON_TAG,
+                                                   env=dict(os.environ),
+                                                   timeout=3600)
     _append_history(res)
 
     lines = []
@@ -589,6 +760,16 @@ def main(argv: list[str] | None = None) -> list[str]:
             f"{r['rounds_per_sec']:.2f} rounds/s "
             f"dev={r['device_bank_bytes']}B host={r['host_tier_bytes']}B "
             f"resident<={r['peak_resident_rows']}")
+    rb = res["robustness"]
+    for agg, per in sorted(rb["aggregators"].items()):
+        for frac, v in sorted(per.items()):
+            lines.append(f"fedround/robust/{agg}/byz{frac},0.0,"
+                         f"loss={v['eval_loss']:.4f}")
+    lines.append("fedround/robust/trimmed_beats_plain_at_20pct,0.0,"
+                 f"{rb['trimmed_beats_plain_at_20pct']}")
+    o = rb["overhead"]
+    lines.append(f"fedround/robust/overhead,{o['faulted_s'] * 1e6:.1f},"
+                 f"+{o['overhead_pct']:.1f}% vs clean")
     lines.append(f"fedround/devices,0.0,{res['config']['devices']}")
     return lines
 

@@ -25,7 +25,7 @@ from repro.core.editing import EditConfig
 from repro.data.missing import apply_missing_modality
 from repro.data.partition import heterogeneous_sizes
 from repro.data.synthetic import SyntheticTaskConfig, make_federated_datasets
-from repro.federated import FederatedConfig, FederatedTrainer
+from repro.federated import FaultConfig, FederatedConfig, FederatedTrainer
 from repro.optim import OptimizerConfig
 
 # synthetic stand-ins for the paper's three datasets
@@ -45,7 +45,10 @@ def build_trainer(dataset: str = "samllava", *, aggregator: str = "fedilora",
                   ranks: tuple = RANKS, local_steps: int = 8,
                   sample_rate: float = 0.4, seed: int = 0,
                   examples: int = 700,
-                  tcfg: SyntheticTaskConfig | None = None) -> FederatedTrainer:
+                  tcfg: SyntheticTaskConfig | None = None,
+                  faults: FaultConfig | None = None,
+                  clip_norm: float = 0.0,
+                  trim_frac: float = 0.0) -> FederatedTrainer:
     tseed = DATASETS[dataset]
     tcfg = tcfg or SyntheticTaskConfig(seed=tseed)
     sizes = heterogeneous_sizes(NUM_CLIENTS, examples, seed=tseed)
@@ -64,7 +67,9 @@ def build_trainer(dataset: str = "samllava", *, aggregator: str = "fedilora",
     fcfg = FederatedConfig(
         num_clients=NUM_CLIENTS, sample_rate=sample_rate, ranks=ranks,
         local_steps=local_steps, batch_size=8, aggregator=aggregator,
-        missing_ratio=missing, edit=edit or EditConfig(), seed=seed)
+        missing_ratio=missing, edit=edit or EditConfig(), seed=seed,
+        faults=faults or FaultConfig(), clip_norm=clip_norm,
+        trim_frac=trim_frac)
     ocfg = OptimizerConfig(peak_lr=3e-3, total_steps=600)
     return FederatedTrainer(get_config("fedbench-tiny"), fcfg, ocfg,
                             ctrain, ceval, gtest, seed=seed)

@@ -5,6 +5,7 @@ bit-equality)."""
 
 from __future__ import annotations
 
+import collections
 import json
 import os
 from typing import Any
@@ -56,19 +57,20 @@ def save_federated(dirpath: str, trainer) -> None:
 
     Works across all round drivers: a pending pipelined round is drained
     first (its metrics fetch must land before the snapshot describes a
-    consistent timeline) and un-merged buffered-async state (in-flight
-    cohorts / buffered deltas) is rejected — those deltas exist only as
-    rows of live device buffers and would be silently lost.  FLoRA folds
-    dense deltas into the BASE weights, so for that aggregator the base
-    parameters are part of the checkpoint too.
+    consistent timeline), and un-merged buffered-async state (in-flight
+    cohorts / buffered deltas) is PERSISTED — each shared cohort dict is
+    deduplicated by identity and saved once as ``async_cohort_<i>.npz``,
+    with the entry lists (client/row/cohort-index/version/finish) in the
+    meta, so a mid-fault-sequence resume replays the exact timeline.
+    Cumulative health counters ride the meta too.  The one remaining
+    rejection is a PAGED trainer with pinned bank rows (an un-retired
+    in-flight cohort): its post-update adapters live only in pinned device
+    bank rows that the flush cannot capture.  FLoRA folds dense deltas
+    into the BASE weights, so for that aggregator the base parameters are
+    part of the checkpoint too.
     """
     if getattr(trainer, "_pending", None) is not None:
         trainer.flush_rounds()
-    if getattr(trainer, "_inflight", None) or getattr(trainer, "_buffer", None):
-        raise ValueError(
-            "trainer has un-merged buffered-async state (in-flight cohorts "
-            "or buffered deltas); run run_round_async until the buffer "
-            "drains before checkpointing")
     os.makedirs(dirpath, exist_ok=True)
     save_pytree(os.path.join(dirpath, "global_lora.npz"), trainer.server.global_lora)
     save_pytree(os.path.join(dirpath, "prev_global.npz"), trainer.server.prev_global)
@@ -101,6 +103,42 @@ def save_federated(dirpath: str, trainer) -> None:
     else:
         for i, c in enumerate(trainer.clients):
             save_pytree(os.path.join(dirpath, f"client_{i}.npz"), c.lora)
+    # ---- buffered-async robustness state: in-flight + buffered deltas ----
+    # entries are (client, row) references into SHARED per-cohort stacked
+    # update dicts — save each cohort once, entries point at its index
+    entries = (list(getattr(trainer, "_inflight", []) or [])
+               + list(getattr(trainer, "_buffer", []) or []))
+    if entries:
+        cohorts: list = []
+        cix: dict[int, int] = {}
+        for e in entries:
+            if id(e["cohort"]) not in cix:
+                cix[id(e["cohort"])] = len(cohorts)
+                cohorts.append(e["cohort"])
+        for i, c in enumerate(cohorts):
+            save_pytree(os.path.join(dirpath, f"async_cohort_{i}.npz"), c)
+
+        def _ent(e):
+            return {"client": int(e["client"]), "row": int(e["row"]),
+                    "cohort": cix[id(e["cohort"])],
+                    "version": int(e["version"]), "finish": int(e["finish"])}
+
+        meta["async_cohorts"] = len(cohorts)
+        meta["async_inflight"] = [_ent(e) for e in trainer._inflight]
+        meta["async_buffer"] = [_ent(e) for e in trainer._buffer]
+    # cumulative health counters (fault-injected trainers; {} otherwise) —
+    # the fault schedule itself is stateless per-(seed, round, client), so
+    # its "RNG position" is the round/tick counters saved above
+    health = getattr(trainer, "health", None)
+    if health:
+        meta["health"] = {k: float(v) for k, v in health.items()}
+    # host RNG streams (cohort sampler + per-client batch shufflers):
+    # restoring them makes the resumed timeline BIT-identical to the
+    # uninterrupted one — together with the stateless per-(seed, round,
+    # client) fault schedule this is the whole robustness RNG position
+    meta["rng_state"] = trainer.rng.bit_generator.state
+    meta["client_rng_state"] = [c.rng.bit_generator.state
+                                for c in trainer.clients]
     if trainer.fcfg.aggregator == "flora":
         save_pytree(os.path.join(dirpath, "base_params.npz"),
                     trainer.base_params)
@@ -156,7 +194,25 @@ def load_federated(dirpath: str, trainer) -> None:
     trainer._global_version = meta.get("global_version", 0)
     trainer._async_tick = meta.get("async_tick", 0)
     # stale in-flight state from the receiving trainer would corrupt the
-    # restored timeline — the checkpoint is by construction fully merged
+    # restored timeline — replace it with the snapshot's (empty for fully
+    # merged checkpoints; mid-fault-sequence saves carry cohort files)
     trainer._pending = None
-    trainer._inflight = []
-    trainer._buffer = []
+    cohorts = [load_pytree(os.path.join(dirpath, f"async_cohort_{i}.npz"))
+               for i in range(int(meta.get("async_cohorts", 0)))]
+
+    def _entry(e):
+        return {"client": int(e["client"]), "row": int(e["row"]),
+                "cohort": cohorts[int(e["cohort"])],
+                "version": int(e["version"]), "finish": int(e["finish"])}
+
+    trainer._inflight = [_entry(e) for e in meta.get("async_inflight", [])]
+    trainer._buffer = [_entry(e) for e in meta.get("async_buffer", [])]
+    # cumulative health counters (absent on pre-robustness checkpoints)
+    if hasattr(trainer, "health"):
+        trainer.health = collections.Counter(meta.get("health", {}))
+    # host RNG streams (absent on old checkpoints: streams stay wherever
+    # the receiving trainer left them — state restore is still exact)
+    if "rng_state" in meta:
+        trainer.rng.bit_generator.state = meta["rng_state"]
+    for c, st in zip(trainer.clients, meta.get("client_rng_state", [])):
+        c.rng.bit_generator.state = st

@@ -27,6 +27,30 @@ Implemented:
                    mass lost to the discount stays on the *current* global
                    (the anchor), so the merge is a convex per-dimension blend.
                    At staleness 0 it is exactly ``fedilora``.
+
+Byzantine-robust variants (Koo et al. 2410.22815; see ``federated/faults.py``
+for the fault model they defend against):
+
+* ``fedilora_clip``    — per-client update-norm clipping: a client whose
+                   Frobenius norm exceeds ``clip`` is scaled down to it, the
+                   forfeited per-dimension mass anchored on the current
+                   global (same residual algebra as ``fedbuff``; in the
+                   kernel path the clip factor rides the existing per-client
+                   ``scale`` operand of ``dim_agg``).  Defends scaled
+                   outliers; a sign flip preserves the norm and sails
+                   through — that is ``fedilora_trimmed``'s job.
+* ``fedilora_trimmed`` — dimension-wise trimmed mean: per scalar element the
+                   ``t_d`` largest and smallest covering-client
+                   contributions are discarded before the weighted mean
+                   (``t_d = min(⌊trim·m_d⌋, ⌊(m_d-1)/2⌋)`` over the ``m_d``
+                   clients covering rank dimension d).  Defends sign flips
+                   and arbitrary Byzantine values up to the trim budget.
+
+Both are *statically* gated: ``clip`` off / ``trim == 0`` takes the literal
+``fedilora`` code path, so degradation is bitwise (tested).  Every
+adapter-space strategy accepts ``fallback`` (the previous global): when the
+whole cohort's weight is zero — every client dropped or non-finite — the
+previous global is returned unchanged instead of an all-zero adapter.
 """
 
 from __future__ import annotations
@@ -58,22 +82,57 @@ def dimension_wise_weights(ranks: jax.Array, p: jax.Array, r_g: int) -> jax.Arra
     return num / jnp.maximum(den, _EPS)
 
 
+def client_update_norms(stacked: Pytree) -> jax.Array:
+    """Per-client Frobenius norm of the stacked update across all modules
+    (``||A_k||² + ||B_k||²`` summed over leaves, f32) → [K].  Shared by the
+    HetLoRA sparsity weighting and ``fedilora_clip``."""
+    leaves = jax.tree_util.tree_leaves(stacked)
+    sq = sum(jnp.sum(jnp.square(x.astype(jnp.float32)),
+                     axis=tuple(range(1, x.ndim)))
+             for x in leaves)  # [K]
+    return jnp.sqrt(sq)
+
+
+def _apply_fallback(out: Pytree, p: jax.Array, fallback: Pytree | None) -> Pytree:
+    """Zero-survivor guard: if the cohort's total weight is zero (every
+    client dropped / forfeited / non-finite) return ``fallback`` — the
+    previous global — instead of the all-zero adapter the weighted sums
+    produce.  When any weight survives this is a bitwise no-op."""
+    if fallback is None:
+        return out
+    alive = jnp.sum(p) > 0
+    return jax.tree_util.tree_map(
+        lambda o, f: jnp.where(alive, o, f.astype(o.dtype)), out, fallback)
+
+
+def _clip_active(clip) -> bool:
+    """Static gate: clipping participates in the program only for a finite
+    positive threshold — ``None``/``0``/``inf`` take the exact unclipped
+    code path (bitwise degradation)."""
+    return clip is not None and 0 < float(clip) < float("inf")
+
+
+def _trim_active(trim) -> bool:
+    return trim is not None and float(trim) > 0
+
+
 # ---------------------------------------------------------------------------
 # FedAvg (homogeneous baseline)
 # ---------------------------------------------------------------------------
 
-def fedavg(stacked: Pytree, ranks: jax.Array, p: jax.Array) -> Pytree:
+def fedavg(stacked: Pytree, ranks: jax.Array, p: jax.Array,
+           fallback: Pytree | None = None) -> Pytree:
     """Plain data-size-weighted mean over the client axis (paper Eq. 1).
 
     With heterogeneous ranks this is exactly HetLoRA-style zero-pad averaging
     with uniform-in-k weights: padded rows dilute by sum over *all* K clients.
     """
-    p = p / jnp.maximum(jnp.sum(p), _EPS)
+    pn = p / jnp.maximum(jnp.sum(p), _EPS)
 
     def _agg(leaf):
-        return jnp.einsum("k,k...->...", p.astype(leaf.dtype), leaf)
+        return jnp.einsum("k,k...->...", pn.astype(leaf.dtype), leaf)
 
-    return jax.tree_util.tree_map(_agg, stacked)
+    return _apply_fallback(jax.tree_util.tree_map(_agg, stacked), p, fallback)
 
 
 # ---------------------------------------------------------------------------
@@ -85,18 +144,13 @@ def hetlora_sparsity_weights(stacked: Pytree, p: jax.Array, beta: float = 1.0) -
     (||B_k A_k||_F proxied by ||A_k||_F * ||B_k||_F over all modules), so
     'information-rich' clients count more.  Padded rows contribute zero norm.
     """
-    def _per_client_norm(tree):
-        leaves = jax.tree_util.tree_leaves(tree)
-        sq = sum(jnp.sum(jnp.square(x.astype(jnp.float32)), axis=tuple(range(1, x.ndim)))
-                 for x in leaves)  # [K]
-        return jnp.sqrt(sq)
-
-    norms = _per_client_norm(stacked) ** beta
+    norms = client_update_norms(stacked) ** beta
     w = p * norms
     return w / jnp.maximum(jnp.sum(w), _EPS)
 
 
-def hetlora(stacked: Pytree, ranks: jax.Array, p: jax.Array, beta: float = 1.0) -> Pytree:
+def hetlora(stacked: Pytree, ranks: jax.Array, p: jax.Array, beta: float = 1.0,
+            fallback: Pytree | None = None) -> Pytree:
     """Zero-padding aggregation with sparsity weighting.  Crucially the
     denominator is the *total* weight (all K clients), so dimensions only a few
     high-rank clients populate are diluted — the failure mode FediLoRA fixes
@@ -107,7 +161,7 @@ def hetlora(stacked: Pytree, ranks: jax.Array, p: jax.Array, beta: float = 1.0) 
     def _agg(leaf):
         return jnp.einsum("k,k...->...", w.astype(leaf.dtype), leaf)
 
-    return jax.tree_util.tree_map(_agg, stacked)
+    return _apply_fallback(jax.tree_util.tree_map(_agg, stacked), p, fallback)
 
 
 def hetlora_self_prune(entry: Mapping[str, jax.Array], rank: jax.Array, r_g: int,
@@ -149,7 +203,8 @@ def flora_delta(stacked: Pytree, ranks: jax.Array, p: jax.Array, scale: float) -
 # FediLoRA (the paper): dimension-wise reweighted aggregation
 # ---------------------------------------------------------------------------
 
-def fedilora(stacked: Pytree, ranks: jax.Array, p: jax.Array) -> Pytree:
+def fedilora(stacked: Pytree, ranks: jax.Array, p: jax.Array,
+             fallback: Pytree | None = None) -> Pytree:
     """Paper Eqs. 3-5.  Row d of global A aggregates only clients with
     r_k >= d, with weights renormalised within that set; likewise col d of B.
 
@@ -171,7 +226,7 @@ def fedilora(stacked: Pytree, ranks: jax.Array, p: jax.Array) -> Pytree:
             "A": jnp.einsum("kd,kldn->ldn", w, a),   # row-wise over rank dim
             "B": jnp.einsum("kd,klmd->lmd", w, b),   # col-wise over rank dim
         }
-    return out
+    return _apply_fallback(out, p, fallback)
 
 
 # ---------------------------------------------------------------------------
@@ -188,9 +243,40 @@ def staleness_discount(staleness: jax.Array, decay: float) -> jax.Array:
     return (1.0 + staleness) ** (-decay)
 
 
+def _discounted_dimension_merge(stacked: Pytree, ranks: jax.Array,
+                                p: jax.Array, disc: jax.Array,
+                                anchor: Pytree | None = None) -> Pytree:
+    """Shared core of ``fedbuff`` and ``fedilora_clip``: dimension-wise
+    weights (Eq. 4) × a per-client discount ``disc`` [K] (staleness factor
+    or clip factor), with the per-dimension weight mass the discount
+    forfeits retained by ``anchor`` on covered dimensions."""
+    r_g = None
+    for entry in stacked.values():
+        r_g = entry["A"].shape[2]
+        break
+    assert r_g is not None, "empty LoRA tree"
+    pt = dimension_wise_weights(ranks, p, r_g)           # [K, r_g], Eq. 4
+    w = pt * disc[:, None]                               # [K, r_g]
+    covered = (jnp.sum(pt, axis=0) > 0).astype(pt.dtype)  # [r_g]
+    resid = covered * (1.0 - jnp.sum(w, axis=0))          # [r_g]
+
+    out = {}
+    for name, entry in stacked.items():
+        a, b = entry["A"], entry["B"]
+        wk = w.astype(a.dtype)
+        ga = jnp.einsum("kd,kldn->ldn", wk, a)
+        gb = jnp.einsum("kd,klmd->lmd", wk, b)
+        if anchor is not None:
+            r = resid.astype(a.dtype)
+            ga = ga + r[None, :, None] * anchor[name]["A"]
+            gb = gb + r[None, None, :] * anchor[name]["B"]
+        out[name] = {"A": ga, "B": gb}
+    return out
+
+
 def fedbuff(stacked: Pytree, ranks: jax.Array, p: jax.Array,
             staleness: jax.Array | None = None, anchor: Pytree | None = None,
-            decay: float = 0.5) -> Pytree:
+            decay: float = 0.5, fallback: Pytree | None = None) -> Pytree:
     """Buffered-async merge of K stacked client adapters with per-delta
     staleness discounting, composed with the paper's dimension-wise
     reweighting (Eqs. 3-5).
@@ -219,54 +305,163 @@ def fedbuff(stacked: Pytree, ranks: jax.Array, p: jax.Array,
     until a covering delta arrives — if that matters for a deployment,
     size the buffer so merges span the rank distribution.
     """
-    r_g = None
-    for entry in stacked.values():
-        r_g = entry["A"].shape[2]
-        break
-    assert r_g is not None, "empty LoRA tree"
-    pt = dimension_wise_weights(ranks, p, r_g)           # [K, r_g], Eq. 4
     if staleness is None:
-        disc = jnp.ones((pt.shape[0],), pt.dtype)
+        disc = jnp.ones((p.shape[0],), p.dtype)
     else:
-        disc = staleness_discount(staleness.astype(pt.dtype), decay)
-    w = pt * disc[:, None]                               # [K, r_g]
-    covered = (jnp.sum(pt, axis=0) > 0).astype(pt.dtype)  # [r_g]
-    resid = covered * (1.0 - jnp.sum(w, axis=0))          # [r_g]
-
-    out = {}
-    for name, entry in stacked.items():
-        a, b = entry["A"], entry["B"]
-        wk = w.astype(a.dtype)
-        ga = jnp.einsum("kd,kldn->ldn", wk, a)
-        gb = jnp.einsum("kd,klmd->lmd", wk, b)
-        if anchor is not None:
-            r = resid.astype(a.dtype)
-            ga = ga + r[None, :, None] * anchor[name]["A"]
-            gb = gb + r[None, None, :] * anchor[name]["B"]
-        out[name] = {"A": ga, "B": gb}
-    return out
+        disc = staleness_discount(staleness.astype(p.dtype), decay)
+    out = _discounted_dimension_merge(stacked, ranks, p, disc, anchor)
+    return _apply_fallback(out, p, fallback)
 
 
 def fedbuff_kernel(stacked: Pytree, ranks: jax.Array, p: jax.Array,
                    staleness: jax.Array | None = None,
-                   anchor: Pytree | None = None, decay: float = 0.5) -> Pytree:
+                   anchor: Pytree | None = None, decay: float = 0.5,
+                   fallback: Pytree | None = None) -> Pytree:
     """Pallas path of :func:`fedbuff`: the staleness-scaled dimension-wise
     reduction lowers to the ``dim_agg`` kernel (weights × per-client scale
     fused in-kernel).  Numerically identical to :func:`fedbuff` (tested)."""
     from repro.kernels.ops import fedbuff_aggregate_tree
 
-    return fedbuff_aggregate_tree(stacked, ranks, p, staleness, anchor,
-                                  decay=decay)
+    out = fedbuff_aggregate_tree(stacked, ranks, p, staleness, anchor,
+                                 decay=decay)
+    return _apply_fallback(out, p, fallback)
 
 
-def fedilora_kernel(stacked: Pytree, ranks: jax.Array, p: jax.Array) -> Pytree:
+def fedilora_kernel(stacked: Pytree, ranks: jax.Array, p: jax.Array,
+                    fallback: Pytree | None = None) -> Pytree:
     """Pallas dimension-wise aggregation (repro/kernels/dim_agg.py) —
     numerically identical to :func:`fedilora` (tested); on TPU the per-leaf
     reduction lowers to a fused Mosaic kernel, on CPU it runs in interpret
     mode.  Imported lazily to keep core free of a kernels dependency."""
     from repro.kernels.ops import fedilora_aggregate_tree
 
-    return fedilora_aggregate_tree(stacked, ranks, p)
+    return _apply_fallback(fedilora_aggregate_tree(stacked, ranks, p), p,
+                           fallback)
+
+
+# ---------------------------------------------------------------------------
+# Byzantine-robust variants (Koo et al. 2410.22815 × FediLoRA Eqs. 3-5)
+# ---------------------------------------------------------------------------
+
+def fedilora_clip(stacked: Pytree, ranks: jax.Array, p: jax.Array,
+                  clip: float | None = None, anchor: Pytree | None = None,
+                  fallback: Pytree | None = None) -> Pytree:
+    """Dimension-wise aggregation with per-client update-norm clipping.
+
+    Each client's contribution is scaled by ``c_k = min(1, clip/||u_k||_F)``
+    — the same per-client discount channel FedBuff uses for staleness, so
+    the kernel path fuses it into ``dim_agg``'s existing ``scale`` operand
+    with no new HBM materialisation.  The per-dimension mass clipping
+    forfeits is anchored on the current global (``anchor``), keeping the
+    merge a convex blend instead of shrinking the adapter toward zero.
+
+    Statically gated: ``clip`` of ``None``/``0``/``inf`` takes the literal
+    :func:`fedilora` path (bitwise-identical degradation, tested).  Clipping
+    bounds the damage of *scaled* outliers; it is blind to sign flips
+    (norm-preserving) — pair with :func:`fedilora_trimmed` for those.
+    """
+    if not _clip_active(clip):
+        return _apply_fallback(fedilora(stacked, ranks, p), p, fallback)
+    norms = client_update_norms(stacked)
+    disc = jnp.minimum(1.0, clip / jnp.maximum(norms, _EPS)).astype(p.dtype)
+    out = _discounted_dimension_merge(stacked, ranks, p, disc, anchor)
+    return _apply_fallback(out, p, fallback)
+
+
+def fedilora_clip_kernel(stacked: Pytree, ranks: jax.Array, p: jax.Array,
+                         clip: float | None = None,
+                         anchor: Pytree | None = None,
+                         fallback: Pytree | None = None) -> Pytree:
+    """Pallas path of :func:`fedilora_clip`: clip factors ride ``dim_agg``'s
+    per-client ``scale`` operand (numerically identical, tested)."""
+    if not _clip_active(clip):
+        return _apply_fallback(fedilora_kernel(stacked, ranks, p), p, fallback)
+    from repro.kernels.ops import fedilora_clip_tree
+
+    out = fedilora_clip_tree(stacked, ranks, p, clip, anchor)
+    return _apply_fallback(out, p, fallback)
+
+
+def trimmed_dimension_counts(cover: jax.Array, trim: float) -> jax.Array:
+    """Per-rank-dimension trim count ``t_d = min(⌊trim·m_d⌋, ⌊(m_d-1)/2⌋)``
+    (clamped ≥ 0) over the coverage matrix ``cover`` [K, r_g] → f32 [r_g].
+    The second bound guarantees at least one contribution survives whenever
+    any client covers the dimension."""
+    m = jnp.sum(cover, axis=0)                            # [r_g]
+    t = jnp.minimum(jnp.floor(trim * m), jnp.floor((m - 1.0) / 2.0))
+    return jnp.maximum(t, 0.0)
+
+
+def _trimmed_merge(x: jax.Array, p: jax.Array, cover: jax.Array,
+                   t: jax.Array) -> jax.Array:
+    """Elementwise trimmed weighted mean over the client axis of ``x``
+    [K, L, r, n]: per scalar element, the ``t[d]`` smallest and largest
+    covering-client values are discarded (counting rank by value with index
+    tie-break — deterministic under duplicates), then the survivors are
+    combined with renormalised weights ``p``.  Uncovered elements → 0,
+    matching :func:`fedilora`."""
+    K = x.shape[0]
+    xf = x.astype(jnp.float32)
+    xi = xf[:, None]                                      # [K, 1, L, r, n]
+    xj = xf[None, :]                                      # [1, K, L, r, n]
+    ki = jnp.arange(K)[:, None, None, None, None]
+    kj = jnp.arange(K)[None, :, None, None, None]
+    cj = cover.astype(jnp.float32)[None, :, None, :, None]
+    lo = jnp.sum(cj * ((xj < xi) | ((xj == xi) & (kj < ki))), axis=1)
+    hi = jnp.sum(cj * ((xj > xi) | ((xj == xi) & (kj > ki))), axis=1)
+    tb = t.astype(jnp.float32)[None, None, :, None]
+    keep = (cover.astype(jnp.float32)[:, None, :, None]
+            * (lo >= tb) * (hi >= tb))                    # [K, L, r, n]
+    pw = p.astype(jnp.float32)[:, None, None, None]
+    num = jnp.sum(keep * pw * xf, axis=0)
+    den = jnp.sum(keep * pw, axis=0)
+    return (num / jnp.maximum(den, _EPS)).astype(x.dtype)
+
+
+def fedilora_trimmed(stacked: Pytree, ranks: jax.Array, p: jax.Array,
+                     trim: float = 0.0,
+                     fallback: Pytree | None = None) -> Pytree:
+    """Dimension-wise *trimmed* mean: robust to arbitrary Byzantine values
+    (sign flips, huge outliers, even NaN-adjacent garbage the caller zeroed)
+    as long as fewer than ``trim·m_d`` of the ``m_d`` clients covering a
+    dimension are corrupted.  Per scalar element the extreme tails are
+    dropped and the surviving weights renormalised — the trimmed analogue
+    of paper Eq. 4's per-dimension renormalisation.
+
+    Statically gated: ``trim == 0`` takes the literal :func:`fedilora` path
+    (bitwise-identical degradation, tested).
+    """
+    if not _trim_active(trim):
+        return _apply_fallback(fedilora(stacked, ranks, p), p, fallback)
+    r_g = None
+    for entry in stacked.values():
+        r_g = entry["A"].shape[2]
+        break
+    assert r_g is not None, "empty LoRA tree"
+    cover = (_client_masks(ranks, r_g, p.dtype)
+             * (p > 0).astype(p.dtype)[:, None])          # [K, r_g]
+    t = trimmed_dimension_counts(cover, trim)
+    out = {}
+    for name, entry in stacked.items():
+        a = _trimmed_merge(entry["A"], p, cover, t)
+        bt = jnp.swapaxes(entry["B"], -1, -2)             # [K, L, r, m]
+        b = _trimmed_merge(bt, p, cover, t)
+        out[name] = {"A": a, "B": jnp.swapaxes(b, -1, -2)}
+    return _apply_fallback(out, p, fallback)
+
+
+def fedilora_trimmed_kernel(stacked: Pytree, ranks: jax.Array, p: jax.Array,
+                            trim: float = 0.0,
+                            fallback: Pytree | None = None) -> Pytree:
+    """Pallas path of :func:`fedilora_trimmed`: the per-element counting
+    ranks and trimmed reduction run inside ``dim_agg_trimmed_pallas``
+    (numerically identical, tested)."""
+    if not _trim_active(trim):
+        return _apply_fallback(fedilora_kernel(stacked, ranks, p), p, fallback)
+    from repro.kernels.ops import fedilora_trimmed_tree
+
+    out = fedilora_trimmed_tree(stacked, ranks, p, trim)
+    return _apply_fallback(out, p, fallback)
 
 
 # ---------------------------------------------------------------------------
@@ -275,37 +470,56 @@ def fedilora_kernel(stacked: Pytree, ranks: jax.Array, p: jax.Array) -> Pytree:
 #
 # Every entry shares the normalised signature
 #     fn(stacked, ranks, p, *, hetlora_beta, lora_scale, staleness, anchor,
-#        staleness_decay) -> (global_lora, base_delta)
+#        staleness_decay, clip, trim, fallback) -> (global_lora, base_delta)
 # where exactly one of the outputs is non-None: LoRA-space strategies return
 # a new global adapter; FLoRA returns dense weight deltas for the caller to
 # fold into the base parameters (and re-initialise the global adapter).
 # The async keywords (staleness / anchor / staleness_decay) are consumed by
-# the fedbuff entries and ignored by the synchronous strategies.
+# the fedbuff entries, the robustness keywords (clip / anchor, trim) by the
+# fedilora_clip / fedilora_trimmed entries, and fallback — the zero-survivor
+# guard — by every adapter-space strategy; the rest ignore them.
 # Both the host-driven reference loop (repro/federated/runtime.py) and the
 # fused SPMD round + buffer merge (repro/launch/fedround.py) dispatch through
 # here — there is deliberately no other if/elif chain over aggregator names.
 
 AGGREGATORS: dict[str, Callable] = {
-    "fedavg": lambda s, r, p, **kw: (fedavg(s, r, p), None),
-    "hetlora": lambda s, r, p, *, hetlora_beta=1.0, **kw: (
-        hetlora(s, r, p, hetlora_beta), None),
-    "fedilora": lambda s, r, p, **kw: (fedilora(s, r, p), None),
-    "fedilora_kernel": lambda s, r, p, **kw: (fedilora_kernel(s, r, p), None),
+    "fedavg": lambda s, r, p, *, fallback=None, **kw: (
+        fedavg(s, r, p, fallback=fallback), None),
+    "hetlora": lambda s, r, p, *, hetlora_beta=1.0, fallback=None, **kw: (
+        hetlora(s, r, p, hetlora_beta, fallback=fallback), None),
+    "fedilora": lambda s, r, p, *, fallback=None, **kw: (
+        fedilora(s, r, p, fallback=fallback), None),
+    "fedilora_kernel": lambda s, r, p, *, fallback=None, **kw: (
+        fedilora_kernel(s, r, p, fallback=fallback), None),
     "flora": lambda s, r, p, *, lora_scale=1.0, **kw: (
         None, flora_delta(s, r, p, lora_scale)),
     "fedbuff": lambda s, r, p, *, staleness=None, anchor=None,
-    staleness_decay=0.5, **kw: (
-        fedbuff(s, r, p, staleness, anchor, staleness_decay), None),
+    staleness_decay=0.5, fallback=None, **kw: (
+        fedbuff(s, r, p, staleness, anchor, staleness_decay,
+                fallback=fallback), None),
     "fedbuff_kernel": lambda s, r, p, *, staleness=None, anchor=None,
-    staleness_decay=0.5, **kw: (
-        fedbuff_kernel(s, r, p, staleness, anchor, staleness_decay), None),
+    staleness_decay=0.5, fallback=None, **kw: (
+        fedbuff_kernel(s, r, p, staleness, anchor, staleness_decay,
+                       fallback=fallback), None),
+    "fedilora_clip": lambda s, r, p, *, clip=None, anchor=None,
+    fallback=None, **kw: (
+        fedilora_clip(s, r, p, clip, anchor, fallback=fallback), None),
+    "fedilora_clip_kernel": lambda s, r, p, *, clip=None, anchor=None,
+    fallback=None, **kw: (
+        fedilora_clip_kernel(s, r, p, clip, anchor, fallback=fallback), None),
+    "fedilora_trimmed": lambda s, r, p, *, trim=0.0, fallback=None, **kw: (
+        fedilora_trimmed(s, r, p, trim, fallback=fallback), None),
+    "fedilora_trimmed_kernel": lambda s, r, p, *, trim=0.0, fallback=None,
+    **kw: (
+        fedilora_trimmed_kernel(s, r, p, trim, fallback=fallback), None),
 }
 
 
 def aggregate(name: str, stacked: Pytree, ranks: jax.Array, p: jax.Array, *,
               hetlora_beta: float = 1.0, lora_scale: float = 1.0,
               staleness: jax.Array | None = None, anchor: Pytree | None = None,
-              staleness_decay: float = 0.5
+              staleness_decay: float = 0.5, clip: float | None = None,
+              trim: float = 0.0, fallback: Pytree | None = None
               ) -> tuple[Pytree | None, Pytree | None]:
     """Dispatch one server aggregation through :data:`AGGREGATORS`.
 
@@ -320,4 +534,5 @@ def aggregate(name: str, stacked: Pytree, ranks: jax.Array, p: jax.Array, *,
             f"unknown aggregator {name!r}; have {sorted(AGGREGATORS)}") from None
     return fn(stacked, ranks, p, hetlora_beta=hetlora_beta,
               lora_scale=lora_scale, staleness=staleness, anchor=anchor,
-              staleness_decay=staleness_decay)
+              staleness_decay=staleness_decay, clip=clip, trim=trim,
+              fallback=fallback)

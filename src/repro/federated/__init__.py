@@ -1,3 +1,4 @@
 from repro.federated.client_store import ClientStateStore  # noqa: F401
 from repro.federated.config import FederatedConfig  # noqa: F401
+from repro.federated.faults import FaultConfig, FaultSchedule  # noqa: F401
 from repro.federated.runtime import FederatedTrainer, ServerState, ClientState  # noqa: F401

@@ -123,6 +123,12 @@ class ClientStateStore:
         return self.pager.resident_ids
 
     @property
+    def pinned_ids(self) -> list[int]:
+        """Clients currently pinned by an in-flight cohort (checkpointing
+        must drain these — their bank rows are mid-flight)."""
+        return sorted(k for k, v in self.pager.pins.items() if v > 0)
+
+    @property
     def materialized_ids(self) -> list[int]:
         """Clients whose adapter state has ever been realised (everything
         else is still the deterministic lazy init)."""

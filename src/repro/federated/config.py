@@ -5,6 +5,7 @@ from __future__ import annotations
 import dataclasses
 
 from repro.core.editing import EditConfig
+from repro.federated.faults import FaultConfig
 
 
 @dataclasses.dataclass(frozen=True)
@@ -17,7 +18,9 @@ class FederatedConfig:
     batch_size: int = 8
     aggregator: str = "fedilora"             # fedavg | hetlora | flora |
     #                                          fedilora | fedilora_kernel |
-    #                                          fedbuff | fedbuff_kernel
+    #                                          fedbuff | fedbuff_kernel |
+    #                                          fedilora_clip[_kernel] |
+    #                                          fedilora_trimmed[_kernel]
     edit: EditConfig = dataclasses.field(default_factory=EditConfig)
     lora_alpha: float = 16.0
     missing_ratio: float = 0.0
@@ -70,6 +73,17 @@ class FederatedConfig:
     # resource-aware sampling; falls back to uniform until any EMA lands).
     sampling: str = "uniform"
     availability_alpha: float = 1.0
+    # ---- robustness (faults + robust aggregation) -------------------------
+    # Deterministic fault injection (dropout / stragglers / corrupted
+    # updates — see federated/faults.py).  Disabled by default; when active
+    # the fused round absorbs every fault in-program (still one dispatch)
+    # and per-round health metrics ride the existing metrics fetch.
+    faults: FaultConfig = dataclasses.field(default_factory=FaultConfig)
+    # fedilora_clip: per-client update-norm threshold (0 → clipping off,
+    # bitwise fedilora).  fedilora_trimmed: per-dimension trim fraction
+    # (0 → bitwise fedilora).
+    clip_norm: float = 0.0
+    trim_frac: float = 0.0
 
     @property
     def global_rank(self) -> int:

@@ -134,6 +134,7 @@ from repro.core.lora import (LoRAConfig, init_lora_params, mask_lora_params,
                              truncate_redistribute)
 from repro.data.synthetic import EOS
 from repro.federated.config import FederatedConfig
+from repro.federated.faults import FaultSchedule
 from repro.launch.fedround import (apply_weight_deltas,
                                    make_buffer_merge_step,
                                    make_client_update_step, make_round_engine)
@@ -372,6 +373,17 @@ class FederatedTrainer:
         # measurement of a path includes trace+compile (seconds vs ms) and
         # would poison the EMA with an enormous bogus delay, so discard it
         self._measure_warm: set = set()
+        # ---- fault injection (robustness) --------------------------------
+        # stateless per-(round, client) schedule: identical draws under
+        # paged/resident state and across checkpoint restores (the "RNG
+        # position" is the round/tick counter the checkpoint already holds)
+        self.fault_schedule = (FaultSchedule(fed_cfg.faults,
+                                             fed_cfg.num_clients)
+                               if fed_cfg.faults.active else None)
+        # cumulative health counters (n_dropped / n_forfeited / n_deferred /
+        # n_corrupted / n_nonfinite / clip_rate_sum / fault_rounds) — per-
+        # round values ride the existing single metrics fetch
+        self.health: collections.Counter = collections.Counter()
 
     # ------------------------------------------------------------------ local
     def _local_train_impl(self, base_params, lora, rank, batches):
@@ -450,7 +462,10 @@ class FederatedTrainer:
     def derived_async_delays(self) -> tuple:
         """Async delays (rounds-to-finish) derived from the measured EMAs:
         a client whose step time is n× the fastest measured client retires
-        n-1 ticks late; unmeasured clients default to 0 (no delay)."""
+        n-1 ticks late.  Unmeasured clients mixed into a measured pool get
+        the POOL MEDIAN's delay rather than a silent 0 — a fresh client is
+        far more likely to behave like the typical measured one than like
+        the fastest (no measurements at all still means all-zero delays)."""
         if not self._ema_seen.any():
             return (0,) * self.fcfg.num_clients
         base = float(self.client_step_ema[self._ema_seen].min())
@@ -459,6 +474,8 @@ class FederatedTrainer:
             ratio = self.client_step_ema[self._ema_seen] / base
             delays[self._ema_seen] = np.maximum(
                 np.round(ratio).astype(np.int64) - 1, 0)
+            med = float(np.median(self.client_step_ema[self._ema_seen]))
+            delays[~self._ema_seen] = max(int(round(med / base)) - 1, 0)
         return tuple(int(d) for d in delays)
 
     @property
@@ -468,19 +485,32 @@ class FederatedTrainer:
         fc = self.fcfg
         return max(int(round(fc.sample_rate * fc.num_clients)), 1)
 
-    def _sample_clients(self, pool: list | None = None) -> list[int]:
+    def _sample_clients(self, pool: list | None = None,
+                        round_idx: int | None = None) -> list[int]:
         """Sample one cohort.  ``pool`` restricts the draw (run_round_async
         passes the idle clients).  ``sampling="availability"`` down-weights
         slow clients by their measured local-step EMA —
         ``w_k ∝ (fastest_ema / ema_k)^alpha`` for measured clients, 1.0 for
         unmeasured ones — and falls back to uniform until any EMA lands, so
-        the default configuration's RNG stream is untouched."""
+        the default configuration's RNG stream is untouched.  With an active
+        fault schedule, availability sampling additionally routes around the
+        clients drawn offline for ``round_idx`` (the server knows who is
+        unreachable) — unless that would leave fewer than a cohort."""
         fc = self.fcfg
         if fc.sampling not in ("uniform", "availability"):
             raise ValueError(
                 f"unknown sampling {fc.sampling!r} "
                 "(expected 'uniform' or 'availability')")
         n = self._n_sample
+        if (fc.sampling == "availability"
+                and self.fault_schedule is not None):
+            off = self.fault_schedule.offline(
+                self.server.round if round_idx is None else round_idx)
+            if off:
+                src = range(fc.num_clients) if pool is None else pool
+                kept = [int(k) for k in src if int(k) not in off]
+                if len(kept) >= n:
+                    pool = kept
         ids = None if pool is None else np.asarray(pool, np.int64)
         if fc.sampling == "availability":
             seen = self._ema_seen if ids is None else self._ema_seen[ids]
@@ -583,7 +613,9 @@ class FederatedTrainer:
                 edit=fc.edit, aggregator=fc.aggregator,
                 hetlora_beta=fc.hetlora_beta,
                 hetlora_prune_gamma=fc.hetlora_prune_gamma,
-                mesh=self.client_mesh, n_sample=self._n_sample)
+                mesh=self.client_mesh, n_sample=self._n_sample,
+                clip=fc.clip_norm or None, trim=fc.trim_frac,
+                faults=self.fault_schedule is not None)
             # donate the persistent stacked state (in-place update on TPU);
             # base params too for FLoRA, which folds deltas into them
             donate = (1, 2, 3, 4) + ((0,) if fc.aggregator == "flora" else ())
@@ -594,6 +626,17 @@ class FederatedTrainer:
         """Invoke a jitted callable, tallying it in ``dispatch_count``."""
         self.dispatch_count[name] += 1
         return fn(*args)
+
+    def _fault_cohort(self, round_idx: int, sampled: list[int]) -> dict:
+        """Draw one cohort's fault operands from the schedule, feeding the
+        measured step-time EMAs into the deadline check (unmeasured clients
+        carry NaN — the schedule ignores them) and accumulating the host-
+        side corruption count (corruption is invisible to the device-side
+        health guards unless it produces non-finite values)."""
+        ema = np.where(self._ema_seen, self.client_step_ema, np.nan)
+        co = self.fault_schedule.cohort(round_idx, sampled, step_ema=ema)
+        self.health["n_corrupted"] += int(co["n_corrupted"])
+        return co
 
     def _build_round_inputs(self) -> tuple[list[int], np.ndarray]:
         """Host-side client sampling + per-client batch-index build — pure
@@ -625,6 +668,11 @@ class FederatedTrainer:
             idx = cids
             lora, ranks, sizes, data = (self.stacked_lora, self._ranks_dev,
                                         self._sizes_dev, self._stacked_data)
+        fault_args: tuple = ()
+        if self.fault_schedule is not None:
+            co = self._fault_cohort(self.server.round, sampled)
+            fault_args = ({k: jnp.asarray(co[k])
+                           for k in ("keep", "weight", "scale", "nan")},)
         with warnings.catch_warnings():
             # donation is a no-op off TPU/GPU; silence only this dispatch
             warnings.filterwarnings(
@@ -634,7 +682,7 @@ class FederatedTrainer:
                 self.base_params, lora, self.server.global_lora,
                 self.server.prev_global, ranks, sizes, data, idx, cids,
                 jnp.asarray(batch_idx, jnp.int32),
-                jnp.asarray(self.server.round, jnp.int32))
+                jnp.asarray(self.server.round, jnp.int32), *fault_args)
         if paged:
             # adopt the in-flight output banks (donation consumed the old
             # refs), mark the cohort rows dirty for eviction write-back,
@@ -659,8 +707,10 @@ class FederatedTrainer:
         """The one blocking host sync per round: metrics + post-prune ranks.
         ``slots`` (paged mode) maps the fetched bank-shaped ``ranks[S]``
         back onto the sampled clients' entries of the host mirror."""
-        fetched = jax.device_get({"metrics": out["metrics"],
-                                  "ranks": out["ranks"]})
+        fetch = {"metrics": out["metrics"], "ranks": out["ranks"]}
+        if "health" in out:        # faults active: health rides the SAME sync
+            fetch["health"] = out["health"]
+        fetched = jax.device_get(fetch)
         if slots is None:
             self.client_ranks = np.asarray(fetched["ranks"])
         else:
@@ -672,6 +722,13 @@ class FederatedTrainer:
                "train_loss": float(np.mean(fetched["metrics"]["last_loss"])),
                "edited_layers": [] if edited is None
                else [int(e) for e in edited]}
+        if "health" in fetched:
+            h = {k: float(v) for k, v in fetched["health"].items()}
+            rec["health"] = h
+            for k in ("n_dropped", "n_forfeited", "n_nonfinite"):
+                self.health[k] += int(h[k])
+            self.health["clip_rate_sum"] += h["clip_rate"]
+            self.health["fault_rounds"] += 1
         self.history.append(rec)
         return rec
 
@@ -738,7 +795,8 @@ class FederatedTrainer:
                 self.mcfg, self.ocfg, lora_scale=self.lora_scale,
                 r_g=self.lcfg.rank, edit=fc.edit, aggregator=fc.aggregator,
                 hetlora_prune_gamma=fc.hetlora_prune_gamma,
-                mesh=self.client_mesh, n_sample=self._n_sample)
+                mesh=self.client_mesh, n_sample=self._n_sample,
+                faults=self.fault_schedule is not None)
             # donate the stacked adapters + ranks (scattered in-place);
             # global/prev_global stay live for later in-flight cohorts
             self._client_update_step = jax.jit(step, donate_argnums=(1, 4))
@@ -750,7 +808,8 @@ class FederatedTrainer:
             step = make_buffer_merge_step(
                 aggregator=fc.aggregator,
                 staleness_decay=fc.staleness_decay,
-                hetlora_beta=fc.hetlora_beta, lora_scale=self.lora_scale)
+                hetlora_beta=fc.hetlora_beta, lora_scale=self.lora_scale,
+                guard=self.fault_schedule is not None)
             self._merge_step = jax.jit(step)
         return self._merge_step
 
@@ -796,9 +855,16 @@ class FederatedTrainer:
         busy = {e["client"] for e in self._inflight}
         avail = [k for k in range(fc.num_clients) if k not in busy]
         if len(avail) >= n_s:
-            sampled = self._sample_clients(pool=avail)
+            sampled = self._sample_clients(pool=avail, round_idx=tick)
             batch_idx = np.stack([self._batch_indices(self.clients[k])
                                   for k in sampled])
+            co = None
+            fault_args: tuple = ()
+            if self.fault_schedule is not None:
+                # async fault draws key on the TICK (the dispatch moment)
+                co = self._fault_cohort(tick, sampled)
+                fault_args = ({k: jnp.asarray(co[k])
+                               for k in ("keep", "weight", "scale", "nan")},)
             measure = fc.measure_delays and \
                 not self._ema_seen[list(map(int, sampled))].all()
             if fc.paged:
@@ -820,7 +886,7 @@ class FederatedTrainer:
                 "client_update", self._get_client_update_step(),
                 self.base_params, lora_in, self.server.global_lora,
                 self.server.prev_global, ranks_in, sizes_in, data_in, idx,
-                jnp.asarray(batch_idx, jnp.int32))
+                jnp.asarray(batch_idx, jnp.int32), *fault_args)
             if measure:
                 # the wall clock needs the cohort finished: one sync per
                 # tick — paid only while some sampled client is unmeasured
@@ -830,9 +896,17 @@ class FederatedTrainer:
                 self._record_step_time(sampled, time.perf_counter() - t0,
                                        path="client_update",
                                        only_unseen=True)
+            dropped = ([] if co is None else
+                       [k for i, k in enumerate(sampled)
+                        if co["keep"][i] <= 0])
             if fc.paged:
                 self.store.adopt(out["stacked_lora"], out["ranks"])
-                self.store.mark_trained(sampled)
+                # dropped clients never scattered (in-engine masked index):
+                # their rows are clean and retire immediately — unpin now
+                self.store.mark_trained(
+                    [k for k in sampled if k not in dropped])
+                if dropped:
+                    self.store.release_cohort(dropped)
             else:
                 self.stacked_lora = out["stacked_lora"]
                 self._ranks_dev = out["ranks"]
@@ -842,11 +916,21 @@ class FederatedTrainer:
                       "sizes": out["update_sizes"],
                       "loss": out["metrics"]["last_loss"]}
             for i, k in enumerate(sampled):
+                if co is not None and co["keep"][i] <= 0:
+                    continue           # mid-round dropout: delta never lands
+                extra = 0 if co is None else int(co["extra_ticks"][i])
                 self._inflight.append({
                     "client": int(k), "row": i, "cohort": cohort,
                     "version": self._global_version,
-                    "finish": tick + int(delays[k])})
+                    "finish": tick + int(delays[k]) + extra})
             rec["sampled"] = list(map(int, sampled))
+            if co is not None:
+                self.health["n_dropped"] += int(co["n_dropped"])
+                # async stragglers are DEFERRED (arrive staler), not
+                # forfeited — count them separately from the sync timeline
+                self.health["n_deferred"] += int(co["n_forfeited"])
+                rec["health"] = {"n_dropped": int(co["n_dropped"]),
+                                 "n_deferred": int(co["n_forfeited"])}
 
         # ---- 2. retire finished deltas into the buffer (arrival order) ---
         done = [e for e in self._inflight if e["finish"] <= tick]
@@ -860,6 +944,7 @@ class FederatedTrainer:
         # ---- 3. merge M-delta batches through the fedbuff registry -------
         M = fc.buffer_size or n_s
         merged_losses = []
+        merge_health = []            # per-merge n_nonfinite (guarded merges)
         while len(self._buffer) >= M:
             batch, self._buffer = self._buffer[:M], self._buffer[M:]
             c0 = batch[0]["cohort"]
@@ -887,6 +972,8 @@ class FederatedTrainer:
                 sizes_b, jnp.asarray(stal), self.server.global_lora)
             self.server.prev_global = mo["prev_global"]
             self.server.global_lora = mo["global_lora"]
+            if "health" in mo:
+                merge_health.append(mo["health"]["n_nonfinite"])
             self._global_version += 1
             self.server.round += 1
             rec["merges"] += 1
@@ -894,16 +981,23 @@ class FederatedTrainer:
             merged_losses.extend(b["cohort"]["loss"][b["row"]]
                                  for b in batch)
         if merged_losses:
+            fetch = {"losses": merged_losses}
+            if merge_health:
+                fetch["nonfinite"] = merge_health
             if fc.paged:
                 # ranks cannot change under fedbuff (no self-pruning) and
                 # the bank-shaped [S] ranks are not the [K] host mirror —
                 # fetch only the losses
-                fetched = jax.device_get({"losses": merged_losses})
+                fetched = jax.device_get(fetch)
             else:
-                fetched = jax.device_get({"losses": merged_losses,
-                                          "ranks": self._ranks_dev})
+                fetch["ranks"] = self._ranks_dev
+                fetched = jax.device_get(fetch)
                 self.client_ranks = np.asarray(fetched["ranks"])
             rec["train_loss"] = float(np.mean(fetched["losses"]))
+            if merge_health:
+                nnf = int(np.sum(fetched["nonfinite"]))
+                self.health["n_nonfinite"] += nnf
+                rec.setdefault("health", {})["n_nonfinite"] = nnf
         rec["buffer_fill"] = len(self._buffer)
         self._async_tick += 1
         self.history.append(rec)
@@ -982,9 +1076,15 @@ class FederatedTrainer:
         # buffers the fused path donates (use-after-donate)
         self.server.prev_global = jax.tree_util.tree_map(
             jnp.copy, self.server.global_lora)
+        agg_kw = {}
+        if fc.aggregator in ("fedilora_clip", "fedilora_clip_kernel"):
+            # the fused round anchors clipped-away mass on its input global;
+            # prev_global IS that snapshot here — same anchor, same result
+            agg_kw["anchor"] = self.server.prev_global
         global_new, base_delta = AG.aggregate(
             fc.aggregator, stacked, ranks, p,
-            hetlora_beta=fc.hetlora_beta, lora_scale=self.lora_scale)
+            hetlora_beta=fc.hetlora_beta, lora_scale=self.lora_scale,
+            clip=fc.clip_norm or None, trim=fc.trim_frac, **agg_kw)
         if base_delta is not None:         # flora
             self.base_params = apply_weight_deltas(self.base_params, base_delta)
             global_new = init_lora_params(

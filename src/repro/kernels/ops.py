@@ -12,7 +12,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.kernels import ref
-from repro.kernels.dim_agg import dim_agg_pallas
+from repro.kernels.dim_agg import dim_agg_pallas, dim_agg_trimmed_pallas
 from repro.kernels.flash_attention import flash_attention_pallas
 from repro.kernels.lora_gather_matmul import grouped_lora_matmul_pallas
 from repro.kernels.lora_matmul import lora_matmul_pallas
@@ -111,24 +111,19 @@ def fedilora_aggregate_tree(stacked_tree, ranks, p, *, interpret: bool | None = 
     return out
 
 
-def fedbuff_aggregate_tree(stacked_tree, ranks, p, staleness=None, anchor=None,
-                           *, decay: float = 0.5,
-                           interpret: bool | None = None):
-    """Kernel-backed FedBuff merge over a stacked LoRA pytree — drop-in for
-    ``repro.core.aggregation.fedbuff``: the staleness-discounted
-    dimension-wise reduction runs in the ``dim_agg`` kernel (discount fused
-    as the per-client ``scale`` operand); the residual anchor blend
-    ``(1 - Σ_k ŵ_k^(d)) · anchor`` is a cheap [r_g]-vector epilogue."""
-    from repro.core.aggregation import (dimension_wise_weights,
-                                        staleness_discount)
+def discounted_aggregate_tree(stacked_tree, ranks, p, disc, anchor=None,
+                              *, interpret: bool | None = None):
+    """Kernel-backed discounted dimension-wise merge over a stacked LoRA
+    pytree — the shared core of the FedBuff staleness merge and
+    ``fedilora_clip``: the per-client discount ``disc`` [K] (staleness
+    factor or clip factor) is fused as ``dim_agg``'s per-client ``scale``
+    operand, and the per-dimension weight mass the discount forfeits is
+    retained by ``anchor`` via a cheap [r_g]-vector epilogue."""
+    from repro.core.aggregation import dimension_wise_weights
 
     first = next(iter(stacked_tree.values()))
     r_g = first["A"].shape[2]
     w = dimension_wise_weights(ranks, p, r_g)                 # [K, r_g]
-    if staleness is None:
-        disc = jnp.ones((w.shape[0],), w.dtype)
-    else:
-        disc = staleness_discount(staleness.astype(w.dtype), decay)
     covered = (jnp.sum(w, axis=0) > 0).astype(w.dtype)        # [r_g]
     resid = covered * (1.0 - jnp.sum(w * disc[:, None], axis=0))
 
@@ -143,6 +138,74 @@ def fedbuff_aggregate_tree(stacked_tree, ranks, p, staleness=None, anchor=None,
             a = a + r[None, :, None] * anchor[name]["A"]
             b = b + r[None, None, :] * anchor[name]["B"]
         out[name] = {"A": a, "B": b}
+    return out
+
+
+def fedbuff_aggregate_tree(stacked_tree, ranks, p, staleness=None, anchor=None,
+                           *, decay: float = 0.5,
+                           interpret: bool | None = None):
+    """Kernel-backed FedBuff merge over a stacked LoRA pytree — drop-in for
+    ``repro.core.aggregation.fedbuff``: the staleness-discounted
+    dimension-wise reduction runs in the ``dim_agg`` kernel (discount fused
+    as the per-client ``scale`` operand); the residual anchor blend
+    ``(1 - Σ_k ŵ_k^(d)) · anchor`` is a cheap [r_g]-vector epilogue."""
+    from repro.core.aggregation import staleness_discount
+
+    if staleness is None:
+        disc = jnp.ones((p.shape[0],), p.dtype)
+    else:
+        disc = staleness_discount(staleness.astype(p.dtype), decay)
+    return discounted_aggregate_tree(stacked_tree, ranks, p, disc, anchor,
+                                     interpret=interpret)
+
+
+def fedilora_clip_tree(stacked_tree, ranks, p, clip, anchor=None,
+                       *, interpret: bool | None = None):
+    """Kernel-backed ``fedilora_clip``: per-client update-norm clip factors
+    ``min(1, clip/||u_k||)`` ride the ``dim_agg`` ``scale`` operand — no new
+    HBM materialisation beyond the [K] norm reduction."""
+    from repro.core.aggregation import client_update_norms
+
+    norms = client_update_norms(stacked_tree)
+    disc = jnp.minimum(1.0, clip / jnp.maximum(norms, 1e-12)).astype(p.dtype)
+    return discounted_aggregate_tree(stacked_tree, ranks, p, disc, anchor,
+                                     interpret=interpret)
+
+
+def dimension_wise_trimmed(stacked, p, cover, t, *, bn: int = 128,
+                           interpret: bool | None = None):
+    """Per-element trimmed weighted mean over one stacked leaf [K, L, r, n]
+    (see ``dim_agg_trimmed_pallas``); pads the feature axis to the block
+    grid with zeros (padding is sliced off before it can influence real
+    elements — each element trims independently)."""
+    if interpret is None:
+        interpret = not _on_tpu()
+    n = stacked.shape[-1]
+    bn_ = min(bn, n)
+    sp = _pad_to(stacked, 3, bn_)
+    out = dim_agg_trimmed_pallas(sp, p, cover, t, bn=bn_, interpret=interpret)
+    return out[..., :n]
+
+
+def fedilora_trimmed_tree(stacked_tree, ranks, p, trim,
+                          *, interpret: bool | None = None):
+    """Kernel-backed ``fedilora_trimmed`` over a stacked LoRA pytree — the
+    dimension-wise trimmed mean runs in ``dim_agg_trimmed_pallas`` for both
+    A (rank rows) and B (rank cols, via transpose)."""
+    from repro.core.aggregation import (_client_masks,
+                                        trimmed_dimension_counts)
+
+    first = next(iter(stacked_tree.values()))
+    r_g = first["A"].shape[2]
+    cover = (_client_masks(ranks, r_g, p.dtype)
+             * (p > 0).astype(p.dtype)[:, None])              # [K, r_g]
+    t = trimmed_dimension_counts(cover, trim)
+    out = {}
+    for name, entry in stacked_tree.items():
+        a = dimension_wise_trimmed(entry["A"], p, cover, t, interpret=interpret)
+        bt = jnp.swapaxes(entry["B"], -1, -2)                 # [K, L, r, m]
+        b = dimension_wise_trimmed(bt, p, cover, t, interpret=interpret)
+        out[name] = {"A": a, "B": jnp.swapaxes(b, -1, -2)}
     return out
 
 
@@ -178,5 +241,7 @@ def flash_attention(q, k, v, *, causal: bool = True, window: int = 0,
 
 
 __all__ = ["fused_lora_matmul", "grouped_lora_matmul",
-           "dimension_wise_aggregate", "fedilora_aggregate_tree",
-           "fedbuff_aggregate_tree", "flash_attention", "ref"]
+           "dimension_wise_aggregate", "dimension_wise_trimmed",
+           "fedilora_aggregate_tree", "discounted_aggregate_tree",
+           "fedbuff_aggregate_tree", "fedilora_clip_tree",
+           "fedilora_trimmed_tree", "flash_attention", "ref"]

@@ -31,6 +31,27 @@ def dim_agg_ref(stacked, weights):
     return acc.astype(stacked.dtype)
 
 
+def dim_agg_trimmed_ref(stacked, p, cover, t):
+    """Per-element trimmed weighted mean oracle for ``dim_agg_trimmed_pallas``.
+    stacked: [K,L,r,n]; p: [K]; cover: [K,r]; t: [r] — per element drop the
+    t[d]-smallest and t[d]-largest covering contributions (index tie-break),
+    renormalise survivors; uncovered elements → 0."""
+    K = stacked.shape[0]
+    x = stacked.astype(jnp.float32)
+    xi, xj = x[:, None], x[None, :]
+    ki = jnp.arange(K)[:, None, None, None, None]
+    kj = jnp.arange(K)[None, :, None, None, None]
+    cj = cover.astype(jnp.float32)[None, :, None, :, None]
+    lo = jnp.sum(cj * ((xj < xi) | ((xj == xi) & (kj < ki))), axis=1)
+    hi = jnp.sum(cj * ((xj > xi) | ((xj == xi) & (kj > ki))), axis=1)
+    tb = t.astype(jnp.float32)[None, None, :, None]
+    keep = cover.astype(jnp.float32)[:, None, :, None] * (lo >= tb) * (hi >= tb)
+    pw = p.astype(jnp.float32)[:, None, None, None]
+    num = jnp.sum(keep * pw * x, axis=0)
+    den = jnp.sum(keep * pw, axis=0)
+    return (num / jnp.maximum(den, 1e-12)).astype(stacked.dtype)
+
+
 def flash_attention_ref(q, k, v, *, causal: bool = True, window: int = 0):
     """Plain softmax attention oracle.  q: [BH,Sq,d]; k,v: [BH,Sk,d*]."""
     import math

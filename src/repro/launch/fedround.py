@@ -302,13 +302,55 @@ def make_fed_round_step(cfg: ModelConfig, opt_cfg: OptimizerConfig, *,
     return round_step
 
 
+def _broadcast_rows(v, x):
+    """Broadcast a per-client vector [K] against a stacked leaf [K, ...]."""
+    return v.reshape((-1,) + (1,) * (x.ndim - 1))
+
+
+def _rows_finite(tree):
+    """Per-client all-leaves-finite reduction over a stacked pytree → bool
+    [K].  One corrupted (NaN/Inf) element anywhere in a client's update
+    marks the whole client."""
+    fins = [jnp.all(jnp.isfinite(x), axis=tuple(range(1, x.ndim)))
+            for x in jax.tree_util.tree_leaves(tree)]
+    out = fins[0]
+    for f in fins[1:]:
+        out = jnp.logical_and(out, f)
+    return out
+
+
+def _sanitize_rows(tree, finite):
+    """Zero whole client rows that carry non-finite values.  A ``where``,
+    not a multiply: ``0 * NaN`` is NaN, so zeroing the aggregation weight
+    alone would still poison every weighted reduction."""
+    return jax.tree_util.tree_map(
+        lambda x: jnp.where(_broadcast_rows(finite, x), x,
+                            jnp.zeros_like(x)), tree)
+
+
+def _pad_fault(fault, n_pad: int):
+    """Pad the per-cohort fault operand vectors with neutral entries so
+    dummy (cohort-padding) rows read as healthy non-participants."""
+    n = fault["keep"].shape[0]
+    if n >= n_pad:
+        return fault
+    ext = lambda v, fill: jnp.concatenate(
+        [v, jnp.full((n_pad - n,), fill, v.dtype)])
+    return {"keep": ext(fault["keep"], 1.0),
+            "weight": ext(fault["weight"], 1.0),
+            "scale": ext(fault["scale"], 1.0),
+            "nan": ext(fault["nan"], 0.0)}
+
+
 def make_round_engine(cfg: ModelConfig, opt_cfg: OptimizerConfig, *,
                       specs, lora_scale: float, r_g: int,
                       edit: EditConfig | None = None,
                       aggregator: str = "fedilora",
                       hetlora_beta: float = 1.0,
                       hetlora_prune_gamma: float = 0.0,
-                      mesh=None, n_sample: int | None = None) -> Callable:
+                      mesh=None, n_sample: int | None = None,
+                      clip: float | None = None, trim: float = 0.0,
+                      faults: bool = False) -> Callable:
     """Build the production fused round over the trainer's persistent
     stacked state.  Returned signature::
 
@@ -343,6 +385,32 @@ def make_round_engine(cfg: ModelConfig, opt_cfg: OptimizerConfig, *,
     program with zero-weight dummy clients (``p = 0`` so every aggregator
     ignores them, metrics sliced back to ``n_sample``, scatters dropped)
     instead of falling back to single-device execution.
+
+    ``clip``/``trim`` parameterise the robust registry entries
+    (``fedilora_clip`` / ``fedilora_trimmed``); the previous global anchors
+    the clipped-away mass.  ``faults=True`` appends one trailing operand —
+    ``fault = {keep, weight, scale, nan}``, four f32[n_s] vectors from
+    ``federated.faults.FaultSchedule.cohort`` — and the round absorbs every
+    injected fault *in-program*, still one jit dispatch:
+
+    * ``keep == 0`` (mid-round dropout): the client's trained update is
+      neither aggregated nor scattered back — its persistent row keeps the
+      pre-round state, exactly like the zero-weight dummy-client pattern;
+    * ``weight == 0`` with ``keep == 1`` (straggler forfeited by the round
+      deadline): the update IS scattered back (the client finished, too
+      late to merge) but carries zero aggregation weight;
+    * ``scale``/``nan`` corrupt the *wire copy* entering aggregation
+      (``u·scale + nan`` — sign flips, scaled outliers, NaN/Inf poison)
+      while the client's stored adapter stays clean;
+    * a per-client non-finite reduction zeroes poisoned rows (data AND
+      weight) before aggregation, the surviving weights renormalise, and a
+      fully-dead cohort falls back to the previous global;
+    * ``out["health"]`` carries ``n_dropped / n_forfeited / n_nonfinite /
+      clip_rate`` back through the round's existing single metrics fetch.
+
+    With ``faults=False`` (the default) the engine signature and program
+    are exactly the pre-fault ones — the zero-fault timeline is trivially
+    bit-identical.
     """
     edit = edit or EditConfig()
     lcfg = LoRAConfig(rank=r_g)
@@ -357,7 +425,8 @@ def make_round_engine(cfg: ModelConfig, opt_cfg: OptimizerConfig, *,
         n_sample=n_pad)
 
     def round_step(base_params, stacked_lora, global_lora, prev_global,
-                   ranks, sizes, data, idx, cids, batch_idx, round_idx):
+                   ranks, sizes, data, idx, cids, batch_idx, round_idx,
+                   fault=None):
         n_s = idx.shape[0]
         idx, gidx, batch_idx, valid = _pad_cohort(
             idx, batch_idx, n_pad or n_s, ranks.shape[0])
@@ -369,7 +438,8 @@ def make_round_engine(cfg: ModelConfig, opt_cfg: OptimizerConfig, *,
         # dummy rows carry zero weight: every registry strategy multiplies
         # by p, so padded clients cannot perturb the aggregate
         sizes_s = jnp.where(valid, sizes[gidx], 0.0)
-        p = sizes_s / jnp.maximum(jnp.sum(sizes_s), 1e-12)
+        if not faults:
+            p = sizes_s / jnp.maximum(jnp.sum(sizes_s), 1e-12)
 
         # --- device-side batch gather: [n_s, steps, B, ...] ----------------
         batches = {k: v[gidx[:, None, None], batch_idx]
@@ -393,24 +463,68 @@ def make_round_engine(cfg: ModelConfig, opt_cfg: OptimizerConfig, *,
         lora1, ranks_s, metrics = client_phases(
             base_params, prev_global, lora0, ranks_s, batches)
 
+        # --- fault absorption (wire corruption + health guards) -------------
+        agg_lora = lora1
+        scatter_idx = idx
+        health = None
+        agg_kw = {}
+        if aggregator in ("fedilora_clip", "fedilora_clip_kernel"):
+            agg_kw["anchor"] = global_lora   # clipped-away mass stays here
+        if faults:
+            f = _pad_fault(fault, idx.shape[0])
+            # corruption hits the wire copy only — the client's stored
+            # adapter (scattered below) stays clean
+            agg_lora = jax.tree_util.tree_map(
+                lambda x: x * _broadcast_rows(f["scale"], x).astype(x.dtype)
+                + _broadcast_rows(f["nan"], x).astype(x.dtype), lora1)
+            finite = _rows_finite(agg_lora)
+            agg_lora = _sanitize_rows(agg_lora, finite)
+            sizes_agg = (sizes_s * f["weight"]
+                         * finite.astype(sizes_s.dtype))
+            p = sizes_agg / jnp.maximum(jnp.sum(sizes_agg), 1e-12)
+            # dropped clients never write back: their scatter index goes out
+            # of range, mode="drop" discards it (the dummy-client idiom)
+            scatter_idx = jnp.where(f["keep"] > 0, idx, ranks.shape[0])
+            agg_kw["fallback"] = global_lora
+            vf = valid.astype(jnp.float32)
+            alive = vf * (f["keep"] > 0) * (f["weight"] > 0)
+            if AG._clip_active(clip):
+                norms = AG.client_update_norms(agg_lora)
+                part = alive * finite.astype(jnp.float32)
+                clip_rate = (jnp.sum(part * (norms > clip))
+                             / jnp.maximum(jnp.sum(part), 1.0))
+            else:
+                clip_rate = jnp.float32(0.0)
+            health = {
+                "n_dropped": jnp.sum(vf * (f["keep"] <= 0)),
+                "n_forfeited": jnp.sum(vf * (f["keep"] > 0)
+                                       * (f["weight"] <= 0)),
+                "n_nonfinite": jnp.sum(alive * (1.0 - finite.astype(
+                    jnp.float32))),
+                "clip_rate": clip_rate,
+            }
+
         # --- aggregation through the shared registry -----------------------
         global_new, base_delta = AG.aggregate(
-            aggregator, lora1, ranks_s, p,
-            hetlora_beta=hetlora_beta, lora_scale=lora_scale)
+            aggregator, agg_lora, ranks_s, p,
+            hetlora_beta=hetlora_beta, lora_scale=lora_scale,
+            clip=clip, trim=trim, **agg_kw)
 
         out = {
             # scatter the sampled clients back into the persistent stack
             # (mode="drop" — the jax default — discards dummy rows, whose
             # index is out of bounds by construction)
             "stacked_lora": jax.tree_util.tree_map(
-                lambda s, u: s.at[idx].set(u, mode="drop"),
+                lambda s, u: s.at[scatter_idx].set(u, mode="drop"),
                 stacked_lora, lora1),
-            "ranks": ranks.at[idx].set(ranks_s, mode="drop"),
+            "ranks": ranks.at[scatter_idx].set(ranks_s, mode="drop"),
             # the input global becomes prev_global: an explicit pass-through
             # output, so donation of the input buffer stays safe
             "prev_global": global_lora,
             "metrics": jax.tree_util.tree_map(lambda m: m[:n_s], metrics),
         }
+        if health is not None:
+            out["health"] = health
         if base_delta is not None:  # flora
             out["base_params"] = apply_weight_deltas(base_params, base_delta)
             global_new = init_lora_params(
@@ -426,7 +540,8 @@ def make_client_update_step(cfg: ModelConfig, opt_cfg: OptimizerConfig, *,
                             edit: EditConfig | None = None,
                             aggregator: str = "fedbuff",
                             hetlora_prune_gamma: float = 0.0,
-                            mesh=None, n_sample: int | None = None) -> Callable:
+                            mesh=None, n_sample: int | None = None,
+                            faults: bool = False) -> Callable:
     """Client half of the fused round for the buffered-async timeline::
 
         client_update_step(base_params, stacked_lora[K,...], global_lora,
@@ -444,6 +559,13 @@ def make_client_update_step(cfg: ModelConfig, opt_cfg: OptimizerConfig, *,
     weights synchronously, which has no buffered-async analogue).  Pruning
     and editing are gated exactly like :func:`make_round_engine` so the
     zero-staleness timeline stays equivalent to the synchronous round.
+
+    ``faults=True`` appends a trailing ``fault = {keep, weight, scale, nan}``
+    operand: dropped clients (``keep == 0``) don't scatter their trained
+    state back, and corruption hits the buffered ``update`` rows (the wire)
+    while the scattered local state stays clean.  Poisoned rows are caught
+    later by the merge guard (:func:`make_buffer_merge_step`), mirroring a
+    real deployment where the server validates at merge time.
     """
     edit = edit or EditConfig()
     if aggregator == "flora":
@@ -459,7 +581,8 @@ def make_client_update_step(cfg: ModelConfig, opt_cfg: OptimizerConfig, *,
         n_sample=n_pad)
 
     def client_update_step(base_params, stacked_lora, global_lora,
-                           prev_global, ranks, sizes, data, idx, batch_idx):
+                           prev_global, ranks, sizes, data, idx, batch_idx,
+                           fault=None):
         n_s = idx.shape[0]
         idx, gidx, batch_idx, _ = _pad_cohort(
             idx, batch_idx, n_pad or n_s, ranks.shape[0])
@@ -471,15 +594,25 @@ def make_client_update_step(cfg: ModelConfig, opt_cfg: OptimizerConfig, *,
             lambda r: truncate_redistribute(global_lora, r, r_g))(ranks_s)
         lora1, ranks_s, metrics = client_phases(
             base_params, prev_global, lora0, ranks_s, batches)
+        update = jax.tree_util.tree_map(lambda x: x[:n_s], lora1)
+        scatter_idx = idx
+        if faults:
+            f = _pad_fault(fault, idx.shape[0])
+            # wire-level corruption of the buffered rows; the scattered
+            # local state stays clean (the merge guard catches the poison)
+            update = jax.tree_util.tree_map(
+                lambda x: x * _broadcast_rows(f["scale"][:n_s], x).astype(
+                    x.dtype)
+                + _broadcast_rows(f["nan"][:n_s], x).astype(x.dtype), update)
+            scatter_idx = jnp.where(f["keep"] > 0, idx, ranks.shape[0])
         # dummy rows (padded cohorts) are sliced off everything the server
         # buffers and dropped from the scatters
         return {
             "stacked_lora": jax.tree_util.tree_map(
-                lambda s, u: s.at[idx].set(u, mode="drop"),
+                lambda s, u: s.at[scatter_idx].set(u, mode="drop"),
                 stacked_lora, lora1),
-            "ranks": ranks.at[idx].set(ranks_s, mode="drop"),
-            "update": jax.tree_util.tree_map(
-                lambda x: x[:n_s], lora1),    # [n_s, ...] delta to buffer
+            "ranks": ranks.at[scatter_idx].set(ranks_s, mode="drop"),
+            "update": update,                 # [n_s, ...] delta to buffer
             "update_ranks": ranks_s[:n_s],
             "update_sizes": sizes_s[:n_s],
             "metrics": jax.tree_util.tree_map(lambda m: m[:n_s], metrics),
@@ -491,7 +624,8 @@ def make_client_update_step(cfg: ModelConfig, opt_cfg: OptimizerConfig, *,
 def make_buffer_merge_step(*, aggregator: str = "fedbuff",
                            staleness_decay: float = 0.5,
                            hetlora_beta: float = 1.0,
-                           lora_scale: float = 1.0) -> Callable:
+                           lora_scale: float = 1.0,
+                           guard: bool = False) -> Callable:
     """Server half of the buffered-async round::
 
         merge_step(buffer_lora[M,...], buf_ranks[M], buf_sizes[M],
@@ -504,6 +638,12 @@ def make_buffer_merge_step(*, aggregator: str = "fedbuff",
     input global passes through as the new ``prev_global`` snapshot —
     donation-safe exactly like ``round_step``.  ``M`` is static (jit once
     per buffer size).
+
+    ``guard=True`` (fault-injected trainers) validates the buffer at merge
+    time: rows with any non-finite element are zeroed (data and weight),
+    the surviving weights renormalise, a fully-poisoned buffer falls back
+    to the previous global, and ``out["health"]["n_nonfinite"]`` reports
+    the count through the merge's metrics fetch.
     """
     if aggregator == "flora":
         raise ValueError("flora has no buffered-async merge (dense base "
@@ -511,13 +651,25 @@ def make_buffer_merge_step(*, aggregator: str = "fedbuff",
 
     def merge_step(buffer_lora, buf_ranks, buf_sizes, buf_staleness,
                    global_lora):
+        agg_kw = {}
+        health = None
+        if guard:
+            finite = _rows_finite(buffer_lora)
+            buffer_lora = _sanitize_rows(buffer_lora, finite)
+            buf_sizes = buf_sizes * finite.astype(buf_sizes.dtype)
+            agg_kw["fallback"] = global_lora
+            health = {"n_nonfinite": jnp.sum(1.0 - finite.astype(
+                jnp.float32))}
         p = buf_sizes / jnp.maximum(jnp.sum(buf_sizes), 1e-12)
         global_new, _ = AG.aggregate(
             aggregator, buffer_lora, buf_ranks, p,
             hetlora_beta=hetlora_beta, lora_scale=lora_scale,
             staleness=buf_staleness, anchor=global_lora,
             staleness_decay=staleness_decay)
-        return {"global_lora": global_new, "prev_global": global_lora}
+        out = {"global_lora": global_new, "prev_global": global_lora}
+        if health is not None:
+            out["health"] = health
+        return out
 
     return merge_step
 

@@ -52,6 +52,21 @@ def test_bench_quick_cli_lines(monkeypatch):
     assert "fedround/dispatch/sync/population_eval,0.0,1" in lines
 
 
+def test_bench_quick_robust_cli_lines(monkeypatch):
+    """--quick-robust CSV formatting (quick_robust_check stubbed — the real
+    fault-mode asserts run in tests/test_faults.py and the CI bench step)."""
+    import benchmarks.bench_fedround as B
+
+    monkeypatch.setattr(B, "quick_robust_check", lambda: {
+        "fedilora": {"round_step": 3},
+        "fedilora_trimmed": {"round_step": 3},
+        "async": {"client_update": 2, "buffer_merge": 2}})
+    lines = B.main(["--quick-robust"])
+    assert "fedround/dispatch/fedilora/round_step,0.0,3" in lines
+    assert "fedround/dispatch/fedilora_trimmed/round_step,0.0,3" in lines
+    assert "fedround/dispatch/async/client_update,0.0,2" in lines
+
+
 @pytest.mark.slow
 def test_bench_serving_quick_dispatch_counts():
     """Serving loop dispatch accounting: exactly one serve_step per decode

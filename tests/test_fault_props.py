@@ -1,0 +1,142 @@
+"""Property tests for fault-injected federations (hypothesis-drawn fault
+configurations):
+
+* a random fault schedule produces IDENTICAL round records and global
+  adapters under paged and resident client state, across the sync and
+  pipelined drivers (and the async driver for fedbuff configs) — faults
+  must not break the store's bit-identity contract;
+* ``fedilora_clip`` at clip=∞ (clip_norm=0) and ``fedilora_trimmed`` at
+  trim=0 degrade BITWISE to plain ``fedilora`` on random fault timelines.
+
+Conftest-gated on hypothesis like the other property-test modules."""
+
+import hypothesis.strategies as st
+import jax
+import numpy as np
+from hypothesis import HealthCheck, given, settings
+
+from repro.configs import get_config
+from repro.core.editing import EditConfig
+from repro.data.synthetic import SyntheticTaskConfig, make_federated_datasets
+from repro.federated import FaultConfig, FederatedConfig, FederatedTrainer
+from repro.optim import OptimizerConfig
+
+N_CLIENTS = 5
+RANKS = (4, 8, 8, 16, 8)
+SYNC_ROUNDS = 3
+ASYNC_TICKS = 5
+_DATA = None
+
+
+def _data():
+    global _DATA
+    if _DATA is None:
+        tcfg = SyntheticTaskConfig(caption_len=8)
+        _DATA = make_federated_datasets(tcfg, N_CLIENTS,
+                                        np.array([24] * N_CLIENTS))
+    return _DATA
+
+
+def _mk(paged, *, store_slots=0, aggregator="fedilora", **fed_kw):
+    clients, gtest = _data()
+    fcfg = FederatedConfig(num_clients=N_CLIENTS, sample_rate=0.4,
+                           ranks=RANKS, local_steps=1, batch_size=4,
+                           aggregator=aggregator,
+                           edit=EditConfig(enabled=False),
+                           paged=paged, store_slots=store_slots, **fed_kw)
+    return FederatedTrainer(get_config("fedbench-tiny"), fcfg,
+                            OptimizerConfig(peak_lr=3e-3, total_steps=30),
+                            clients, clients, gtest, seed=0)
+
+
+def _snapshot(tr):
+    out = {"__global__": (0, [np.asarray(x) for x in
+                              jax.tree_util.tree_leaves(
+                                  jax.device_get(tr.server.global_lora))])}
+    for cid, (lora, rank) in tr.export_adapters().items():
+        out[cid] = (rank, [np.asarray(x)
+                           for x in jax.tree_util.tree_leaves(lora)])
+    return out
+
+
+def _assert_snapshot_equal(a, b):
+    assert a.keys() == b.keys()
+    for cid in a:
+        assert a[cid][0] == b[cid][0], cid
+        for xa, xb in zip(a[cid][1], b[cid][1]):
+            np.testing.assert_array_equal(xa, xb, err_msg=cid)
+
+
+_fault_cfgs = st.builds(
+    FaultConfig,
+    enabled=st.just(True),
+    dropout_rate=st.sampled_from([0.0, 0.25, 0.5, 1.0]),
+    straggler_rate=st.sampled_from([0.0, 0.25, 0.5]),
+    corrupt_rate=st.sampled_from([0.0, 0.3, 1.0]),
+    corrupt_mode=st.sampled_from(["sign_flip", "scale", "nan", "inf"]),
+    byzantine_clients=st.sampled_from([(), (1,), (0, 3)]),
+    seed=st.integers(0, 6))
+
+
+@settings(max_examples=5, deadline=None,
+          suppress_health_check=[HealthCheck.too_slow])
+@given(faults=_fault_cfgs, pipelined=st.booleans())
+def test_random_faults_paged_equals_resident_sync(faults, pipelined):
+    """Any fault schedule yields identical records + globals + client state
+    under paged and resident storage, sync or pipelined."""
+    recs = {}
+    snaps = {}
+    for paged in (False, True):
+        tr = _mk(paged, store_slots=2 if paged else 0, faults=faults)
+        got = []
+        for _ in range(SYNC_ROUNDS):
+            rec = tr.run_round_pipelined() if pipelined else tr.run_round()
+            if rec is not None:
+                got.append(rec)
+        if pipelined:
+            tail = tr.flush_rounds()
+            if tail is not None:
+                got.append(tail)
+        recs[paged] = got
+        snaps[paged] = _snapshot(tr)
+        for leaf in jax.tree_util.tree_leaves(
+                jax.device_get(tr.server.global_lora)):
+            assert np.isfinite(np.asarray(leaf)).all()
+    assert recs[False] == recs[True]
+    _assert_snapshot_equal(snaps[False], snaps[True])
+
+
+@settings(max_examples=5, deadline=None,
+          suppress_health_check=[HealthCheck.too_slow])
+@given(faults=_fault_cfgs)
+def test_random_faults_paged_equals_resident_async(faults):
+    """FedBuff ticks under a random fault schedule (dropout keeps deltas out
+    of the buffer, stragglers defer, the merge guard sanitises) retire
+    bit-identically under paged and resident storage."""
+    recs = {}
+    snaps = {}
+    for paged in (False, True):
+        tr = _mk(paged, store_slots=5 if paged else 0, aggregator="fedbuff",
+                 async_delays=(0, 1, 0, 2, 0), buffer_size=2, faults=faults)
+        recs[paged] = [tr.run_round_async() for _ in range(ASYNC_TICKS)]
+        snaps[paged] = _snapshot(tr)
+        for leaf in jax.tree_util.tree_leaves(
+                jax.device_get(tr.server.global_lora)):
+            assert np.isfinite(np.asarray(leaf)).all()
+    assert recs[False] == recs[True]
+    _assert_snapshot_equal(snaps[False], snaps[True])
+
+
+@settings(max_examples=4, deadline=None,
+          suppress_health_check=[HealthCheck.too_slow])
+@given(faults=_fault_cfgs,
+       agg=st.sampled_from(["fedilora_clip", "fedilora_trimmed"]))
+def test_robust_aggregators_degrade_bitwise_on_fault_timelines(faults, agg):
+    """clip_norm=0 / trim_frac=0 make the robust entries BITWISE fedilora on
+    whole fault-injected timelines, not just single aggregate calls."""
+    t0 = _mk(False, faults=faults)
+    t1 = _mk(False, aggregator=agg, faults=faults)
+    r0 = [t0.run_round() for _ in range(SYNC_ROUNDS)]
+    r1 = [t1.run_round() for _ in range(SYNC_ROUNDS)]
+    assert r0 == r1
+    _assert_snapshot_equal(_snapshot(t0), _snapshot(t1))

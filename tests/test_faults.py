@@ -1,0 +1,275 @@
+"""Fault-injected federation tests: deterministic schedules, the fused
+round's in-program fault absorption (still ONE jitted dispatch), robust
+aggregator degradation, zero-survivor fallbacks, and fault-aware sampling.
+
+The heavier cross-driver equivalences (random fault schedules, paged vs
+resident, clip/trim bitwise degradation under hypothesis-drawn configs)
+live in ``test_fault_props.py`` (conftest-gated on hypothesis)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.core import aggregation as AG
+from repro.core.editing import EditConfig
+from repro.core.lora import LoRASpec, init_lora_params, LoRAConfig
+from repro.data.synthetic import SyntheticTaskConfig, make_federated_datasets
+from repro.federated import FaultConfig, FaultSchedule, FederatedConfig, \
+    FederatedTrainer
+from repro.optim import OptimizerConfig
+
+N = 5
+RANKS = (4, 8, 8, 16, 8)
+_DATA = None
+
+
+def _data():
+    global _DATA
+    if _DATA is None:
+        tcfg = SyntheticTaskConfig(caption_len=8)
+        _DATA = make_federated_datasets(tcfg, N, np.array([24] * N))
+    return _DATA
+
+
+def _mk(paged=False, aggregator="fedilora", **fed_kw):
+    clients, gtest = _data()
+    fed_kw.setdefault("sample_rate", 0.8)
+    fcfg = FederatedConfig(num_clients=N, ranks=RANKS, local_steps=1,
+                           batch_size=4, aggregator=aggregator,
+                           edit=EditConfig(enabled=False), paged=paged,
+                           **fed_kw)
+    return FederatedTrainer(get_config("fedbench-tiny"), fcfg,
+                            OptimizerConfig(peak_lr=3e-3, total_steps=30),
+                            clients, clients, gtest, seed=0)
+
+
+def _globals(tr):
+    return jax.device_get({"g": tr.server.global_lora,
+                           "p": tr.server.prev_global})
+
+
+def _assert_trees_equal(a, b):
+    la = jax.tree_util.tree_leaves_with_path(a)
+    lb = jax.tree_util.tree_leaves_with_path(b)
+    assert len(la) == len(lb)
+    for (ka, va), (_, vb) in zip(la, lb):
+        np.testing.assert_array_equal(
+            np.asarray(va), np.asarray(vb),
+            err_msg=jax.tree_util.keystr(ka))
+
+
+def _assert_finite(tree):
+    for leaf in jax.tree_util.tree_leaves(jax.device_get(tree)):
+        assert np.isfinite(np.asarray(leaf)).all()
+
+
+# --------------------------------------------------------------- schedule
+def test_fault_schedule_deterministic_and_order_free():
+    cfg = FaultConfig(enabled=True, dropout_rate=0.3, straggler_rate=0.3,
+                      corrupt_rate=0.3, seed=11)
+    s1 = FaultSchedule(cfg, 10)
+    s2 = FaultSchedule(cfg, 10)
+    co_a = s1.cohort(4, [0, 3, 7])
+    co_b = s2.cohort(4, [7, 0, 3])          # same clients, other order
+    for i, cid in enumerate([0, 3, 7]):
+        j = [7, 0, 3].index(cid)
+        for key in ("keep", "weight", "scale", "nan"):
+            assert co_a[key][i] == co_b[key][j]
+    # different round → (almost surely) different draws, still deterministic
+    assert s1.dropped(4, 0) == s2.dropped(4, 0)
+    seeds = [FaultSchedule(FaultConfig(enabled=True, dropout_rate=0.5,
+                                       seed=s), 10).offline(0)
+             for s in range(4)]
+    assert len(set(seeds)) > 1              # seed actually matters
+
+
+def test_fault_schedule_semantics():
+    # byzantine clients sign-flip every round, independent of corrupt_rate
+    cfg = FaultConfig(enabled=True, byzantine_clients=(2,), seed=0)
+    sch = FaultSchedule(cfg, 5)
+    co = sch.cohort(0, [1, 2])
+    assert co["scale"][0] == 1.0 and co["scale"][1] == -1.0
+    assert co["n_corrupted"] == 1
+    # deadline: a measured EMA above round_deadline forfeits the client
+    cfg = FaultConfig(enabled=True, round_deadline=0.5)
+    sch = FaultSchedule(cfg, 5)
+    co = sch.cohort(0, [0, 1], step_ema=np.asarray([0.1, 0.9]))
+    assert co["weight"][0] == 1.0 and co["weight"][1] == 0.0
+    assert co["keep"][1] == 1.0             # forfeited, NOT dropped
+    assert co["n_forfeited"] == 1
+    with pytest.raises(ValueError, match="corrupt_mode"):
+        FaultConfig(corrupt_mode="bogus")
+    assert not FaultConfig(enabled=True).active      # no rates → inactive
+
+
+# ------------------------------------------------- zero-survivor fallback
+def test_aggregators_zero_survivor_fallback():
+    """All-zero ``p`` (fully dropped cohort) + ``fallback`` → the previous
+    global comes back untouched instead of a 0/eps zero tree."""
+    specs = [LoRASpec("s0.attn.wq", 24, 32, 2)]
+    key = jax.random.PRNGKey(0)
+    lcfg = LoRAConfig(rank=16)
+    loras = [init_lora_params(jax.random.fold_in(key, i), specs, lcfg,
+                              client_rank=r) for i, r in enumerate((4, 8, 16))]
+    stacked = jax.tree_util.tree_map(lambda *xs: jnp.stack(xs), *loras)
+    prev = init_lora_params(jax.random.fold_in(key, 99), specs, lcfg)
+    ranks = jnp.asarray([4, 8, 16])
+    p0 = jnp.zeros((3,))
+    for name in ("fedavg", "hetlora", "fedilora", "fedilora_kernel",
+                 "fedilora_clip", "fedilora_trimmed", "fedbuff"):
+        out, _ = AG.aggregate(name, stacked, ranks, p0, clip=1.0, trim=0.2,
+                              anchor=prev, fallback=prev)
+        _assert_trees_equal(jax.device_get(out), jax.device_get(prev))
+    # sanity: with live weights the fallback is NOT taken
+    p = jnp.asarray([0.2, 0.3, 0.5])
+    out, _ = AG.aggregate("fedilora", stacked, ranks, p, fallback=prev)
+    assert not np.array_equal(
+        np.asarray(out["s0.attn.wq"]["A"]),
+        np.asarray(prev["s0.attn.wq"]["A"]))
+
+
+def test_all_dropped_cohort_leaves_global_untouched():
+    tr = _mk(faults=FaultConfig(enabled=True, dropout_rate=1.0))
+    before = _globals(tr)["g"]
+    rec = tr.run_round()
+    _assert_trees_equal(before, _globals(tr)["g"])
+    assert rec["health"]["n_dropped"] == tr._n_sample
+    _assert_finite(tr.server.global_lora)
+
+
+# ------------------------------------------------------- fused round faults
+def test_faulted_round_one_dispatch_finite_paged_equals_resident():
+    """Acceptance: a faulted round is still ONE jitted round_step dispatch,
+    leaves a finite global, and is bit-identical paged vs resident."""
+    faults = FaultConfig(enabled=True, dropout_rate=0.3, straggler_rate=0.2,
+                         corrupt_rate=0.3, corrupt_mode="nan", seed=3)
+    outs = []
+    for paged in (False, True):
+        tr = _mk(paged=paged, faults=faults)
+        for _ in range(3):
+            tr.run_round()
+        assert tr.dispatch_count["round_step"] == 3
+        _assert_finite(tr.server.global_lora)
+        assert tr.health["fault_rounds"] == 3
+        outs.append(_globals(tr))
+    _assert_trees_equal(*outs)
+
+
+def test_inactive_fault_config_bitwise_matches_plain():
+    """enabled=True with zero rates is inactive: the trainer compiles the
+    pre-fault program and the timeline is bit-identical to the default."""
+    t0 = _mk()
+    t1 = _mk(faults=FaultConfig(enabled=True))
+    for _ in range(2):
+        t0.run_round()
+        t1.run_round()
+    _assert_trees_equal(_globals(t0), _globals(t1))
+
+
+def test_clip_trim_zero_degrade_bitwise_to_fedilora():
+    """clip_norm=0 / trim_frac=0 configs run the robust registry entries on
+    their statically-gated fedilora path — bit-identical rounds."""
+    base = _mk()
+    t_clip = _mk(aggregator="fedilora_clip")    # clip_norm defaults to 0
+    t_trim = _mk(aggregator="fedilora_trimmed")  # trim_frac defaults to 0
+    for _ in range(2):
+        base.run_round()
+        t_clip.run_round()
+        t_trim.run_round()
+    _assert_trees_equal(_globals(base), _globals(t_clip))
+    _assert_trees_equal(_globals(base), _globals(t_trim))
+
+
+def test_corrupted_update_does_not_poison_stored_state():
+    """Corruption is wire-level: the byzantine client's own stored adapter
+    advances normally (finite), only the aggregate sees the flip."""
+    tr = _mk(faults=FaultConfig(enabled=True, corrupt_rate=1.0,
+                                corrupt_mode="inf", seed=1))
+    tr.run_round()
+    _assert_finite(tr.server.global_lora)
+    _assert_finite(tr.stacked_lora)
+    assert tr.history[-1]["health"]["n_nonfinite"] == tr._n_sample
+
+
+def test_straggler_forfeit_scatters_but_not_aggregates():
+    """A forfeited straggler's local state advances (it finished training)
+    but the global equals the survivors-only aggregate."""
+    faults = FaultConfig(enabled=True, straggler_rate=1.0, seed=0)
+    tr = _mk(faults=faults)
+    before = jax.device_get(tr.stacked_lora)
+    g0 = _globals(tr)["g"]
+    rec = tr.run_round()
+    assert rec["health"]["n_forfeited"] == tr._n_sample
+    # every survivor forfeited → fallback keeps the previous global...
+    _assert_trees_equal(g0, _globals(tr)["g"])
+    # ...but the sampled clients' stored adapters still moved
+    after = jax.device_get(tr.stacked_lora)
+    moved = any(
+        not np.array_equal(np.asarray(a)[k], np.asarray(b)[k])
+        for k in rec["sampled"]
+        for a, b in zip(jax.tree_util.tree_leaves(before),
+                        jax.tree_util.tree_leaves(after)))
+    assert moved
+
+
+# ------------------------------------------------------------- async faults
+def test_async_fault_dropout_and_deferral():
+    """Dropout keeps deltas out of the buffer entirely; stragglers retire
+    ``straggler_ticks`` late; the merge guard sanitises poisoned rows; the
+    paged and resident timelines agree bitwise."""
+    faults = FaultConfig(enabled=True, dropout_rate=0.25, straggler_rate=0.25,
+                         straggler_ticks=2, corrupt_rate=0.3,
+                         corrupt_mode="inf", seed=5)
+    outs = []
+    for paged, kw in ((False, {}), (True, {"store_slots": N})):
+        tr = _mk(paged=paged, aggregator="fedbuff", sample_rate=0.4,
+                 buffer_size=2, async_delays=(0, 1, 0, 2, 0), faults=faults,
+                 **kw)
+        for _ in range(8):
+            tr.run_round_async()
+        _assert_finite(tr.server.global_lora)
+        assert tr.health["n_dropped"] > 0
+        assert tr.health["n_deferred"] > 0
+        assert tr.health["n_nonfinite"] > 0
+        outs.append(_globals(tr))
+    _assert_trees_equal(*outs)
+
+
+def test_async_straggler_finish_includes_extra_ticks():
+    faults = FaultConfig(enabled=True, straggler_rate=1.0, straggler_ticks=3,
+                         seed=0)
+    tr = _mk(aggregator="fedbuff", sample_rate=0.4, buffer_size=2,
+             faults=faults)
+    tr.run_round_async()
+    assert tr._inflight                      # deferred, not retired in-tick
+    assert all(e["finish"] == 0 + 3 for e in tr._inflight)
+
+
+# ------------------------------------------------------- fault-aware sampling
+def test_availability_sampling_excludes_offline_clients():
+    faults = FaultConfig(enabled=True, dropout_rate=0.4, seed=7)
+    tr = _mk(sample_rate=0.4, sampling="availability", faults=faults)
+    hits = 0
+    for r in range(12):
+        off = tr.fault_schedule.offline(tr.server.round)
+        sampled, _ = tr._build_round_inputs()
+        if len(set(range(N)) - off) >= tr._n_sample:
+            assert not (set(sampled) & off), (r, sampled, off)
+            hits += len(off)
+        tr.server.round += 1                 # advance without training cost
+    assert hits > 0                          # the exclusion actually engaged
+
+
+def test_uniform_sampling_rng_stream_untouched_by_faults():
+    """Uniform sampling must keep the historical RNG call shape even with a
+    fault schedule active — fault draws are stateless, so the sampled
+    cohorts match the no-fault trainer exactly."""
+    t0 = _mk(sample_rate=0.4)
+    t1 = _mk(sample_rate=0.4,
+             faults=FaultConfig(enabled=True, dropout_rate=0.3, seed=2))
+    for _ in range(6):
+        s0, _ = t0._build_round_inputs()
+        s1, _ = t1._build_round_inputs()
+        assert s0 == s1

@@ -147,7 +147,10 @@ def _stack(key, ranks, r_g=16):
 def test_registry_covers_all_strategies():
     assert set(AG.AGGREGATORS) == {"fedavg", "hetlora", "fedilora",
                                    "fedilora_kernel", "flora",
-                                   "fedbuff", "fedbuff_kernel"}
+                                   "fedbuff", "fedbuff_kernel",
+                                   "fedilora_clip", "fedilora_clip_kernel",
+                                   "fedilora_trimmed",
+                                   "fedilora_trimmed_kernel"}
 
 
 def test_registry_dispatch_contract():
@@ -491,9 +494,11 @@ def test_derived_delays_scale_with_measured_ema():
     tr._ema_seen[:] = True
     assert tr.derived_async_delays() == (0, 2, 0)     # 3.1× slower → 2 ticks
 
-    # partially measured: unmeasured clients default to no delay
+    # partially measured: unmeasured clients fall back to the measured
+    # pool's MEDIAN delay (median ema 0.205 → 2.05× the fastest → 1 tick),
+    # not a silent 0 — a fresh client behaves like the typical one
     tr._ema_seen[:] = [True, True, False]
-    assert tr.derived_async_delays() == (0, 2, 0)
+    assert tr.derived_async_delays() == (0, 2, 1)
 
 
 def test_async_uses_derived_delays_when_measuring():

@@ -107,8 +107,14 @@ def test_federated_checkpoint_bit_identical_after_fused_and_async(tmp_path):
     assert rec["merges"] == 1
 
 
-def test_save_federated_rejects_unmerged_async_state(tmp_path):
-    from repro.checkpoint import save_federated
+def test_unmerged_async_state_roundtrips(tmp_path):
+    """Mid-flight buffered-async state (in-flight cohorts + buffered
+    deltas) is PERSISTED, not rejected: a resident trainer checkpointed
+    mid-timeline restores its entry lists and continues BIT-identically
+    with the uninterrupted run (RNG streams round-trip too)."""
+    import jax
+
+    from repro.checkpoint import load_federated, save_federated
     from repro.configs import get_config
     from repro.data.synthetic import SyntheticTaskConfig, make_federated_datasets
     from repro.federated import FederatedConfig, FederatedTrainer
@@ -118,12 +124,105 @@ def test_save_federated_rejects_unmerged_async_state(tmp_path):
     fcfg = FederatedConfig(num_clients=3, sample_rate=1.0, ranks=(4, 8, 8),
                            local_steps=1, batch_size=4, aggregator="fedbuff",
                            async_delays=(0, 3, 0), buffer_size=2)
+
+    def mk():
+        return FederatedTrainer(get_config("fedbench-tiny"), fcfg,
+                                OptimizerConfig(peak_lr=3e-3, total_steps=10),
+                                clients, clients, gtest, seed=0)
+
+    tr = mk()
+    tr.run_round_async()                # client 1 still in flight
+    assert tr._inflight                 # mid-flight state to persist
+    d = os.path.join(tmp_path, "fed")
+    save_federated(d, tr)
+    tr2 = mk()
+    load_federated(d, tr2)
+    assert [e["client"] for e in tr2._inflight] == \
+        [e["client"] for e in tr._inflight]
+    assert [e["finish"] for e in tr2._inflight] == \
+        [e["finish"] for e in tr._inflight]
+    assert len(tr2._buffer) == len(tr._buffer)
+    for _ in range(4):                  # drain + keep going, both timelines
+        tr.run_round_async()
+        tr2.run_round_async()
+    for l1, l2 in zip(
+            jax.tree_util.tree_leaves(jax.device_get(tr.server.global_lora)),
+            jax.tree_util.tree_leaves(jax.device_get(tr2.server.global_lora))):
+        np.testing.assert_array_equal(np.asarray(l1), np.asarray(l2))
+
+
+def test_save_federated_rejects_pinned_paged_rows(tmp_path):
+    """A PAGED trainer with an un-retired in-flight cohort still rejects:
+    the cohort's post-update adapters live only in pinned bank rows."""
+    from repro.checkpoint import save_federated
+    from repro.configs import get_config
+    from repro.data.synthetic import SyntheticTaskConfig, make_federated_datasets
+    from repro.federated import FederatedConfig, FederatedTrainer
+
+    tcfg = SyntheticTaskConfig(caption_len=8)
+    clients, gtest = make_federated_datasets(tcfg, 3, np.array([24, 24, 24]))
+    fcfg = FederatedConfig(num_clients=3, sample_rate=1.0, ranks=(4, 8, 8),
+                           local_steps=1, batch_size=4, aggregator="fedbuff",
+                           async_delays=(0, 3, 0), buffer_size=2,
+                           paged=True, store_slots=3)
     tr = FederatedTrainer(get_config("fedbench-tiny"), fcfg,
                           OptimizerConfig(peak_lr=3e-3, total_steps=10),
                           clients, clients, gtest, seed=0)
-    tr.run_round_async()                # client 1 still in flight
-    with pytest.raises(ValueError, match="un-merged"):
+    tr.run_round_async()                # client 1 pinned in flight
+    assert tr.store.pinned_ids == [1]
+    with pytest.raises(ValueError, match="pinned"):
         save_federated(os.path.join(tmp_path, "fed"), tr)
+
+
+def test_checkpoint_mid_fault_sequence_bit_identical(tmp_path):
+    """Robustness state round-trip: a fault-injected trainer checkpointed
+    mid-fault-sequence (health counters + RNG streams + schedule position)
+    resumes BIT-identically, across paged↔resident in both directions."""
+    import jax
+
+    from repro.checkpoint import load_federated, save_federated
+    from repro.configs import get_config
+    from repro.data.synthetic import SyntheticTaskConfig, make_federated_datasets
+    from repro.federated import (FaultConfig, FederatedConfig,
+                                 FederatedTrainer)
+
+    tcfg = SyntheticTaskConfig(caption_len=8)
+    clients, gtest = make_federated_datasets(tcfg, 4, np.array([24] * 4))
+    faults = FaultConfig(enabled=True, dropout_rate=0.3, straggler_rate=0.2,
+                         corrupt_rate=0.3, corrupt_mode="nan", seed=3)
+
+    def mk(paged):
+        fcfg = FederatedConfig(num_clients=4, sample_rate=0.75,
+                               ranks=(4, 8, 8, 16), local_steps=1,
+                               batch_size=4, aggregator="fedilora",
+                               faults=faults, paged=paged,
+                               store_slots=3 if paged else 0)
+        return FederatedTrainer(get_config("fedbench-tiny"), fcfg,
+                                OptimizerConfig(peak_lr=3e-3, total_steps=20),
+                                clients, clients, gtest, seed=0)
+
+    for src_paged, dst_paged in ((False, True), (True, False)):
+        tr = mk(src_paged)
+        for _ in range(2):
+            tr.run_round()              # mid-fault-sequence snapshot point
+        assert tr.health["fault_rounds"] == 2
+        d = os.path.join(tmp_path, f"fed_{int(src_paged)}")
+        save_federated(d, tr)
+        tr2 = mk(dst_paged)
+        load_federated(d, tr2)
+        assert dict(tr2.health) == {k: float(v)
+                                    for k, v in tr.health.items()}
+        for _ in range(2):              # identical continued fault timeline
+            r1 = tr.run_round()
+            r2 = tr2.run_round()
+            assert r1["sampled"] == r2["sampled"]
+            assert r1["health"] == r2["health"]
+        for l1, l2 in zip(
+                jax.tree_util.tree_leaves(
+                    jax.device_get(tr.server.global_lora)),
+                jax.tree_util.tree_leaves(
+                    jax.device_get(tr2.server.global_lora))):
+            np.testing.assert_array_equal(np.asarray(l1), np.asarray(l2))
 
 
 def _mk_paged_kwargs(tmp_path=None, **kw):
