@@ -249,7 +249,132 @@ def _measure() -> dict:
     out["eval_sweep_s"] = {"clients": NUM_CLIENTS, "gen_rows": EVAL_SWEEP_N,
                            "looped_s": tl, "vmapped_s": tv,
                            "speedup": tl / tv}
+
+    # ---- telemetry artifact: a faulted paged federation, tracing ON -------
+    # proves the instrumented round exports a valid Perfetto timeline and a
+    # metrics snapshot (pager hit rate, per-phase spans, round latency)
+    # while its dispatch counts stay exactly the uninstrumented ones
+    from repro.telemetry import Telemetry
+    tel = Telemetry(enabled=True)
+    trt = _build_faulted_paged_trainer(tel)
+    for _ in range(3):
+        trt.run_round()
+    trace = tel.chrome_trace()
+    out["telemetry"] = {
+        "span_counts": {k: int(v) for k, v in tel.tracer.counts.items()},
+        "trace_events": len(trace["traceEvents"]),
+        "dropped_events": trace["otherData"]["dropped_events"],
+        "snapshot": tel.snapshot(),
+        "dispatch_vs_spans_ok": all(
+            tel.tracer.counts.get(name, 0) == cnt
+            for name, cnt in trt.dispatch_count.items()),
+    }
     return out
+
+
+def _build_faulted_paged_trainer(telemetry=None):
+    """Tiny paged + fault-injected trainer — the telemetry end-to-end
+    workload: one round exercises cohort sampling, fault draws, page-in
+    scatters, the fused dispatch and the deferred metrics fetch."""
+    import numpy as np
+
+    from repro.configs import get_config
+    from repro.core.editing import EditConfig
+    from repro.data.synthetic import (SyntheticTaskConfig,
+                                      make_federated_datasets)
+    from repro.federated import (FaultConfig, FederatedConfig,
+                                 FederatedTrainer)
+    from repro.optim import OptimizerConfig
+
+    tcfg = SyntheticTaskConfig(caption_len=8)
+    clients, gtest = make_federated_datasets(tcfg, 5, np.array([24] * 5))
+    fcfg = FederatedConfig(
+        num_clients=5, sample_rate=0.8, ranks=(4, 8, 8, 16, 8),
+        local_steps=1, batch_size=4, aggregator="fedilora",
+        edit=EditConfig(enabled=False), paged=True, store_slots=4,
+        faults=FaultConfig(enabled=True, dropout_rate=0.3,
+                           straggler_rate=0.2, corrupt_rate=0.2,
+                           byzantine_clients=(1,), seed=3))
+    return FederatedTrainer(get_config("fedbench-tiny"), fcfg,
+                            OptimizerConfig(peak_lr=3e-3, total_steps=20),
+                            clients, clients, gtest, seed=0,
+                            telemetry=telemetry)
+
+
+def quick_telemetry_check() -> dict:
+    """Telemetry invariants on a faulted PAGED federation (raises on any
+    violation):
+
+    * a trainer with DISABLED telemetry records zero spans and is bitwise-
+      invisible — dispatch counts, health counters and the global adapter
+      identical to a trainer built with no telemetry argument;
+    * an ENABLED trainer still matches (instrumentation adds no dispatches
+      and no syncs), its per-name span counts equal the dispatch counts
+      (``round_step``/``page_in``), its Chrome trace is well-formed and
+      its snapshot carries the pager hit rate + round-latency histogram.
+    """
+    import jax
+    import numpy as np
+
+    from repro.telemetry import Telemetry
+
+    def _run(tel):
+        tr = _build_faulted_paged_trainer(tel)
+        for _ in range(3):
+            tr.run_round()
+        return tr
+
+    tr0 = _run(None)                       # uninstrumented baseline
+    tel_off = Telemetry(enabled=False)
+    tr_off = _run(tel_off)
+    if tel_off.tracer.n_recorded != 0 or tel_off.tracer.counts:
+        raise RuntimeError("disabled telemetry recorded spans: "
+                           f"{dict(tel_off.tracer.counts)}")
+    if dict(tr_off.dispatch_count) != dict(tr0.dispatch_count):
+        raise RuntimeError(
+            "disabled telemetry changed dispatch counts: "
+            f"{dict(tr_off.dispatch_count)} != {dict(tr0.dispatch_count)}")
+
+    tel_on = Telemetry(enabled=True)
+    tr_on = _run(tel_on)
+    if dict(tr_on.dispatch_count) != dict(tr0.dispatch_count):
+        raise RuntimeError(
+            "enabled telemetry changed dispatch counts: "
+            f"{dict(tr_on.dispatch_count)} != {dict(tr0.dispatch_count)}")
+    if dict(tr_on.health) != dict(tr0.health):
+        raise RuntimeError("enabled telemetry changed health counters")
+    g0 = jax.device_get(tr0.server.global_lora)
+    g1 = jax.device_get(tr_on.server.global_lora)
+    for a, b in zip(jax.tree_util.tree_leaves(g0),
+                    jax.tree_util.tree_leaves(g1)):
+        if not np.array_equal(np.asarray(a), np.asarray(b)):
+            raise RuntimeError("enabled telemetry perturbed the global "
+                               "adapter (must be bitwise-invisible)")
+    for name, cnt in tr_on.dispatch_count.items():
+        if tel_on.tracer.counts.get(name, 0) != cnt:
+            raise RuntimeError(
+                f"span count for {name!r} = "
+                f"{tel_on.tracer.counts.get(name, 0)} != dispatch count "
+                f"{cnt}")
+    trace = tel_on.chrome_trace()
+    for ev in trace["traceEvents"]:
+        if ev["ph"] == "X" and (ev["ts"] < 0 or ev["dur"] < 0):
+            raise RuntimeError(f"malformed trace event: {ev}")
+    if trace["otherData"]["dropped_events"] != 0:
+        raise RuntimeError("quick workload overflowed the span ring")
+    if tel_on.tracer.counts.get("round") != 3:
+        raise RuntimeError("round spans missing from the timeline")
+    snap = tel_on.snapshot()
+    if "fed.clients.pager_hit_rate" not in snap["gauges"]:
+        raise RuntimeError("pager hit-rate gauge missing from snapshot")
+    if snap["histograms"]["fed.round_seconds"]["count"] != 3:
+        raise RuntimeError("round-latency histogram recorded "
+                           f"{snap['histograms']['fed.round_seconds']}")
+    if "fed_round_seconds" not in tel_on.prometheus():
+        raise RuntimeError("Prometheus exposition lacks the round summary")
+    return {"disabled": dict(tr_off.dispatch_count),
+            "enabled": dict(tr_on.dispatch_count),
+            "spans": {k: int(v) for k, v in tel_on.tracer.counts.items()}}
 
 
 def quick_check() -> dict:
@@ -674,15 +799,21 @@ def main(argv: list[str] | None = None) -> list[str]:
                     help="fault-mode dispatch asserts only (faulted rounds "
                          "stay one dispatch, globals stay finite; no "
                          "timing, no JSON)")
+    ap.add_argument("--quick-telemetry", action="store_true",
+                    help="telemetry invariants: disabled path is bitwise-"
+                         "invisible, enabled span counts == dispatch "
+                         "counts on a faulted paged round")
     args = ap.parse_args([] if argv is None else argv)
 
     if args.quick or args.quick_mesh or args.quick_population \
-            or args.quick_robust:
+            or args.quick_robust or args.quick_telemetry:
         counts = (quick_mesh_check() if args.quick_mesh
                   else quick_population_check() if args.quick_population
                   else quick_robust_check() if args.quick_robust
+                  else quick_telemetry_check() if args.quick_telemetry
                   else quick_check())
-        return [f"fedround/dispatch/{mode}/{name},0.0,{cnt}"
+        prefix = "telemetry" if args.quick_telemetry else "dispatch"
+        return [f"fedround/{prefix}/{mode}/{name},0.0,{cnt}"
                 for mode, cc in sorted(counts.items())
                 for name, cnt in sorted(cc.items())]
 

@@ -130,8 +130,13 @@ def _timed_rep(eng, requests) -> dict:
         "requests_per_sec": len(done) / wall,
         "p50_latency_s": _pctl([d["latency_s"] for d in done], 0.5),
         "p95_latency_s": _pctl([d["latency_s"] for d in done], 0.95),
+        "p99_latency_s": _pctl([d["latency_s"] for d in done], 0.99),
         "p50_ttft_s": _pctl([d["ttft_s"] for d in done], 0.5),
         "p95_ttft_s": _pctl([d["ttft_s"] for d in done], 0.95),
+        "p99_ttft_s": _pctl([d["ttft_s"] for d in done], 0.99),
+        "p50_queue_wait_s": _pctl([d["queue_wait_s"] for d in done], 0.5),
+        "p95_queue_wait_s": _pctl([d["queue_wait_s"] for d in done], 0.95),
+        "p99_queue_wait_s": _pctl([d["queue_wait_s"] for d in done], 0.99),
         "dispatch": dict(eng.dispatch_count),
     }
 
@@ -203,6 +208,25 @@ def _measure() -> dict:
         f"(P={p_fill} positions -> {-(-p_fill // PREFILL_CHUNK)} prefill "
         "dispatches per prompt); on accelerators the chunk also turns P "
         "serial matvec steps into matmul-shaped work")
+    # ---- telemetry artifact: one instrumented mixed-batch run -------------
+    # a fourth engine with tracing ON exports the Chrome trace-event
+    # timeline + metrics snapshot (incl. pager hit rate, p99 TTFT and
+    # queue-wait) proving the instrumented path serves the same workload
+    from repro.telemetry import Telemetry
+    tel = Telemetry(enabled=True)
+    eng_t = _engine(tr, continuous=True, telemetry=tel)
+    eng_t.run(requests())
+    trace = tel.chrome_trace()
+    snap = tel.snapshot()
+    out["telemetry"] = {
+        "span_counts": {k: int(v) for k, v in tel.tracer.counts.items()},
+        "trace_events": len(trace["traceEvents"]),
+        "dropped_events": trace["otherData"]["dropped_events"],
+        "snapshot": snap,
+        "dispatch_vs_spans_ok": all(
+            tel.tracer.counts.get(name, 0) == cnt
+            for name, cnt in eng_t.dispatch_count.items()),
+    }
     return out
 
 
@@ -269,6 +293,77 @@ def quick_prefill_check() -> dict:
     return {"prefill": _quick_prefill(tr, requests)}
 
 
+def quick_telemetry_check() -> dict:
+    """Telemetry invariants on the serving loop (raises on violation):
+
+    * a DISABLED engine records zero spans and is bitwise-invisible —
+      dispatch counts and generated tokens identical to an engine built
+      with no telemetry argument at all;
+    * an ENABLED engine still matches those dispatch counts and tokens
+      (instrumentation adds no dispatches and perturbs nothing), its
+      per-name span counts equal the dispatch counts, its Chrome trace is
+      well-formed and its snapshot carries pager hit rate + p99 TTFT.
+    """
+    import numpy as np
+
+    from repro.telemetry import Telemetry
+
+    tr, requests = _build(num_clients=3, local_steps=1)
+
+    def _run(tel):
+        eng = _engine(tr, continuous=True, slots=2,
+                      prefill_chunk=QUICK_PREFILL_CHUNK, telemetry=tel)
+        done = eng.run(requests())
+        toks = np.concatenate([np.asarray(d["tokens"]) for d in done])
+        return eng, done, toks
+
+    eng0, done0, toks0 = _run(None)          # uninstrumented baseline
+    tel_off = Telemetry(enabled=False)
+    eng_off, _, toks_off = _run(tel_off)
+    if tel_off.tracer.n_recorded != 0 or tel_off.tracer.counts:
+        raise RuntimeError("disabled telemetry recorded spans: "
+                           f"{dict(tel_off.tracer.counts)}")
+    if dict(eng_off.dispatch_count) != dict(eng0.dispatch_count):
+        raise RuntimeError(
+            "disabled telemetry changed dispatch counts: "
+            f"{dict(eng_off.dispatch_count)} != {dict(eng0.dispatch_count)}")
+    if not np.array_equal(toks_off, toks0):
+        raise RuntimeError("disabled telemetry changed generated tokens")
+
+    tel_on = Telemetry(enabled=True)
+    eng_on, done_on, toks_on = _run(tel_on)
+    if dict(eng_on.dispatch_count) != dict(eng0.dispatch_count):
+        raise RuntimeError(
+            "enabled telemetry changed dispatch counts: "
+            f"{dict(eng_on.dispatch_count)} != {dict(eng0.dispatch_count)}")
+    if not np.array_equal(toks_on, toks0):
+        raise RuntimeError("enabled telemetry changed generated tokens")
+    for name, cnt in eng_on.dispatch_count.items():
+        if tel_on.tracer.counts.get(name, 0) != cnt:
+            raise RuntimeError(
+                f"span count for {name!r} = "
+                f"{tel_on.tracer.counts.get(name, 0)} != dispatch count "
+                f"{cnt}")
+    trace = tel_on.chrome_trace()
+    for ev in trace["traceEvents"]:
+        if ev["ph"] == "X" and (ev["ts"] < 0 or ev["dur"] < 0):
+            raise RuntimeError(f"malformed trace event: {ev}")
+    if trace["otherData"]["dropped_events"] != 0:
+        raise RuntimeError("quick workload overflowed the span ring")
+    snap = tel_on.snapshot()
+    if "serving.adapters.pager_hit_rate" not in snap["gauges"]:
+        raise RuntimeError("pager hit-rate gauge missing from snapshot")
+    if not snap["histograms"]["serving.ttft_seconds"]["count"]:
+        raise RuntimeError("TTFT histogram recorded nothing")
+    if "queue_wait_s" not in done_on[0]:
+        raise RuntimeError("completion records lack queue_wait_s")
+    if "serving_ttft_seconds" not in tel_on.prometheus():
+        raise RuntimeError("Prometheus exposition lacks TTFT summary")
+    return {"disabled": dict(eng_off.dispatch_count),
+            "enabled": dict(eng_on.dispatch_count),
+            "spans": {k: int(v) for k, v in tel_on.tracer.counts.items()}}
+
+
 def main(argv: list[str] | None = None) -> list[str]:
     """Spawn the measurement subprocess, append to BENCH_serving.json's
     history, return CSV lines.  ``--quick``: dispatch-count check only,
@@ -278,7 +373,16 @@ def main(argv: list[str] | None = None) -> list[str]:
                     help="dispatch-count check only (no timing, no JSON)")
     ap.add_argument("--quick-prefill", action="store_true",
                     help="chunked-prefill dispatch-count check only")
+    ap.add_argument("--quick-telemetry", action="store_true",
+                    help="telemetry invariants: disabled path is bitwise-"
+                         "invisible, enabled span counts == dispatch counts")
     args = ap.parse_args([] if argv is None else argv)
+
+    if args.quick_telemetry:
+        counts = quick_telemetry_check()
+        return [f"serving/telemetry/{mode}/{name},0.0,{cnt}"
+                for mode, cc in sorted(counts.items())
+                for name, cnt in sorted(cc.items())]
 
     if args.quick or args.quick_prefill:
         counts = quick_prefill_check() if args.quick_prefill else \

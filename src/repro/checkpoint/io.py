@@ -5,7 +5,7 @@ bit-equality)."""
 
 from __future__ import annotations
 
-import collections
+import contextlib
 import json
 import os
 from typing import Any
@@ -52,7 +52,23 @@ def load_pytree(path: str) -> Pytree:
     return root
 
 
+def _trainer_span(trainer, name: str):
+    """Checkpoint I/O span on the trainer's telemetry (no-op for trainers
+    predating the telemetry layer, or with tracing disabled)."""
+    tel = getattr(trainer, "telemetry", None)
+    if tel is None:
+        return contextlib.nullcontext()
+    return tel.span(name, cat="io")
+
+
 def save_federated(dirpath: str, trainer) -> None:
+    """Spanned wrapper over :func:`_save_federated_impl` (``checkpoint_save``
+    in the trainer's trace timeline)."""
+    with _trainer_span(trainer, "checkpoint_save"):
+        _save_federated_impl(dirpath, trainer)
+
+
+def _save_federated_impl(dirpath: str, trainer) -> None:
     """Persist server + per-client adapter state of a FederatedTrainer.
 
     Works across all round drivers: a pending pipelined round is drained
@@ -147,6 +163,13 @@ def save_federated(dirpath: str, trainer) -> None:
 
 
 def load_federated(dirpath: str, trainer) -> None:
+    """Spanned wrapper over :func:`_load_federated_impl` (``checkpoint_load``
+    in the trainer's trace timeline)."""
+    with _trainer_span(trainer, "checkpoint_load"):
+        _load_federated_impl(dirpath, trainer)
+
+
+def _load_federated_impl(dirpath: str, trainer) -> None:
     """Restore a ``save_federated`` snapshot into ``trainer``.  Checkpoint
     format and trainer mode cross freely: a paged checkpoint stores only
     MATERIALISED clients (meta ``materialized``) — missing clients are
@@ -207,9 +230,12 @@ def load_federated(dirpath: str, trainer) -> None:
 
     trainer._inflight = [_entry(e) for e in meta.get("async_inflight", [])]
     trainer._buffer = [_entry(e) for e in meta.get("async_buffer", [])]
-    # cumulative health counters (absent on pre-robustness checkpoints)
+    # cumulative health counters (absent on pre-robustness checkpoints).
+    # Mutate in place rather than rebind: trainer.health is the live
+    # Counter the telemetry registry adopted — rebinding would detach it
     if hasattr(trainer, "health"):
-        trainer.health = collections.Counter(meta.get("health", {}))
+        trainer.health.clear()
+        trainer.health.update(meta.get("health", {}))
     # host RNG streams (absent on old checkpoints: streams stay wherever
     # the receiving trainer left them — state restore is still exact)
     if "rng_state" in meta:

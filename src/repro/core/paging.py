@@ -14,7 +14,16 @@ scatter / write-back gather and consult the pager for placement:
 * :meth:`pin` / :meth:`unpin` — pinned ids are never evicted (in-flight
   serving requests; federated cohorts between dispatch and retirement);
 * :meth:`touch` — refresh an id's LRU recency;
+* :meth:`hit` — touch + count one residency hit (callers' resident path);
 * :meth:`drop` — forget an id (explicit overwrite / invalidation).
+
+Hit/miss/eviction accounting: ``hits`` counts :meth:`hit` calls, ``misses``
+counts successful :meth:`assign` placements (a rejected assign — all slots
+pinned — counts NOTHING: no eviction happened, and the caller retries the
+same id later), ``evictions`` counts LRU displacements.  Both stores
+(``AdapterStore``, ``ClientStateStore``) surface these identically through
+their ``paging_stats`` property; the telemetry registry exports them as
+pager hit-rate gauges.
 
 Everything is O(residents) at worst and host-only, so the protocol adds no
 device syncs to any hot path.
@@ -46,6 +55,8 @@ class LRUPager:
         self.lru: dict[Hashable, int] = {}          # resident id -> last tick
         self.tick = 0
         self.evictions = 0
+        self.hits = 0
+        self.misses = 0
 
     # ------------------------------------------------------------- queries
     @property
@@ -58,10 +69,22 @@ class LRUPager:
     def pinned(self, ident: Hashable) -> bool:
         return self.pins.get(ident, 0) > 0
 
+    def stats(self) -> dict:
+        """Hit/miss/eviction accounting (shared ``paging_stats`` schema)."""
+        total = self.hits + self.misses
+        return {"hits": self.hits, "misses": self.misses,
+                "evictions": self.evictions,
+                "hit_rate": self.hits / total if total else 0.0}
+
     # ----------------------------------------------------------- mutation
     def touch(self, ident: Hashable) -> None:
         self.tick += 1
         self.lru[ident] = self.tick
+
+    def hit(self, ident: Hashable) -> None:
+        """Touch a resident id and count the residency hit."""
+        self.hits += 1
+        self.touch(ident)
 
     def pin(self, ident: Hashable) -> None:
         if ident not in self.slot_of:
@@ -101,6 +124,9 @@ class LRUPager:
             slot = self.slot_of[evicted]
             self.drop(evicted)
             self.evictions += 1
+        # counted only on successful placement: a pinned-full rejection
+        # (raise above) leaves hit/miss/eviction accounting untouched
+        self.misses += 1
         self.slot_of[ident] = slot
         self.id_at[slot] = ident
         self.touch(ident)

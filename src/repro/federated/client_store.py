@@ -44,6 +44,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.paging import LRUPager
+from repro.telemetry import Telemetry
 
 Pytree = Any
 
@@ -74,7 +75,8 @@ class ClientStateStore:
                  data: list[dict], batch_keys: list[str],
                  dispatch_count: collections.Counter | None = None,
                  host_slots: int | None = None,
-                 spill_dir: str | None = None):
+                 spill_dir: str | None = None,
+                 telemetry: Telemetry | None = None):
         if host_slots is not None and spill_dir is None:
             raise ValueError("host_slots needs spill_dir (a cold tier to "
                              "spill cold host adapters into)")
@@ -90,6 +92,14 @@ class ClientStateStore:
         self.spill_dir = spill_dir
         self.dispatch_count = (collections.Counter()
                                if dispatch_count is None else dispatch_count)
+        # a store built without telemetry gets its own disabled instance —
+        # never a shared singleton (registries must not leak across trainers)
+        self.telemetry = (telemetry if telemetry is not None
+                          else Telemetry(enabled=False))
+        m = self.telemetry.metrics
+        for key in ("hits", "misses", "evictions", "spills", "hit_rate"):
+            m.gauge_fn(f"fed.clients.pager_{key}",
+                       lambda k=key: float(self.paging_stats[k]))
         # device banks (built lazily from the first materialised adapter)
         self.lora_bank: Pytree | None = None     # [S, ...]
         self.ranks_bank = None                   # [S] i32
@@ -117,6 +127,12 @@ class ClientStateStore:
     @property
     def evictions(self) -> int:
         return self.pager.evictions
+
+    @property
+    def paging_stats(self) -> dict:
+        """Pager hit/miss/eviction/spill accounting — same schema as
+        ``AdapterStore.paging_stats``."""
+        return dict(self.pager.stats(), spills=self.spills)
 
     @property
     def resident_ids(self) -> list[int]:
@@ -175,13 +191,15 @@ class ClientStateStore:
 
     def _spill(self, k: int) -> None:
         from repro.checkpoint.io import save_pytree
-        tree = self._flush_entry(k)
-        os.makedirs(self.spill_dir, exist_ok=True)
-        save_pytree(os.path.join(self.spill_dir, f"client_{k}.npz"), tree)
-        self._spilled.add(k)
-        del self._host_lora[k]
-        del self._host_lru[k]
-        self.spills += 1
+        with self.telemetry.span("spill", cat="paging", client=k):
+            tree = self._flush_entry(k)
+            os.makedirs(self.spill_dir, exist_ok=True)
+            save_pytree(os.path.join(self.spill_dir, f"client_{k}.npz"),
+                        tree)
+            self._spilled.add(k)
+            del self._host_lora[k]
+            del self._host_lru[k]
+            self.spills += 1
 
     def _flush_entry(self, k: int) -> Pytree:
         """Numpy-ify a host entry (device-captured rows block here — the
@@ -231,10 +249,11 @@ class ClientStateStore:
         """Asynchronous eviction write-back: gather the (dirty) bank row as
         device arrays — enqueued on the stream, reading the post-round bank
         without a host sync; numpy conversion is deferred to flush()."""
-        self._host_set(k, jax.tree_util.tree_map(
-            lambda x: x[slot], self.lora_bank))
-        self._pending_rank[k] = self.ranks_bank[slot]
-        self._dirty.discard(k)
+        with self.telemetry.span("evict_capture", cat="paging", client=k):
+            self._host_set(k, jax.tree_util.tree_map(
+                lambda x: x[slot], self.lora_bank))
+            self._pending_rank[k] = self.ranks_bank[slot]
+            self._dirty.discard(k)
 
     def acquire_cohort(self, ids: Iterable[int]) -> np.ndarray:
         """Pin the cohort into bank slots; returns ``[C]`` slot indices.
@@ -245,30 +264,38 @@ class ClientStateStore:
             raise ValueError(
                 f"cohort of {len(ids)} exceeds the {self.slots}-slot device "
                 "bank; grow FederatedConfig.store_slots")
-        slots_out, cold = [], []
-        for k in ids:
-            slot = self.pager.lookup(k)
-            if slot is None:
-                if self.lora_bank is None:
-                    self._build_banks(self.host_adapter(k))
-                slot, evicted = self.pager.assign(k)
-                if evicted is not None and (
-                        evicted in self._dirty
-                        or (evicted not in self._host_lora
-                            and evicted not in self._spilled)):
-                    self._capture(evicted, slot)
-                cold.append((k, slot))
-            else:
-                self.pager.touch(k)
-            self.pager.pin(k)
-            slots_out.append(slot)
-        if cold:
-            self._page_in(cold)
-        self.peak_resident = max(self.peak_resident,
-                                 len(self.pager.slot_of))
+        with self.telemetry.span("acquire_cohort", cat="paging",
+                                 cohort=len(ids)):
+            slots_out, cold = [], []
+            for k in ids:
+                slot = self.pager.lookup(k)
+                if slot is None:
+                    if self.lora_bank is None:
+                        self._build_banks(self.host_adapter(k))
+                    slot, evicted = self.pager.assign(k)
+                    if evicted is not None and (
+                            evicted in self._dirty
+                            or (evicted not in self._host_lora
+                                and evicted not in self._spilled)):
+                        self._capture(evicted, slot)
+                    cold.append((k, slot))
+                else:
+                    self.pager.hit(k)
+                self.pager.pin(k)
+                slots_out.append(slot)
+            if cold:
+                self._page_in(cold)
+            self.peak_resident = max(self.peak_resident,
+                                     len(self.pager.slot_of))
         return np.asarray(slots_out, np.int32)
 
     def _page_in(self, cold: list[tuple[int, int]]) -> None:
+        # span name matches the dispatch_count key on purpose — the
+        # --quick-telemetry bench asserts tracer counts == dispatch counts
+        with self.telemetry.span("page_in", cat="dispatch", rows=len(cold)):
+            self._page_in_body(cold)
+
+    def _page_in_body(self, cold: list[tuple[int, int]]) -> None:
         ks = [k for k, _ in cold]
         slots = jnp.asarray([s for _, s in cold], jnp.int32)
         rows = {
@@ -358,14 +385,16 @@ class ClientStateStore:
         (rows stay resident and become clean) and numpy-ify deferred
         eviction captures.  After flush, ``host_adapter(k)`` is current for
         every materialised client."""
-        for k in sorted(self._dirty):
-            slot = self.pager.lookup(k)
-            self._host_set(k, jax.tree_util.tree_map(
-                lambda x: x[slot], self.lora_bank))
-            self._pending_rank[k] = self.ranks_bank[slot]
-        self._dirty.clear()
-        for k in list(self._host_lora):
-            self._flush_entry(k)
+        with self.telemetry.span("store_flush", cat="paging",
+                                 dirty=len(self._dirty)):
+            for k in sorted(self._dirty):
+                slot = self.pager.lookup(k)
+                self._host_set(k, jax.tree_util.tree_map(
+                    lambda x: x[slot], self.lora_bank))
+                self._pending_rank[k] = self.ranks_bank[slot]
+            self._dirty.clear()
+            for k in list(self._host_lora):
+                self._flush_entry(k)
 
     def invalidate(self) -> None:
         """Forget all residency and materialised host state (checkpoint

@@ -143,6 +143,7 @@ from repro.metrics import corpus_scores
 from repro.models import transformer as T
 from repro.models.config import ModelConfig
 from repro.optim import OptimizerConfig, make_optimizer
+from repro.telemetry import Telemetry
 
 Pytree = Any
 
@@ -239,7 +240,8 @@ class FederatedTrainer:
                  client_eval: list[dict], global_test: dict,
                  base_params: Pytree | None = None, seed: int = 0,
                  client_mesh: "jax.sharding.Mesh | None" = None,
-                 mesh: "jax.sharding.Mesh | None" = None):
+                 mesh: "jax.sharding.Mesh | None" = None,
+                 telemetry: Telemetry | None = None):
         """``mesh``: optional device mesh the round engines run over —
         either 1-D (any axis name; sampled clients split over it, exactly
         the old ``client_mesh`` behaviour, bit-identical) or 2-D with axes
@@ -270,8 +272,15 @@ class FederatedTrainer:
         self.server = ServerState(global_lora=g0,
                                   prev_global=jax.tree_util.tree_map(jnp.copy, g0))
         # every jitted dispatch is tallied here by name — the benchmark's
-        # --quick modes and the tier-2 smoke test assert on these counts
-        self.dispatch_count: collections.Counter = collections.Counter()
+        # --quick modes and the tier-2 smoke test assert on these counts.
+        # The counter lives in the telemetry registry (counter_group keeps
+        # it a real collections.Counter, so all existing call sites and
+        # asserts are untouched); a trainer built without telemetry= gets a
+        # private disabled bundle — spans no-op, the counter still counts
+        self.telemetry = (telemetry if telemetry is not None
+                          else Telemetry(enabled=False))
+        self.dispatch_count: collections.Counter = \
+            self.telemetry.metrics.counter_group("fed.dispatch")
         self.client_ranks = np.asarray(fed_cfg.ranks, np.int32)   # host mirror
         sizes = np.asarray([d["tokens"].shape[0] for d in client_train],
                            np.float32)
@@ -320,7 +329,8 @@ class FederatedTrainer:
                 data=client_train, batch_keys=keys,
                 dispatch_count=self.dispatch_count,
                 host_slots=fed_cfg.store_host_slots,
-                spill_dir=fed_cfg.store_spill_dir)
+                spill_dir=fed_cfg.store_spill_dir,
+                telemetry=self.telemetry)
             self.stacked_lora = None
             self._stacked_data = None
             self._ranks_dev = None
@@ -382,8 +392,22 @@ class FederatedTrainer:
                                if fed_cfg.faults.active else None)
         # cumulative health counters (n_dropped / n_forfeited / n_deferred /
         # n_corrupted / n_nonfinite / clip_rate_sum / fault_rounds) — per-
-        # round values ride the existing single metrics fetch
-        self.health: collections.Counter = collections.Counter()
+        # round values ride the existing single metrics fetch; like
+        # dispatch_count, a real Counter adopted by the registry
+        self.health: collections.Counter = \
+            self.telemetry.metrics.counter_group("fed.health")
+        # round/step latency distributions and cheap callback gauges — all
+        # host-side reads of state the trainer keeps anyway
+        m = self.telemetry.metrics
+        self._h_round = m.histogram("fed.round_seconds")
+        self._h_client_step = m.histogram("fed.client_step_seconds")
+        m.gauge_fn("fed.server_round", lambda: float(len(self.history)))
+        m.gauge_fn("fed.async_buffer_fill",
+                   lambda: float(len(self._buffer)))
+        m.gauge_fn("fed.async_inflight", lambda: float(len(self._inflight)))
+        m.gauge_fn("fed.client_step_ema_mean",
+                   lambda: float(self.client_step_ema[self._ema_seen].mean())
+                   if self._ema_seen.any() else 0.0)
 
     # ------------------------------------------------------------------ local
     def _local_train_impl(self, base_params, lora, rank, batches):
@@ -448,6 +472,7 @@ class FederatedTrainer:
         if path is not None and path not in self._measure_warm:
             self._measure_warm.add(path)
             return
+        self._h_client_step.observe(seconds)
         beta = self.fcfg.delay_ema_beta
         for k in np.atleast_1d(np.asarray(clients, np.int64)):
             if self._ema_seen[k]:
@@ -623,9 +648,14 @@ class FederatedTrainer:
         return self._round_step
 
     def _dispatch(self, name: str, fn, *args):
-        """Invoke a jitted callable, tallying it in ``dispatch_count``."""
+        """Invoke a jitted callable, tallying it in ``dispatch_count`` and
+        spanning the host enqueue (the span name IS the dispatch-count key —
+        bench --quick-telemetry asserts the two tallies agree).  Dispatch is
+        asynchronous, so the span measures enqueue, not device time; no
+        sync is added."""
         self.dispatch_count[name] += 1
-        return fn(*args)
+        with self.telemetry.span(name, cat="dispatch"):
+            return fn(*args)
 
     def _fault_cohort(self, round_idx: int, sampled: list[int]) -> dict:
         """Draw one cohort's fault operands from the schedule, feeding the
@@ -633,18 +663,23 @@ class FederatedTrainer:
         carry NaN — the schedule ignores them) and accumulating the host-
         side corruption count (corruption is invisible to the device-side
         health guards unless it produces non-finite values)."""
-        ema = np.where(self._ema_seen, self.client_step_ema, np.nan)
-        co = self.fault_schedule.cohort(round_idx, sampled, step_ema=ema)
-        self.health["n_corrupted"] += int(co["n_corrupted"])
-        return co
+        with self.telemetry.span("fault_draw", cat="fed",
+                                 round=round_idx, cohort=len(sampled)):
+            ema = np.where(self._ema_seen, self.client_step_ema, np.nan)
+            co = self.fault_schedule.cohort(round_idx, sampled, step_ema=ema)
+            self.health["n_corrupted"] += int(co["n_corrupted"])
+            return co
 
     def _build_round_inputs(self) -> tuple[list[int], np.ndarray]:
         """Host-side client sampling + per-client batch-index build — pure
         host work, free to overlap the device execution of an in-flight
         round."""
-        sampled = self._sample_clients()
-        batch_idx = np.stack([self._batch_indices(self.clients[k])
-                              for k in sampled])
+        with self.telemetry.span("sample_cohort", cat="fed"):
+            sampled = self._sample_clients()
+        with self.telemetry.span("build_batch_indices", cat="fed",
+                                 cohort=len(sampled)):
+            batch_idx = np.stack([self._batch_indices(self.clients[k])
+                                  for k in sampled])
         return sampled, batch_idx
 
     def _enqueue_round(self, sampled: list[int],
@@ -710,7 +745,8 @@ class FederatedTrainer:
         fetch = {"metrics": out["metrics"], "ranks": out["ranks"]}
         if "health" in out:        # faults active: health rides the SAME sync
             fetch["health"] = out["health"]
-        fetched = jax.device_get(fetch)
+        with self.telemetry.span("metrics_fetch", cat="fed", round=round_no):
+            fetched = jax.device_get(fetch)
         if slots is None:
             self.client_ranks = np.asarray(fetched["ranks"])
         else:
@@ -735,11 +771,16 @@ class FederatedTrainer:
     def run_round(self) -> dict:
         """One communication round = ONE fused jit dispatch (see module
         docstring).  Exactly one host sync: the deferred metrics fetch."""
-        self.flush_rounds()                # drain any pipelined round first
-        sampled, batch_idx = self._build_round_inputs()
-        out = self._enqueue_round(sampled, batch_idx)
-        return self._fetch_round_record(self.server.round, sampled, out,
-                                        self._last_slots)
+        t0 = time.perf_counter()
+        with self.telemetry.span("round", cat="fed",
+                                 round=self.server.round):
+            self.flush_rounds()            # drain any pipelined round first
+            sampled, batch_idx = self._build_round_inputs()
+            out = self._enqueue_round(sampled, batch_idx)
+            rec = self._fetch_round_record(self.server.round, sampled, out,
+                                           self._last_slots)
+        self._h_round.observe(time.perf_counter() - t0)
+        return rec
 
     def run_round_pipelined(self) -> dict | None:
         """Pipelined round: build round t's host inputs (sampling + batch
@@ -750,10 +791,15 @@ class FederatedTrainer:
         never blocks on the round dispatched in the same call — only on the
         previous one, which the host work just overlapped.  See the module
         docstring."""
-        sampled, batch_idx = self._build_round_inputs()
-        rec = self.flush_rounds()
-        out = self._enqueue_round(sampled, batch_idx)
-        self._pending = (self.server.round, sampled, out, self._last_slots)
+        t0 = time.perf_counter()
+        with self.telemetry.span("round_pipelined", cat="fed",
+                                 round=self.server.round):
+            sampled, batch_idx = self._build_round_inputs()
+            rec = self.flush_rounds()
+            out = self._enqueue_round(sampled, batch_idx)
+            self._pending = (self.server.round, sampled, out,
+                             self._last_slots)
+        self._h_round.observe(time.perf_counter() - t0)
         return rec
 
     def flush_rounds(self) -> dict | None:
@@ -814,6 +860,13 @@ class FederatedTrainer:
         return self._merge_step
 
     def run_round_async(self) -> dict:
+        """One spanned tick of the buffered asynchronous timeline (see
+        :meth:`_run_round_async_impl` for the mechanics)."""
+        with self.telemetry.span("async_tick", cat="fed",
+                                 tick=self._async_tick):
+            return self._run_round_async_impl()
+
+    def _run_round_async_impl(self) -> dict:
         """One tick of the buffered asynchronous (FedBuff-style) timeline:
 
         1. dispatch a fresh cohort of ``n_sample`` idle clients against the

@@ -41,6 +41,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.paging import LRUPager
+from repro.telemetry import Telemetry
 
 Pytree = Any
 
@@ -68,7 +69,7 @@ class AdapterStore:
 
     def __init__(self, *, slots: int, rank: int,
                  dispatch_count: collections.Counter | None = None,
-                 mesh=None):
+                 mesh=None, telemetry: Telemetry | None = None):
         self.slots = slots
         self.rank = rank
         # optional serving mesh: the bank's slot axis shards over "data"
@@ -82,6 +83,24 @@ class AdapterStore:
         self.loads = 0
         self.dispatch_count = (collections.Counter()
                                if dispatch_count is None else dispatch_count)
+        self.telemetry = Telemetry(enabled=False)
+        if telemetry is not None:
+            self.use_telemetry(telemetry)
+
+    def use_telemetry(self, telemetry: Telemetry) -> None:
+        """Adopt a telemetry bundle (an engine sharing its own calls this
+        so one registry sees both engine and store metrics)."""
+        self.telemetry = telemetry
+        m = telemetry.metrics
+        for key in ("hits", "misses", "evictions", "spills", "hit_rate"):
+            m.gauge_fn(f"serving.adapters.pager_{key}",
+                       lambda k=key: float(self.paging_stats[k]))
+
+    @property
+    def paging_stats(self) -> dict:
+        """Pager hit/miss/eviction accounting — same schema as
+        ``ClientStateStore.paging_stats`` (read-only bank: spills == 0)."""
+        return dict(self._pager.stats(), spills=0)
 
     # legacy aliases (tests and older callers poke these directly)
     @property
@@ -198,13 +217,17 @@ class AdapterStore:
         slot = self._pager.lookup(adapter_id)
         if slot is None:
             slot, _ = self._pager.assign(adapter_id)
-            self.dispatch_count["adapter_load"] += 1
-            self._stack = jax.tree_util.tree_map(
-                lambda s, h: s.at[slot].set(jnp.asarray(h)),
-                self.stack, self._host[adapter_id])
-            self._scan_stack = None        # derived copy is now stale
-            self.loads += 1
-        self._pager.touch(adapter_id)
+            # span name == dispatch key (quick-telemetry parity check)
+            with self.telemetry.span("adapter_load", cat="dispatch",
+                                     adapter=str(adapter_id)):
+                self.dispatch_count["adapter_load"] += 1
+                self._stack = jax.tree_util.tree_map(
+                    lambda s, h: s.at[slot].set(jnp.asarray(h)),
+                    self.stack, self._host[adapter_id])
+                self._scan_stack = None    # derived copy is now stale
+                self.loads += 1
+        else:
+            self._pager.hit(adapter_id)
         self._pager.pin(adapter_id)
         return slot
 

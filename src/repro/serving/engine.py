@@ -63,6 +63,7 @@ free — the classic serve-a-batch-then-drain baseline that
 from __future__ import annotations
 
 import collections
+import contextlib
 import dataclasses
 import itertools
 import time
@@ -79,6 +80,7 @@ from repro.models import transformer as T
 from repro.models.config import ModelConfig
 
 from repro.serving.adapter_store import AdapterStore
+from repro.telemetry import Telemetry
 
 Pytree = Any
 _UIDS = itertools.count()
@@ -110,6 +112,7 @@ class Request:
     vision: np.ndarray | None = None   # f32 [P, Dv]
     uid: int = dataclasses.field(default_factory=lambda: next(_UIDS))
     submitted_at: float = 0.0
+    admitted_at: float | None = None
     first_token_at: float | None = None
 
 
@@ -132,7 +135,8 @@ class ServingEngine:
                  prefill_flash: bool | None = None,
                  lora_backend: str = "gather",
                  sampling: SamplingConfig | None = None,
-                 sample_seed: int = 0, mesh=None):
+                 sample_seed: int = 0, mesh=None,
+                 telemetry: Telemetry | None = None):
         """``mesh``: optional serving mesh — a 1-D ``("data",)`` mesh
         shards the SLOT axis (decode-cache batch rows, slot-state rows,
         adapter bank) over its devices via ``sharding.cache_spec`` /
@@ -287,6 +291,20 @@ class ServingEngine:
         # lengths and the max-⌈P/chunk⌉ dispatches that covered them all
         self.prefill_bursts: list[dict] = []
         self.dispatch_count: collections.Counter = store.dispatch_count
+        self.telemetry = (telemetry if telemetry is not None
+                          else Telemetry(enabled=False))
+        if telemetry is not None and not store.telemetry.enabled:
+            store.use_telemetry(telemetry)   # one registry for both
+        m = self.telemetry.metrics
+        m.counter_group("serving.dispatch", self.dispatch_count)
+        self._h_ttft = m.histogram("serving.ttft_seconds")
+        self._h_latency = m.histogram("serving.latency_seconds")
+        self._h_queue_wait = m.histogram("serving.queue_wait_seconds")
+        self._c_tokens = m.counter("serving.generated_tokens")
+        self._c_completed = m.counter("serving.completed_requests")
+        m.gauge_fn("serving.queue_depth", lambda: float(len(self.queue)))
+        m.gauge_fn("serving.slot_occupancy",
+                   lambda: len(self.busy_slots) / self.max_slots)
 
     # ------------------------------------------------------------ step fns
     def _build_step(self):
@@ -403,7 +421,8 @@ class ServingEngine:
                     f"request {req.uid}: vision-prefix engine needs vision "
                     f"patches of shape {want}, got {got}")
         req.submitted_at = time.perf_counter()
-        req.first_token_at = None        # resubmittable: per-run field
+        req.admitted_at = None           # resubmittable: per-run fields
+        req.first_token_at = None
         self.queue.append(req)
         return req.uid
 
@@ -414,6 +433,12 @@ class ServingEngine:
         admitted = 0
         newly: list[int] = []   # slots admitted this call (one prefill burst)
         free = [s for s in range(self.max_slots) if self._requests[s] is None]
+        # a burst span only when there is actually admission work — an idle
+        # engine step records nothing
+        burst = (self.telemetry.span("admit_burst", cat="serving",
+                                     queued=len(self.queue), free=len(free))
+                 if self.queue and free else contextlib.nullcontext())
+        burst.__enter__()
         while self.queue and free:
             req = self.queue[0]
             try:
@@ -435,18 +460,23 @@ class ServingEngine:
                 rng = jax.random.fold_in(
                     jax.random.PRNGKey(self.sample_seed), req.uid)
             self.dispatch_count["serve_admit"] += 1
-            self._state, self._cache = self._admit_fn(
-                self.params, self._state, self._cache,
-                jnp.asarray(slot, jnp.int32), jnp.asarray(ptoks), vis,
-                jnp.asarray(bank_slot, jnp.int32),
-                jnp.asarray(plen, jnp.int32), jnp.asarray(tlen, jnp.int32),
-                rng)
+            with self.telemetry.span("serve_admit", cat="dispatch",
+                                     uid=req.uid, slot=slot):
+                self._state, self._cache = self._admit_fn(
+                    self.params, self._state, self._cache,
+                    jnp.asarray(slot, jnp.int32), jnp.asarray(ptoks), vis,
+                    jnp.asarray(bank_slot, jnp.int32),
+                    jnp.asarray(plen, jnp.int32),
+                    jnp.asarray(tlen, jnp.int32), rng)
+            req.admitted_at = time.perf_counter()
+            self._h_queue_wait.observe(req.admitted_at - req.submitted_at)
             self._requests[slot] = req
             self._pos_h[slot] = 0
             self._plen_h[slot] = plen
             self._tlen_h[slot] = tlen
             newly.append(slot)
             admitted += 1
+        burst.__exit__(None, None, None)
         if self.prefill_chunk is not None and newly:
             # SHARED chunked prefill: one burst of max_s ⌈P_s/chunk⌉
             # dispatches fills EVERY slot admitted this step together (the
@@ -460,15 +490,19 @@ class ServingEngine:
             n_disp = max(-(-f // self.prefill_chunk) for f in fills)
             self.prefill_bursts.append(
                 {"fills": fills, "dispatches": n_disp})
-            for _ in range(n_disp):
-                self.dispatch_count["serve_prefill"] += 1
-                with warnings.catch_warnings():
-                    warnings.filterwarnings(
-                        "ignore",
-                        message="Some donated buffers were not usable")
-                    self._state, self._cache = self._prefill_fn(
-                        self.params, self.store.scan_stack, self._state,
-                        self._cache)
+            with self.telemetry.span("prefill_burst", cat="serving",
+                                     slots=len(newly), dispatches=n_disp):
+                for _ in range(n_disp):
+                    self.dispatch_count["serve_prefill"] += 1
+                    with self.telemetry.span("serve_prefill",
+                                             cat="dispatch"), \
+                         warnings.catch_warnings():
+                        warnings.filterwarnings(
+                            "ignore",
+                            message="Some donated buffers were not usable")
+                        self._state, self._cache = self._prefill_fn(
+                            self.params, self.store.scan_stack, self._state,
+                            self._cache)
             for s, n_fill in zip(newly, fills):
                 self._pos_h[s] = n_fill
         return admitted
@@ -478,7 +512,8 @@ class ServingEngine:
         if not done:
             return []
         self.dispatch_count["fetch"] += 1
-        gen_rows = jax.device_get(self._state["gen"][np.asarray(done)])
+        with self.telemetry.span("fetch", cat="dispatch", rows=len(done)):
+            gen_rows = jax.device_get(self._state["gen"][np.asarray(done)])
         out = []
         now = time.perf_counter()
         for i, s in enumerate(done):
@@ -487,10 +522,18 @@ class ServingEngine:
             self._requests[s] = None
             self._plen_h[s] = 0
             self._tlen_h[s] = 0
-            out.append({"uid": req.uid, "adapter_id": req.adapter_id,
-                        "tokens": np.asarray(gen_rows[i][:req.gen_len]),
-                        "latency_s": now - req.submitted_at,
-                        "ttft_s": req.first_token_at - req.submitted_at})
+            rec = {"uid": req.uid, "adapter_id": req.adapter_id,
+                   "tokens": np.asarray(gen_rows[i][:req.gen_len]),
+                   "latency_s": now - req.submitted_at,
+                   "ttft_s": req.first_token_at - req.submitted_at,
+                   "queue_wait_s": req.admitted_at - req.submitted_at}
+            out.append(rec)
+            self._h_latency.observe(rec["latency_s"])
+            self._h_ttft.observe(rec["ttft_s"])
+            self._c_tokens.inc(req.gen_len)
+            self._c_completed.inc()
+            self.telemetry.instant("request_complete", cat="serving",
+                                   uid=req.uid)
         self.completed.extend(out)
         return out
 
@@ -504,7 +547,9 @@ class ServingEngine:
             return []
         self.dispatch_count["serve_step"] += 1
         self.steps += 1
-        with warnings.catch_warnings():
+        with self.telemetry.span("serve_step", cat="dispatch",
+                                 slots=len(busy)), \
+             warnings.catch_warnings():
             warnings.filterwarnings(
                 "ignore", message="Some donated buffers were not usable")
             self._state, self._cache = self._step_fn(

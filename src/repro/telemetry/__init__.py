@@ -1,0 +1,77 @@
+"""Unified telemetry: host span tracing, a metrics registry, and
+Perfetto/Prometheus exporters — the measurement layer under the federated
+and serving runtimes.
+
+One :class:`Telemetry` object bundles a :class:`~repro.telemetry.trace.
+SpanTracer` and a :class:`~repro.telemetry.metrics.MetricsRegistry` and is
+threaded through ``FederatedTrainer(telemetry=...)``,
+``ServingEngine(telemetry=...)`` and the stores.  Everything it records is
+host-side only: spans time host phases (including the host *enqueue* of
+asynchronous jit dispatches), metrics absorb the pre-existing
+``dispatch_count`` / ``health`` Counters plus pager hit rates, queue
+depth, TTFT/latency/queue-wait histograms.  It therefore adds ZERO host
+syncs and ZERO extra dispatches — the dispatch-count regression tests pass
+with telemetry enabled or disabled, bit-identically.
+
+Enablement gates the *tracer* (``enabled=False`` makes ``span()`` a shared
+no-op); the metrics registry is always live because its counters predate
+this module (see ``metrics.py``).  Runtimes constructed without a
+``telemetry=`` argument get their own private disabled instance, so
+registries are never accidentally shared across trainers/engines.
+
+Typical use::
+
+    tel = Telemetry(enabled=True)
+    trainer = FederatedTrainer(..., telemetry=tel)
+    trainer.run_round()
+    tel.save_chrome_trace("round.trace.json")   # open in ui.perfetto.dev
+    print(tel.prometheus())                     # scrape-style snapshot
+"""
+
+from __future__ import annotations
+
+from repro.telemetry.export import (chrome_trace, prometheus_text,
+                                    save_chrome_trace)
+from repro.telemetry.metrics import (Counter, Gauge, MetricsRegistry,
+                                     StreamingHistogram)
+from repro.telemetry.trace import SpanTracer
+
+__all__ = ["Telemetry", "SpanTracer", "MetricsRegistry",
+           "StreamingHistogram", "Counter", "Gauge", "chrome_trace",
+           "save_chrome_trace", "prometheus_text"]
+
+
+class Telemetry:
+    """Tracer + registry bundle (see module docstring).
+
+    ``enabled`` gates tracing; ``annotate=True`` additionally bridges each
+    span into a ``jax.profiler.TraceAnnotation`` so host spans line up
+    with device traces; ``capacity`` bounds the span ring buffer.
+    """
+
+    def __init__(self, enabled: bool = True, *, capacity: int = 65536,
+                 annotate: bool = False):
+        self.enabled = enabled
+        self.tracer = SpanTracer(capacity, enabled=enabled,
+                                 annotate=annotate)
+        self.metrics = MetricsRegistry()
+
+    # ---------------------------------------------------------------- spans
+    def span(self, name: str, cat: str = "host", **args):
+        return self.tracer.span(name, cat, **args)
+
+    def instant(self, name: str, cat: str = "host", **args) -> None:
+        self.tracer.instant(name, cat, **args)
+
+    # -------------------------------------------------------------- exports
+    def chrome_trace(self) -> dict:
+        return chrome_trace(self.tracer)
+
+    def save_chrome_trace(self, path: str) -> None:
+        save_chrome_trace(path, self.tracer)
+
+    def prometheus(self) -> str:
+        return prometheus_text(self.metrics)
+
+    def snapshot(self) -> dict:
+        return self.metrics.snapshot()

@@ -67,6 +67,21 @@ def test_bench_quick_robust_cli_lines(monkeypatch):
     assert "fedround/dispatch/async/client_update,0.0,2" in lines
 
 
+def test_bench_quick_telemetry_cli_lines(monkeypatch):
+    """--quick-telemetry CSV formatting (quick_telemetry_check stubbed —
+    the real invariants run in tests/test_telemetry.py and the CI step)."""
+    import benchmarks.bench_fedround as B
+
+    monkeypatch.setattr(B, "quick_telemetry_check", lambda: {
+        "disabled": {"round_step": 3, "page_in": 3},
+        "enabled": {"round_step": 3, "page_in": 3},
+        "spans": {"round": 3, "round_step": 3, "page_in": 3}})
+    lines = B.main(["--quick-telemetry"])
+    assert "fedround/telemetry/disabled/round_step,0.0,3" in lines
+    assert "fedround/telemetry/enabled/page_in,0.0,3" in lines
+    assert "fedround/telemetry/spans/round,0.0,3" in lines
+
+
 @pytest.mark.slow
 def test_bench_serving_quick_dispatch_counts():
     """Serving loop dispatch accounting: exactly one serve_step per decode
@@ -132,6 +147,20 @@ def test_bench_serving_quick_prefill_cli_lines(monkeypatch):
     assert "serving/dispatch/prefill/steps,0.0,4" in lines
     assert "serving/dispatch/prefill/serve_prefill,0.0,8" in lines
     assert "serving/dispatch/prefill/expected_serve_prefill,0.0,8" in lines
+
+
+def test_bench_serving_quick_telemetry_cli_lines(monkeypatch):
+    """--quick-telemetry CSV formatting (quick_telemetry_check stubbed)."""
+    import benchmarks.bench_serving as B
+
+    monkeypatch.setattr(B, "quick_telemetry_check", lambda: {
+        "disabled": {"serve_step": 9, "serve_admit": 4},
+        "enabled": {"serve_step": 9, "serve_admit": 4},
+        "spans": {"serve_step": 9, "serve_admit": 4, "admit_burst": 3}})
+    lines = B.main(["--quick-telemetry"])
+    assert "serving/telemetry/disabled/serve_step,0.0,9" in lines
+    assert "serving/telemetry/enabled/serve_admit,0.0,4" in lines
+    assert "serving/telemetry/spans/admit_burst,0.0,3" in lines
 
 
 def test_trajectory_cross_pr_table(tmp_path):

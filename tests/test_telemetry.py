@@ -1,0 +1,381 @@
+"""Unified telemetry layer: span-tracer semantics (nesting, ring wrap,
+disabled-path null object), streaming-histogram quantile exactness vs
+numpy, registry back-compat (adopted Counters), exporter formats (Chrome
+trace-event JSON schema, Prometheus text), LRUPager hit/miss/eviction
+accounting incl. pin protection, and end-to-end invisibility: a faulted
+paged federation and a mixed-batch serving run must dispatch identically
+with telemetry enabled or disabled while enabled-mode span counts equal
+the dispatch counts."""
+
+import collections
+import json
+import math
+
+import jax
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.core.editing import EditConfig
+from repro.core.paging import LRUPager
+from repro.data.synthetic import SyntheticTaskConfig, make_federated_datasets
+from repro.federated import FaultConfig, FederatedConfig, FederatedTrainer
+from repro.optim import OptimizerConfig
+from repro.telemetry import (MetricsRegistry, SpanTracer, StreamingHistogram,
+                             Telemetry, chrome_trace, prometheus_text)
+from repro.telemetry.trace import _NULL_SPAN
+
+
+# ---------------------------------------------------------------------------
+# streaming histogram
+# ---------------------------------------------------------------------------
+
+def test_histogram_exact_quantiles_within_reservoir():
+    """For streams no longer than the reservoir the buffer IS the stream:
+    every quantile must equal np.quantile of the full data exactly."""
+    rng = np.random.default_rng(7)
+    data = rng.exponential(0.01, size=500)
+    h = StreamingHistogram("t", reservoir=4096)
+    for x in data:
+        h.observe(x)
+    for q in (0.0, 0.25, 0.5, 0.9, 0.95, 0.99, 1.0):
+        assert h.quantile(q) == float(np.quantile(data, q))
+    s = h.summary()
+    assert s["count"] == 500
+    assert s["sum"] == pytest.approx(float(data.sum()))
+    assert s["min"] == float(data.min()) and s["max"] == float(data.max())
+    assert s["p50"] == float(np.quantile(data, 0.5))
+
+
+def test_histogram_beyond_reservoir_exact_moments_sane_quantiles():
+    """Past the reservoir, count/sum/min/max stay exact and quantiles come
+    from an unbiased subsample — bounded by the true extremes, monotone in
+    q, and deterministic across identically-seeded instances."""
+    rng = np.random.default_rng(3)
+    data = rng.normal(10.0, 2.0, size=2000)
+    h1 = StreamingHistogram("a", reservoir=256, seed=5)
+    h2 = StreamingHistogram("b", reservoir=256, seed=5)
+    for x in data:
+        h1.observe(x)
+        h2.observe(x)
+    assert h1.count == 2000 and h1.sum == pytest.approx(float(data.sum()))
+    assert h1.min == float(data.min()) and h1.max == float(data.max())
+    qs = [h1.quantile(q) for q in (0.1, 0.5, 0.9)]
+    assert qs == sorted(qs)
+    assert all(h1.min <= v <= h1.max for v in qs)
+    assert [h2.quantile(q) for q in (0.1, 0.5, 0.9)] == qs
+    # gross accuracy: a 256-sample median of N(10, 2) is nowhere near 8/12
+    assert abs(h1.quantile(0.5) - float(np.quantile(data, 0.5))) < 1.0
+
+
+def test_histogram_empty_is_nan():
+    h = StreamingHistogram("e")
+    assert math.isnan(h.quantile(0.5))
+    s = h.summary()
+    assert s["count"] == 0
+    assert all(math.isnan(s[k]) for k in ("min", "max", "p50", "p95", "p99"))
+
+
+# ---------------------------------------------------------------------------
+# span tracer
+# ---------------------------------------------------------------------------
+
+def test_tracer_nesting_and_event_fields():
+    tr = SpanTracer()
+    with tr.span("outer", cat="fed", round=1):
+        with tr.span("inner", cat="dispatch"):
+            pass
+        tr.instant("mark", cat="fed")
+    evs = tr.events()
+    # exits record in completion order: inner, instant, outer
+    names = [e[0] for e in evs]
+    assert names == ["inner", "mark", "outer"]
+    inner, mark, outer = evs
+    assert inner[4] == 1 and outer[4] == 0          # depth
+    assert mark[3] is None                          # instant: no t1
+    assert outer[2] <= inner[2] and inner[3] <= outer[3]   # containment
+    assert tr.counts == {"outer": 1, "inner": 1, "mark": 1}
+
+
+def test_tracer_disabled_is_null_object():
+    """Disabled span() returns ONE shared null context manager — no
+    allocation, no clock read, no count; instants are dropped too."""
+    tr = SpanTracer(enabled=False)
+    s1, s2 = tr.span("a"), tr.span("b", cat="x", k=1)
+    assert s1 is s2 is _NULL_SPAN
+    with s1:
+        tr.instant("i")
+    assert tr.counts == {}
+    assert tr.events() == []
+    assert tr.n_recorded == 0
+
+
+def test_tracer_ring_wrap_keeps_exact_counts():
+    tr = SpanTracer(capacity=4)
+    for i in range(10):
+        with tr.span(f"s{i}"):
+            pass
+    assert tr.n_recorded == 10
+    assert tr.dropped == 6
+    assert [e[0] for e in tr.events()] == ["s6", "s7", "s8", "s9"]
+    assert sum(tr.counts.values()) == 10            # counts survive wrap
+    tr.clear()
+    assert tr.events() == [] and tr.counts == {} and tr.dropped == 0
+
+
+# ---------------------------------------------------------------------------
+# chrome trace export
+# ---------------------------------------------------------------------------
+
+def test_chrome_trace_schema_and_nesting():
+    tr = SpanTracer()
+    with tr.span("round", cat="fed", round=0):
+        with tr.span("round_step", cat="dispatch"):
+            pass
+    tr.instant("done", cat="fed")
+    doc = chrome_trace(tr)
+    assert doc["displayTimeUnit"] == "ms"
+    assert doc["otherData"]["dropped_events"] == 0
+    evs = doc["traceEvents"]
+    assert evs[0]["ph"] == "M" and evs[0]["name"] == "process_name"
+    xs = {e["name"]: e for e in evs if e["ph"] == "X"}
+    ins = [e for e in evs if e["ph"] == "i"]
+    assert set(xs) == {"round", "round_step"} and len(ins) == 1
+    for e in xs.values():
+        assert e["ts"] >= 0 and e["dur"] >= 0
+        assert isinstance(e["cat"], str) and "pid" in e and "tid" in e
+    # nesting: child interval contained in parent interval (µs-exact)
+    p, c = xs["round"], xs["round_step"]
+    assert p["ts"] <= c["ts"]
+    assert c["ts"] + c["dur"] <= p["ts"] + p["dur"]
+    assert ins[0]["s"] == "t" and "dur" not in ins[0]
+    assert xs["round"]["args"] == {"round": 0}
+    # non-metadata events are sorted by ts and the doc is JSON-clean
+    ts = [e["ts"] for e in evs[1:]]
+    assert ts == sorted(ts)
+    json.dumps(doc)
+
+
+# ---------------------------------------------------------------------------
+# metrics registry + prometheus exposition
+# ---------------------------------------------------------------------------
+
+def test_registry_idempotent_and_kind_clash():
+    m = MetricsRegistry()
+    c = m.counter("n")
+    assert m.counter("n") is c
+    with pytest.raises(ValueError):
+        m.gauge("n")
+    with pytest.raises(ValueError):
+        m.histogram("n")
+    g = m.gauge("g")
+    g.set(2)
+    m.gauge_fn("f", lambda: 3.5)
+    m.gauge_fn("f", lambda: 4.5)                    # re-register replaces
+    snap = m.snapshot()
+    assert snap["gauges"] == {"g": 2.0, "f": 4.5}
+    assert m.kinds() == {"n": "counter", "g": "gauge", "f": "gauge_fn"}
+
+
+def test_counter_group_adopts_live_counter():
+    """The back-compat bridge: an adopted dispatch_count stays a genuine
+    collections.Counter — existing += / dict() / clear() call sites work
+    while snapshots read the same live object."""
+    m = MetricsRegistry()
+    owned = collections.Counter()
+    got = m.counter_group("fed.dispatch", owned)
+    assert got is owned and isinstance(got, collections.Counter)
+    owned["round_step"] += 3
+    assert m.snapshot()["counter_groups"]["fed.dispatch"] == {
+        "round_step": 3.0}
+    owned.clear()
+    assert m.snapshot()["counter_groups"]["fed.dispatch"] == {}
+    # latest-owner-wins rebind (engine rebuilt over the same registry)
+    other = collections.Counter(a=1)
+    assert m.counter_group("fed.dispatch", other) is other
+    assert m.counter_group("fed.dispatch") is other
+
+
+def test_prometheus_text_format():
+    m = MetricsRegistry()
+    m.counter("serving.tokens").inc(7)
+    m.counter_group("fed.dispatch", collections.Counter(round_step=3))
+    m.gauge("fed.queue_depth").set(2)
+    h = m.histogram("serving.ttft_seconds")
+    for v in (0.1, 0.2, 0.3):
+        h.observe(v)
+    text = prometheus_text(m)
+    assert text.endswith("\n")
+    assert "# TYPE serving_tokens counter" in text       # sanitised name
+    assert "serving_tokens_total 7.0" in text
+    assert 'fed_dispatch_total{key="round_step"} 3.0' in text
+    assert "fed_queue_depth 2.0" in text
+    assert 'serving_ttft_seconds{quantile="0.5"} 0.2' in text
+    assert "serving_ttft_seconds_count 3.0" in text
+    assert "serving_ttft_seconds_sum" in text
+
+
+# ---------------------------------------------------------------------------
+# LRUPager accounting
+# ---------------------------------------------------------------------------
+
+def test_pager_hit_miss_eviction_accounting():
+    p = LRUPager(2)
+    p.assign("a")
+    p.assign("b")                                    # fills both slots
+    p.hit("a")
+    p.hit("a")
+    assert (p.hits, p.misses, p.evictions) == (2, 2, 0)
+    _, evicted = p.assign("c")                       # LRU victim is b
+    assert evicted == "b"
+    assert (p.hits, p.misses, p.evictions) == (2, 3, 1)
+    st = p.stats()
+    assert st == {"hits": 2, "misses": 3, "evictions": 1,
+                  "hit_rate": pytest.approx(2 / 5)}
+    assert LRUPager(1).stats()["hit_rate"] == 0.0    # no traffic: defined
+
+
+def test_pager_pinned_rejection_counts_nothing():
+    """An all-pinned assign raises WITHOUT touching hit/miss/eviction
+    counters or residency — the caller retries the same id later and the
+    retry is the one real miss."""
+    p = LRUPager(2)
+    p.assign("a")
+    p.assign("b")
+    p.pin("a")
+    p.pin("b")
+    before = (p.hits, p.misses, p.evictions, dict(p.slot_of))
+    with pytest.raises(RuntimeError, match="pinned"):
+        p.assign("c")
+    assert (p.hits, p.misses, p.evictions, dict(p.slot_of)) == before
+    p.unpin("b")
+    _, evicted = p.assign("c")                       # now succeeds
+    assert evicted == "b" and p.misses == 3 and p.evictions == 1
+
+
+# ---------------------------------------------------------------------------
+# end-to-end: faulted paged federation
+# ---------------------------------------------------------------------------
+
+def _mk_trainer(telemetry=None, seed=0):
+    tcfg = SyntheticTaskConfig(caption_len=8)
+    clients, gtest = make_federated_datasets(tcfg, 4, np.array([24] * 4))
+    fcfg = FederatedConfig(num_clients=4, sample_rate=0.75, ranks=(4, 8, 8, 16),
+                           local_steps=1, batch_size=4, aggregator="fedilora",
+                           edit=EditConfig(enabled=False),
+                           paged=True, store_slots=3,
+                           faults=FaultConfig(enabled=True, dropout_rate=0.3,
+                                              straggler_rate=0.2, seed=3))
+    return FederatedTrainer(get_config("fedbench-tiny"), fcfg,
+                            OptimizerConfig(peak_lr=3e-3, total_steps=20),
+                            clients, clients, gtest, seed=seed,
+                            telemetry=telemetry)
+
+
+@pytest.mark.slow
+def test_federated_telemetry_bitwise_invisible():
+    """Telemetry enabled vs disabled vs absent: identical dispatch counts,
+    identical health counters, bit-identical global adapters — and in
+    enabled mode every dispatch-site span count equals its dispatch count
+    while the trace/pager metrics are populated."""
+    t_base = _mk_trainer()
+    t_on = _mk_trainer(Telemetry(enabled=True))
+    t_off = _mk_trainer(Telemetry(enabled=False))
+    for _ in range(2):
+        t_base.run_round()
+        t_on.run_round()
+        t_off.run_round()
+    assert dict(t_base.dispatch_count) == dict(t_on.dispatch_count) \
+        == dict(t_off.dispatch_count)
+    assert dict(t_base.health) == dict(t_on.health)
+    for a, b in zip(jax.tree_util.tree_leaves(t_base.server.global_lora),
+                    jax.tree_util.tree_leaves(t_on.server.global_lora)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    # disabled tracer recorded nothing
+    assert t_off.telemetry.tracer.n_recorded == 0
+    # span name == dispatch key at every dispatch site
+    tel = t_on.telemetry
+    for name, cnt in t_on.dispatch_count.items():
+        assert tel.tracer.counts.get(name, 0) == cnt, name
+    assert tel.tracer.counts["round"] == 2
+    snap = tel.snapshot()
+    assert "fed.clients.pager_hit_rate" in snap["gauges"]
+    assert snap["histograms"]["fed.round_seconds"]["count"] == 2
+    assert snap["counter_groups"]["fed.dispatch"] == {
+        str(k): float(v) for k, v in t_on.dispatch_count.items()}
+    doc = tel.chrome_trace()
+    assert doc["otherData"]["dropped_events"] == 0
+    assert len(doc["traceEvents"]) == tel.tracer.n_recorded + 1
+
+
+@pytest.mark.slow
+def test_stores_share_paging_stats_schema():
+    """ClientStateStore and AdapterStore surface pager accounting through
+    the SAME paging_stats schema, and the client store's traffic shows up
+    after paged rounds."""
+    from repro.serving import AdapterStore
+
+    tr = _mk_trainer()
+    for _ in range(2):
+        tr.run_round()
+    fed = tr.store.paging_stats
+    srv = AdapterStore.from_trainer(tr, slots=2).paging_stats
+    assert set(fed) == set(srv) == {"hits", "misses", "evictions",
+                                    "hit_rate", "spills"}
+    assert fed["hits"] + fed["misses"] > 0
+    assert 0.0 <= fed["hit_rate"] <= 1.0
+
+
+# ---------------------------------------------------------------------------
+# end-to-end: serving
+# ---------------------------------------------------------------------------
+
+@pytest.mark.slow
+@pytest.mark.serving
+def test_serving_telemetry_invisible_and_queue_wait():
+    """A mixed-tenant serving run with telemetry on vs off: identical
+    dispatch counts and tokens; enabled mode matches span counts to
+    dispatch counts, records queue-wait per completion, and populates the
+    TTFT histogram."""
+    from repro.serving import AdapterStore, Request, ServingEngine
+
+    tr = _mk_trainer()
+    tr.run_round()
+    clients = [c.data for c in tr.clients]
+    lm = np.asarray(clients[0]["loss_mask"])
+    cap_start = int(np.argmax(lm[0] > 0))
+    gen_len = min(4, int(lm[0].sum()))
+
+    def _run(tel):
+        store = AdapterStore.from_trainer(tr, slots=2)
+        eng = ServingEngine(tr.mcfg, tr.base_params, store,
+                            lora_scale=tr.lora_scale, max_slots=2,
+                            max_prompt=8, max_gen=gen_len, continuous=True,
+                            telemetry=tel)
+        reqs = [Request(adapter_id=f"client{k}",
+                        prompt_tokens=np.asarray(
+                            clients[k]["tokens"][0][:cap_start + 1]),
+                        gen_len=gen_len,
+                        vision=np.asarray(clients[k]["image"][0]))
+                for k in range(4)]
+        done = eng.run(reqs)
+        return eng, done
+
+    eng_off, done_off = _run(None)
+    tel = Telemetry(enabled=True)
+    eng_on, done_on = _run(tel)
+    assert dict(eng_off.dispatch_count) == dict(eng_on.dispatch_count)
+    assert ([np.asarray(d["tokens"]).tolist() for d in done_off]
+            == [np.asarray(d["tokens"]).tolist() for d in done_on])
+    for name, cnt in eng_on.dispatch_count.items():
+        assert tel.tracer.counts.get(name, 0) == cnt, name
+    for d in done_on:
+        assert d["queue_wait_s"] >= 0.0
+        assert 0 < d["ttft_s"] <= d["latency_s"]
+    snap = tel.snapshot()
+    assert snap["histograms"]["serving.ttft_seconds"]["count"] == len(done_on)
+    assert snap["histograms"]["serving.queue_wait_seconds"]["count"] \
+        == len(done_on)
+    assert snap["counters"]["serving.completed_requests"] == len(done_on)
+    assert "serving.adapters.pager_hit_rate" in snap["gauges"]
+    assert "serving_ttft_seconds" in tel.prometheus()
