@@ -44,6 +44,17 @@ deterministic regression signal the tier-2 smoke test asserts on.
 ``--quick-prefill`` runs the chunked-prefill dispatch check alone (the CI
 fail-fast step); both modes raise on a burst-count mismatch or when shared
 prefill fails to beat the per-request count.
+
+The ``slo`` section drives the SAME workload through the
+``repro.serving.scheduler.SLOScheduler`` under open-loop Poisson and
+bursty arrival traces (``benchmarks/load.py``) at an offered rate past
+slot capacity: goodput-under-SLO, shed/timeout counts and per-class p99
+TTFT/latency (read back from the engine's telemetry histograms, which see
+OK completions only).  ``--quick-slo`` is the deterministic CI flavour on
+a virtual clock: cancellation must add ZERO dispatches, an overload burst
+must admit exactly the slot-capacity prefix, and one faulted (NaN
+adapter) row must not change the step count while every other tenant's
+tokens stay bit-identical.
 """
 
 from __future__ import annotations
@@ -227,6 +238,70 @@ def _measure() -> dict:
             tel.tracer.counts.get(name, 0) == cnt
             for name, cnt in eng_t.dispatch_count.items()),
     }
+    out["slo"] = _slo_measure(tr, requests)
+    return out
+
+
+def _slo_measure(tr, requests) -> dict:
+    """Open-loop overload traces through the SLO scheduler: the offered
+    rate deliberately exceeds what MAX_SLOTS can drain so backpressure,
+    shedding and deadline timeouts actually fire.  p99s come from the
+    engine's telemetry histograms (ok-status completions only — shed and
+    timed-out requests are counted, never averaged in)."""
+    from benchmarks.load import (TraceConfig, arrival_offsets,
+                                 run_open_loop, slo_classes)
+    from repro.serving import RetryPolicy, SchedulerConfig, SLOScheduler
+    from repro.telemetry import Telemetry
+
+    out = {}
+    for kind in ("poisson", "bursty"):
+        tel = Telemetry(enabled=False)   # metrics are always live
+        eng = _engine(tr, continuous=True, telemetry=tel)
+        sched = SLOScheduler(eng, SchedulerConfig(
+            interactive_deadline_s=0.25, batch_deadline_s=10.0,
+            queue_limit=4, shed_policy="reject",
+            retry=RetryPolicy(max_attempts=2, backoff_s=0.02)))
+        tcfg = TraceConfig(kind=kind, rate=300.0, n=N_REQUESTS, seed=0,
+                           burst_size=8)
+        offs = arrival_offsets(tcfg)
+        classes = slo_classes(tcfg)
+        reqs = requests()
+
+        def make_request(i):
+            reqs[i].slo = classes[i]
+            return reqs[i]
+
+        rep = run_open_loop(sched, make_request, offs)
+        m = eng.telemetry.metrics
+        snap = m.snapshot()["histograms"]
+        per_class = {}
+        for cls in ("interactive", "batch"):
+            per_class[cls] = {
+                "p99_ttft_s": snap.get(
+                    f"serving.ttft_seconds.{cls}", {}).get("p99"),
+                "p99_latency_s": snap.get(
+                    f"serving.latency_seconds.{cls}", {}).get("p99"),
+                **rep["per_class"][cls]}
+        out[kind] = {
+            "trace": {"rate": tcfg.rate, "n": tcfg.n,
+                      "burst_size": (tcfg.burst_size
+                                     if kind == "bursty" else None)},
+            "wall_s": rep["wall_s"],
+            "goodput_under_slo": rep["goodput_frac"],
+            "goodput": rep["goodput"], "offered": rep["offered"],
+            "shed": m.get("serving.shed").value,
+            "timeout": m.get("serving.timeout").value,
+            "errors": m.get("serving.request_errors").value,
+            "p99_ttft_s": snap["serving.ttft_seconds"].get("p99"),
+            "p99_latency_s": snap["serving.latency_seconds"].get("p99"),
+            "per_class": per_class,
+        }
+    out["caveat"] = (
+        "2-core CI container: wall-clock service rate is dispatch-"
+        "overhead-bound, so goodput/shed/timeout counts reflect this "
+        "host's capacity under the fixed offered rate, not an "
+        "accelerator's; the dispatch-count invariants (--quick-slo) are "
+        "the portable regression signal")
     return out
 
 
@@ -364,6 +439,136 @@ def quick_telemetry_check() -> dict:
             "spans": {k: int(v) for k, v in tel_on.tracer.counts.items()}}
 
 
+def quick_slo_check() -> dict:
+    """SLO-scheduler invariants on a virtual clock (raises on violation):
+
+    * **cancellation adds zero dispatches** — timing out every in-flight
+      request frees the slots with no extra serve_* dispatch and no
+      completion fetch;
+    * **a shed burst admits exactly the slot-capacity prefix** — with
+      ``queue_limit=0`` and S slots, a burst of N > S submits sheds
+      N - S and the engine admits the FIFO prefix of S;
+    * **one faulted row doesn't change the step count** — a NaN adapter
+      (injected past validation with ``register(validate=False)``) errors
+      only its own request; every other tenant's tokens are bit-identical
+      to the clean run and total steps match.
+    """
+    import numpy as np
+
+    from repro.serving import (AdapterStore, ManualClock, SchedulerConfig,
+                               ServingEngine, SLOScheduler)
+
+    tr, requests = _build(num_clients=3, local_steps=1)
+    out = {}
+
+    # ---- 1) shed burst admits exactly the slot-capacity prefix ------------
+    clock = ManualClock()
+    eng = _engine(tr, continuous=True, slots=2)
+    sched = SLOScheduler(eng, SchedulerConfig(queue_limit=0,
+                                              shed_policy="reject"),
+                         clock=clock)
+    reqs = requests()[:8]
+    for r in reqs:
+        sched.submit(r)
+    shed_uids = [rec["uid"] for rec in sched.results
+                 if rec["status"] == "shed"]
+    if len(shed_uids) != 6:
+        raise RuntimeError(f"expected 6 shed of 8 at queue_limit=0 over 2 "
+                           f"slots, got {len(shed_uids)}")
+    while sched.pending or eng.queue or eng.busy_slots:
+        sched.step()
+        clock.advance(1e-4)
+    dc = dict(eng.dispatch_count)
+    if dc.get("serve_admit") != 2:
+        raise RuntimeError(f"shed burst admitted {dc.get('serve_admit')} "
+                           "requests, expected exactly the 2-slot prefix")
+    ok_uids = {rec["uid"] for rec in sched.results
+               if rec["status"] == "ok"}
+    if ok_uids != {r.uid for r in reqs[:2]}:
+        raise RuntimeError("shed burst did not admit the FIFO prefix: "
+                           f"completed {ok_uids}")
+    if set(shed_uids) & ok_uids:
+        raise RuntimeError("a shed request completed — it occupied a slot")
+    out["shed"] = {"steps": eng.steps, "shed": len(shed_uids),
+                   "admitted": 2, "dispatch": dc}
+
+    # ---- 2) cancellation adds zero dispatches -----------------------------
+    clock = ManualClock()
+    eng = _engine(tr, continuous=True, slots=2)
+    sched = SLOScheduler(eng, SchedulerConfig(interactive_deadline_s=0.05),
+                         clock=clock)
+    for r in requests()[:4]:
+        r.slo = "interactive"
+        sched.submit(r)
+    sched.step()                       # admits 2, one decode step
+    steps_before = eng.steps
+    clock.advance(1.0)                 # every deadline now blown
+    sched.step()                       # cancels in-flight, expires pending
+    dc = dict(eng.dispatch_count)
+    timeouts = sum(1 for rec in sched.results
+                   if rec["status"] == "timeout")
+    if timeouts != 4:
+        raise RuntimeError(f"expected all 4 requests timed out, got "
+                           f"{timeouts}")
+    if eng.busy_slots or sched.pending:
+        raise RuntimeError("timed-out requests still occupy slots/pending")
+    if dc.get("fetch", 0) != 0:
+        raise RuntimeError(f"cancellation fetched {dc['fetch']} times — it "
+                           "must add zero dispatches")
+    if dc.get("serve_step", 0) != eng.steps or eng.steps != steps_before:
+        raise RuntimeError(
+            f"cancellation changed dispatch accounting: serve_step="
+            f"{dc.get('serve_step')}, steps={eng.steps}")
+    if not set(dc) <= {"serve_step", "serve_admit", "adapter_load"}:
+        raise RuntimeError(f"cancellation added dispatch kinds: {dc}")
+    out["cancel"] = {"steps": eng.steps, "timeouts": timeouts,
+                     "dispatch": dc}
+
+    # ---- 3) one faulted row doesn't change the step count -----------------
+    def _run(poison: bool):
+        store = AdapterStore.from_trainer(tr)
+        if poison:
+            lora, rank = tr.export_adapters()["client1"]
+            bad = {name: {"A": np.asarray(e["A"]) * np.nan,
+                          "B": np.asarray(e["B"])}
+                   for name, e in lora.items()}
+            # past validation on purpose: forces non-finite logits through
+            # the decode path (the quarantine path is tested separately)
+            store.register("client1", bad, rank, validate=False)
+        eng = ServingEngine(tr.mcfg, tr.base_params, store,
+                            lora_scale=tr.lora_scale, max_slots=3,
+                            max_prompt=8, max_gen=max(GEN_LENS),
+                            continuous=True)
+        done = eng.run(requests()[:3])     # one request per tenant
+        return eng, {d["adapter_id"]: d for d in done}
+
+    eng_clean, by_clean = _run(poison=False)
+    eng_bad, by_bad = _run(poison=True)
+    if eng_bad.steps != eng_clean.steps:
+        raise RuntimeError(
+            f"one faulted row changed the step count: {eng_bad.steps} != "
+            f"{eng_clean.steps}")
+    if dict(eng_bad.dispatch_count) != dict(eng_clean.dispatch_count):
+        raise RuntimeError(
+            "one faulted row changed dispatch counts: "
+            f"{dict(eng_bad.dispatch_count)} != "
+            f"{dict(eng_clean.dispatch_count)}")
+    if by_bad["client1"]["status"] != "error":
+        raise RuntimeError("faulted request did not complete with "
+                           f"status=error: {by_bad['client1']['status']}")
+    for cid in ("client0", "client2"):
+        if by_bad[cid]["status"] != "ok":
+            raise RuntimeError(f"{cid} was not ok next to a faulted row")
+        if not np.array_equal(by_bad[cid]["tokens"],
+                              by_clean[cid]["tokens"]):
+            raise RuntimeError(
+                f"{cid} tokens diverged next to a faulted row")
+    out["fault"] = {"steps": eng_bad.steps,
+                    "faulted": 1, "unaffected": 2,
+                    "dispatch": dict(eng_bad.dispatch_count)}
+    return out
+
+
 def main(argv: list[str] | None = None) -> list[str]:
     """Spawn the measurement subprocess, append to BENCH_serving.json's
     history, return CSV lines.  ``--quick``: dispatch-count check only,
@@ -376,6 +581,10 @@ def main(argv: list[str] | None = None) -> list[str]:
     ap.add_argument("--quick-telemetry", action="store_true",
                     help="telemetry invariants: disabled path is bitwise-"
                          "invisible, enabled span counts == dispatch counts")
+    ap.add_argument("--quick-slo", action="store_true",
+                    help="SLO-scheduler invariants: zero-dispatch "
+                         "cancellation, slot-capacity shed prefix, fault "
+                         "containment step parity")
     args = ap.parse_args([] if argv is None else argv)
 
     if args.quick_telemetry:
@@ -383,6 +592,18 @@ def main(argv: list[str] | None = None) -> list[str]:
         return [f"serving/telemetry/{mode}/{name},0.0,{cnt}"
                 for mode, cc in sorted(counts.items())
                 for name, cnt in sorted(cc.items())]
+
+    if args.quick_slo:
+        counts = quick_slo_check()
+        lines = []
+        for mode, rec in sorted(counts.items()):
+            for name, val in sorted(rec.items()):
+                if name == "dispatch":
+                    for k, v in sorted(val.items()):
+                        lines.append(f"serving/slo/{mode}/{k},0.0,{v}")
+                else:
+                    lines.append(f"serving/slo/{mode}/{name},0.0,{val}")
+        return lines
 
     if args.quick or args.quick_prefill:
         counts = quick_prefill_check() if args.quick_prefill else \
@@ -422,6 +643,13 @@ def main(argv: list[str] | None = None) -> list[str]:
                  f"{res['chunked_vs_streamed_ttft_p50']:.2f}x")
     lines.append(f"serving/chunked_vs_streamed_throughput,0.0,"
                  f"{res['chunked_vs_streamed_throughput']:.2f}x")
+    for kind in ("poisson", "bursty"):
+        s = res["slo"][kind]
+        lines.append(f"serving/slo/{kind}/goodput_under_slo,0.0,"
+                     f"{s['goodput_under_slo']:.2f} "
+                     f"({s['goodput']}/{s['offered']})")
+        lines.append(f"serving/slo/{kind}/shed,0.0,{s['shed']:.0f}")
+        lines.append(f"serving/slo/{kind}/timeout,0.0,{s['timeout']:.0f}")
     return lines
 
 

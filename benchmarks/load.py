@@ -1,0 +1,115 @@
+"""Trace-driven OPEN-LOOP load generation for the serving scheduler.
+
+Open loop means arrivals follow the trace's absolute offsets regardless of
+how the server is doing — the generator never waits for completions before
+submitting the next request.  That is the property that makes overload
+visible: a closed-loop driver self-throttles to the server's capacity and
+can never push it past saturation, so shedding/backpressure code paths go
+unexercised (the classic coordinated-omission trap).
+
+Two arrival processes, both deterministic per seed:
+
+* ``poisson`` — i.i.d. exponential inter-arrival gaps at ``rate``
+  requests/sec: the memoryless baseline.
+* ``bursty``  — Poisson-spaced burst STARTS with ``burst_size``
+  simultaneous arrivals each (same mean rate): the overload stressor —
+  each burst momentarily exceeds slot capacity, exercising backpressure
+  and shed policies even when the average load is sustainable.
+
+The driver runs on the scheduler's clock (wall by default), submits every
+arrival whose offset has passed, and steps the scheduler; the engine's
+continuous batching does the rest.  Used by ``bench_serving``'s ``slo``
+section and importable for ad-hoc experiments.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+
+import numpy as np
+
+
+@dataclasses.dataclass(frozen=True)
+class TraceConfig:
+    """One synthetic arrival trace: ``n`` requests at mean ``rate``/sec."""
+
+    kind: str = "poisson"          # "poisson" | "bursty"
+    rate: float = 100.0
+    n: int = 64
+    seed: int = 0
+    burst_size: int = 8            # bursty only
+    interactive_frac: float = 0.5  # share of requests tagged interactive
+
+
+def arrival_offsets(cfg: TraceConfig) -> np.ndarray:
+    """Absolute arrival offsets (seconds from trace start), sorted."""
+    if cfg.rate <= 0:
+        raise ValueError(f"rate must be > 0, got {cfg.rate}")
+    rng = np.random.default_rng(cfg.seed)
+    if cfg.kind == "poisson":
+        return np.cumsum(rng.exponential(1.0 / cfg.rate, cfg.n))
+    if cfg.kind == "bursty":
+        if cfg.burst_size < 1:
+            raise ValueError(f"burst_size must be >= 1, got "
+                             f"{cfg.burst_size}")
+        n_bursts = -(-cfg.n // cfg.burst_size)
+        # burst starts are Poisson at rate/burst_size so the MEAN offered
+        # load matches the poisson trace — only the variance differs
+        starts = np.cumsum(
+            rng.exponential(cfg.burst_size / cfg.rate, n_bursts))
+        return np.repeat(starts, cfg.burst_size)[:cfg.n]
+    raise ValueError(f"unknown trace kind {cfg.kind!r} "
+                     "(expected 'poisson' or 'bursty')")
+
+
+def slo_classes(cfg: TraceConfig) -> list[str]:
+    """Per-arrival SLO class labels (deterministic per seed)."""
+    rng = np.random.default_rng(cfg.seed + 1)
+    return ["interactive" if u < cfg.interactive_frac else "batch"
+            for u in rng.random(cfg.n)]
+
+
+def run_open_loop(sched, make_request, offsets, *,
+                  max_wall_s: float = 120.0) -> dict:
+    """Drive ``sched`` (an ``SLOScheduler``) with arrivals at ``offsets``:
+    ``make_request(i)`` builds the i-th request when its offset passes.
+    Returns the scheduler's ``slo_report()`` plus wall/offered totals.
+    Open loop — submission never waits on completions."""
+    clock = sched.clock
+    t0 = clock()
+    i, n = 0, len(offsets)
+    while (i < n or sched.pending or sched.waiting_retries
+           or sched.engine.queue or sched.engine.busy_slots):
+        now = clock()
+        if now - t0 > max_wall_s:
+            raise RuntimeError(
+                f"open-loop trace exceeded max_wall_s={max_wall_s} with "
+                f"{n - i} arrivals left, {sched.pending} pending")
+        while i < n and now - t0 >= offsets[i]:
+            sched.submit(make_request(i))
+            i += 1
+        busy = (sched.pending or sched.engine.queue
+                or sched.engine.busy_slots)
+        if busy:
+            sched.step()
+        else:
+            # idle: wait for the next arrival (or retry) instead of
+            # spinning — a virtual clock advances, a real one sleeps
+            nxt = offsets[i] + t0 if i < n else None
+            if sched.waiting_retries:
+                r = sched._retry[0][0]
+                nxt = r if nxt is None else min(nxt, r)
+            gap = (nxt - clock()) if nxt is not None else 0.0
+            if gap > 0:
+                adv = getattr(clock, "advance", None)
+                if adv is not None:
+                    adv(gap)
+                else:
+                    time.sleep(min(gap, 1e-3))
+            else:
+                sched.step()
+    report = sched.slo_report()
+    report["wall_s"] = clock() - t0
+    report["arrivals"] = n
+    return report

@@ -31,6 +31,16 @@ checkpoint) to answering mixed-tenant inference traffic:
 * :class:`~repro.serving.engine.SamplingConfig` — opt-in temperature /
   top-k decoding with per-slot PRNG keys carried in engine state; greedy
   stays the default and the exactness-tested path.
+* :class:`~repro.serving.scheduler.SLOScheduler` /
+  :class:`~repro.serving.scheduler.SchedulerConfig` — the overload policy
+  layer: per-request SLO classes (interactive ahead of batch, EDF within a
+  class), queue-depth backpressure with reject / drop-lowest / degrade
+  shed policies, deadline timeouts with zero-dispatch in-flight
+  cancellation, and retry-with-backoff that preserves request uids (and
+  therefore sampling keys).  Fault containment backs it: non-finite
+  logits complete only the offending request (``status="error"``) and the
+  :class:`AdapterStore` quarantines non-finite / shape-mismatched
+  adapters at registration so they never reach a slot.
 
 Request lifecycle: ``submit`` → queued → admitted (adapter pinned + paged
 in, prompt staged, slot cache reset, cache rows chunk-prefilled — or,
@@ -49,7 +59,12 @@ vs static-batching throughput, chunked- vs streamed-prefill dispatches,
 SHA-keyed history).
 """
 
-from repro.serving.adapter_store import AdapterStore
+from repro.serving.adapter_store import (AdapterQuarantinedError,
+                                         AdapterStore)
 from repro.serving.engine import Request, SamplingConfig, ServingEngine
+from repro.serving.scheduler import (ManualClock, RetryPolicy,
+                                     SchedulerConfig, SLOScheduler)
 
-__all__ = ["AdapterStore", "Request", "SamplingConfig", "ServingEngine"]
+__all__ = ["AdapterQuarantinedError", "AdapterStore", "ManualClock",
+           "Request", "RetryPolicy", "SamplingConfig", "SchedulerConfig",
+           "ServingEngine", "SLOScheduler"]

@@ -46,6 +46,14 @@ from repro.telemetry import Telemetry
 Pytree = Any
 
 
+class AdapterQuarantinedError(RuntimeError):
+    """Raised by :meth:`AdapterStore.acquire` / ``ServingEngine.submit`` for
+    an adapter that failed page-in validation (non-finite or shape-mismatched
+    tensors).  Subclasses ``RuntimeError`` but admission handles it BEFORE
+    the bank-exhausted ``RuntimeError`` path — a quarantined tenant fails
+    its own request instead of stalling the whole queue."""
+
+
 def _pad_rank(entry: dict, r_pad: int) -> dict:
     """Zero-pad one {"A": [L, r, in], "B": [L, out, r]} pair to rank r_pad."""
     a, b = np.asarray(entry["A"]), np.asarray(entry["B"])
@@ -77,6 +85,11 @@ class AdapterStore:
         self.mesh = mesh
         self._host: dict[Hashable, Pytree] = {}    # id -> padded np tree
         self.ranks: dict[Hashable, int] = {}       # id -> true (unpadded) rank
+        # page-in validation: ids that failed it, id -> reason.  A
+        # quarantined id stays known (``in store``) so requests against it
+        # fail with a targeted AdapterQuarantinedError, not "unknown".
+        self.quarantined: dict[Hashable, str] = {}
+        self.health: collections.Counter = collections.Counter()
         self._pager = LRUPager(slots, kind="adapter")  # raises on slots < 1
         self._stack: Pytree | None = None          # device [S, ...] bank
         self._scan_stack: Pytree | None = None     # cached [L, S, ...] view
@@ -95,6 +108,12 @@ class AdapterStore:
         for key in ("hits", "misses", "evictions", "spills", "hit_rate"):
             m.gauge_fn(f"serving.adapters.pager_{key}",
                        lambda k=key: float(self.paging_stats[k]))
+        # page-in validation health: quarantine events by cause, plus the
+        # currently-quarantined population (a gauge — re-registering a
+        # clean adapter clears its entry)
+        m.counter_group("serving.adapter_health", self.health)
+        m.gauge_fn("serving.adapters.quarantined",
+                   lambda: float(len(self.quarantined)))
 
     @property
     def paging_stats(self) -> dict:
@@ -116,11 +135,46 @@ class AdapterStore:
         return self._pager.evictions
 
     # ------------------------------------------------------------- registry
-    def register(self, adapter_id: Hashable, lora: Pytree, rank: int) -> None:
+    def _validate(self, adapter_id: Hashable, padded: Pytree) -> str | None:
+        """Page-in validation: returns a quarantine reason, or ``None``.
+        Non-finite values and per-leaf shape drift vs the registered proto
+        are exactly what a Byzantine client escaping the federation's
+        dimension-wise defenses would ship — gathered into the device bank
+        they poison EVERY dispatch that batch-gathers the stack, so they
+        must never reach a slot."""
+        for name, entry in padded.items():
+            for part in ("A", "B"):
+                if not np.isfinite(entry[part]).all():
+                    self.health["quarantined_nonfinite"] += 1
+                    return (f"non-finite values in {name}/{part} "
+                            "(NaN/Inf adapter tensor)")
+        if self._host:
+            proto = next(iter(self._host.values()))
+            for name, entry in padded.items():
+                for part in ("A", "B"):
+                    if entry[part].shape != proto[name][part].shape:
+                        self.health["quarantined_shape"] += 1
+                        return (f"shape mismatch in {name}/{part}: "
+                                f"{entry[part].shape} vs bank "
+                                f"{proto[name][part].shape}")
+        return None
+
+    def register(self, adapter_id: Hashable, lora: Pytree, rank: int,
+                 *, validate: bool = True) -> None:
         """Add (or overwrite) a tenant's adapter on host.  ``lora`` is a
         ``{spec: {"A", "B"}}`` pytree at any materialised rank ≤ the bank
         rank; ``rank`` is the tenant's true heterogeneous rank (kept for
-        introspection — the zero padding makes it computationally inert)."""
+        introspection — the zero padding makes it computationally inert).
+
+        Page-in validation (``validate=True``, the default): non-finite or
+        shape-mismatched tensors QUARANTINE the id instead of registering —
+        the id stays known, ``acquire`` raises a targeted
+        :class:`AdapterQuarantinedError`, and a health counter records the
+        cause, so one Byzantine tenant degrades to per-request errors
+        instead of poisoning the shared device bank.  A later clean
+        register clears the quarantine.  ``validate=False`` is the
+        fault-injection escape hatch tests/benches use to force non-finite
+        logits through the decode path."""
         padded = {name: _pad_rank(entry, self.rank)
                   for name, entry in lora.items()}
         if self._host and set(padded) != set(next(iter(self._host.values()))):
@@ -130,13 +184,28 @@ class AdapterStore:
                 f"adapter {adapter_id!r} is pinned by in-flight requests; "
                 "overwriting it would silently swap weights under them — "
                 "drain those requests first")
+        if validate:
+            reason = self._validate(adapter_id, padded)
+            if reason is not None:
+                # drop any previous copy too: the caller meant to replace
+                # it, and silently serving stale weights is worse than a
+                # loud per-request quarantine error
+                if self._pager.lookup(adapter_id) is not None:
+                    self._pager.drop(adapter_id)
+                self._host.pop(adapter_id, None)
+                self.ranks.pop(adapter_id, None)
+                self.quarantined[adapter_id] = reason
+                return
         if self._pager.lookup(adapter_id) is not None:  # overwrite hot copy
             self._pager.drop(adapter_id)
+        self.quarantined.pop(adapter_id, None)
         self._host[adapter_id] = padded
         self.ranks[adapter_id] = int(rank)
 
     def __contains__(self, adapter_id: Hashable) -> bool:
-        return adapter_id in self._host
+        # quarantined ids are still *known* — requests against them get a
+        # targeted quarantine error, not "unknown adapter"
+        return adapter_id in self._host or adapter_id in self.quarantined
 
     def __len__(self) -> int:
         return len(self._host)
@@ -211,7 +280,13 @@ class AdapterStore:
         """Pin ``adapter_id`` into the device bank; returns its slot index.
         Pages the adapter in (one scatter dispatch) when cold.  Eviction of
         the LRU unpinned resident never copies out — serving is read-only,
-        the host always holds the master."""
+        the host always holds the master.  A quarantined id raises
+        :class:`AdapterQuarantinedError` (it never reaches a slot)."""
+        if adapter_id in self.quarantined:
+            raise AdapterQuarantinedError(
+                f"adapter {adapter_id!r} is quarantined: "
+                f"{self.quarantined[adapter_id]} — re-register a clean "
+                "adapter to clear")
         if adapter_id not in self._host:
             raise KeyError(f"unknown adapter {adapter_id!r}")
         slot = self._pager.lookup(adapter_id)

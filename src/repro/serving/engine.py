@@ -55,6 +55,40 @@ only when a request completes.  ``dispatch_count`` tallies ``serve_step``
 request's first token; dispatch-clock, not device-sync — the scheduling
 delay chunked prefill attacks).
 
+Fault containment and cancellation
+----------------------------------
+
+A shared dispatch must not let one tenant take down the batch:
+
+* **non-finite logits** — each step flags rows whose logits contain
+  NaN/Inf (a corrupt adapter, a poisoned cache) in a sticky per-slot
+  ``fault`` bit carried in engine state, and emits token 0 for them so
+  the faulted row cannot propagate non-finite values into ``last`` /
+  ``gen``.  Decoding is row-independent (per-row adapter gather, per-row
+  cache rows), so every OTHER slot's tokens are bit-identical to a clean
+  run — asserted by tests and ``bench_serving --quick-slo``.  Fault flags
+  ride the SAME completion fetch (one ``device_get`` per retire burst);
+  faulted requests complete with ``status="error"``.
+* **cancellation** (:meth:`ServingEngine.cancel` /
+  :meth:`~ServingEngine.cancel_slot`) — freeing a slot is pure host
+  bookkeeping: the request detaches, its adapter unpins, and the host
+  mirrors zero.  The device row keeps advancing inside the shared
+  program until re-admission overwrites it (harmless: rows are
+  independent and admission resets all slot state), so cancelling adds
+  ZERO dispatches and never splits the fused step.  Cancelled/timed-out/
+  shed requests increment ``serving.cancelled`` / ``serving.timeout`` /
+  ``serving.shed`` counters and are excluded from the TTFT/latency/
+  queue-wait histograms (ok-status completions only — overload must not
+  flatter the percentiles).
+
+``Request`` carries an SLO class (``slo``: ``"interactive"`` | ``"batch"``)
+and optional deadline; the engine itself stays policy-free FIFO — deadline
+scheduling, backpressure and shedding live in
+:mod:`repro.serving.scheduler`, which reorders ``engine.queue`` and drives
+cancellation through the public hooks above.  The engine reads time from
+``self.clock`` (default ``time.perf_counter``) so schedulers can inject a
+virtual clock for deterministic overload tests.
+
 Static-batching mode (``continuous=False``) admits only when ALL slots are
 free — the classic serve-a-batch-then-drain baseline that
 ``benchmarks/bench_serving.py`` measures continuous batching against.
@@ -79,11 +113,16 @@ from repro.launch.steps import (make_chunked_prefill_step,
 from repro.models import transformer as T
 from repro.models.config import ModelConfig
 
-from repro.serving.adapter_store import AdapterStore
+from repro.serving.adapter_store import (AdapterQuarantinedError,
+                                         AdapterStore)
 from repro.telemetry import Telemetry
 
 Pytree = Any
 _UIDS = itertools.count()
+
+#: request SLO classes, highest priority first (the scheduler admits
+#: interactive ahead of batch; the engine only labels metrics/spans by it)
+SLO_CLASSES = ("interactive", "batch")
 
 
 @dataclasses.dataclass(frozen=True)
@@ -100,11 +139,15 @@ class SamplingConfig:
     top_k: int = 0                     # 0 = full vocabulary
 
 
-@dataclasses.dataclass
+@dataclasses.dataclass(eq=False)
 class Request:
     """One inference request: decode ``gen_len`` tokens after the
     teacher-forced ``prompt_tokens`` (and, for prefix-VLMs, the projected
-    ``vision`` patches), through adapter ``adapter_id``."""
+    ``vision`` patches), through adapter ``adapter_id``.
+
+    Identity equality (``eq=False``): a request IS its uid, and field-wise
+    comparison would trip over the numpy payloads (ambiguous array truth
+    in ``list.remove`` — the scheduler manages pending sets by identity)."""
 
     adapter_id: Any
     prompt_tokens: np.ndarray          # i32 [P_t]
@@ -114,6 +157,14 @@ class Request:
     submitted_at: float = 0.0
     admitted_at: float | None = None
     first_token_at: float | None = None
+    # ---- SLO fields (consumed by repro.serving.scheduler; plain-engine
+    # runs leave them at their defaults and behave exactly as before) ----
+    slo: str = "batch"                 # "interactive" | "batch"
+    deadline_s: float | None = None    # relative SLO; None = class default
+    deadline_at: float | None = None   # absolute, stamped by the scheduler
+    status: str = "ok"                 # ok | error | shed | timeout | cancelled
+    attempts: int = 0                  # submit attempts (retry-with-backoff)
+    degraded: bool = False             # gen_len clamped by the shed policy
 
 
 class ServingEngine:
@@ -255,6 +306,10 @@ class ServingEngine:
             "tlen": jnp.zeros((B,), jnp.int32),   # 0 = slot free/inactive
             "last": jnp.zeros((B,), jnp.int32),
             "gen": jnp.zeros((B, max_gen), jnp.int32),
+            # sticky per-slot fault bit: set when a step sees non-finite
+            # logits for the row, cleared at (re-)admission — rides the
+            # completion fetch so fault detection costs zero extra syncs
+            "fault": jnp.zeros((B,), jnp.bool_),
         }
         if self._n_prefix:
             # PROJECTED prefix vectors [P, d_model], not raw patches: the
@@ -286,7 +341,11 @@ class ServingEngine:
         self._tlen_h = np.zeros((B,), np.int64)
         self.queue: collections.deque[Request] = collections.deque()
         self.completed: list[dict] = []
+        self._admit_failed: list[dict] = []   # quarantine failures this step
         self.steps = 0
+        # injectable time source: schedulers swap in a virtual clock so
+        # deadline/timeout behaviour is testable without wall-clock races
+        self.clock = time.perf_counter
         # one record per shared-prefill burst: the admitted slots' fill
         # lengths and the max-⌈P/chunk⌉ dispatches that covered them all
         self.prefill_bursts: list[dict] = []
@@ -302,7 +361,20 @@ class ServingEngine:
         self._h_queue_wait = m.histogram("serving.queue_wait_seconds")
         self._c_tokens = m.counter("serving.generated_tokens")
         self._c_completed = m.counter("serving.completed_requests")
+        # overload/fault accounting: these are the ONLY places rejected /
+        # shed / timed-out / faulted requests show up — they never touch
+        # the TTFT/latency/queue-wait histograms above
+        self._c_shed = m.counter("serving.shed")
+        self._c_timeout = m.counter("serving.timeout")
+        self._c_cancelled = m.counter("serving.cancelled")
+        self._c_errors = m.counter("serving.request_errors")
         m.gauge_fn("serving.queue_depth", lambda: float(len(self.queue)))
+        for cls in SLO_CLASSES:
+            # per-class depth over the engine queue; an SLOScheduler
+            # re-registers these over its own pending set (latest wins)
+            m.gauge_fn(f"serving.queue_depth.{cls}",
+                       lambda c=cls: float(sum(1 for r in self.queue
+                                               if r.slo == c)))
         m.gauge_fn("serving.slot_occupancy",
                    lambda: len(self.busy_slots) / self.max_slots)
 
@@ -335,6 +407,13 @@ class ServingEngine:
             # ---- batched multi-adapter decode (per-row adapter + pos) -----
             logits, cache = serve(params, adapters, state["aidx"], cache,
                                   embeds, pos)
+            # ---- fault containment: a row whose logits went non-finite
+            # (corrupt adapter, poisoned cache) is flagged sticky and its
+            # emitted token pinned to 0 — argmax/categorical over NaN is
+            # undefined but the OTHER rows never see it (row-independent
+            # decode), so they stay bit-identical to a clean run
+            bad = ~jnp.isfinite(logits).all(axis=-1)
+            fault = state["fault"] | (bad & active)
             if sampling is None:
                 nxt = jnp.argmax(logits, -1).astype(jnp.int32)
             else:
@@ -348,6 +427,7 @@ class ServingEngine:
                     lg = jnp.where(lg >= kth, lg, -1e30)
                 nxt = jax.vmap(jax.random.categorical)(sub, lg).astype(
                     jnp.int32)
+            nxt = jnp.where(fault, 0, nxt)
             # ---- emit into the slot's generation buffer -------------------
             g = pos - (plen - 1)                # generated-token index
             ok = active & (g >= 0) & (g < max_gen)
@@ -357,7 +437,8 @@ class ServingEngine:
                 jnp.where(ok, nxt, state["gen"][rows, cg]))
             last = jnp.where(ok, nxt, last)
             pos = pos + active.astype(pos.dtype)
-            return dict(state, pos=pos, last=last, gen=gen), cache
+            return dict(state, pos=pos, last=last, gen=gen,
+                        fault=fault), cache
 
         return serve_step
 
@@ -379,6 +460,7 @@ class ServingEngine:
             if sampled:
                 st["rng"] = state["rng"].at[slot].set(rng)
             st["aidx"] = state["aidx"].at[slot].set(aidx)
+            st["fault"] = state["fault"].at[slot].set(False)
             st["pos"] = state["pos"].at[slot].set(0)
             st["plen"] = state["plen"].at[slot].set(plen)
             st["tlen"] = state["tlen"].at[slot].set(tlen)
@@ -398,7 +480,10 @@ class ServingEngine:
         return [s for s in range(self.max_slots)
                 if self._requests[s] is not None]
 
-    def submit(self, req: Request) -> int:
+    def validate(self, req: Request) -> None:
+        """Reject a bad request up front (raises; never touches the queue).
+        Split from :meth:`submit` so schedulers can validate before
+        applying their own admission policy."""
         if not 1 <= len(req.prompt_tokens) <= self.max_prompt:
             raise ValueError(
                 f"prompt of {len(req.prompt_tokens)} tokens outside "
@@ -409,6 +494,13 @@ class ServingEngine:
         if not 1 <= req.gen_len <= self.max_gen:
             raise ValueError(f"gen_len {req.gen_len} outside "
                              f"[1, max_gen={self.max_gen}]")
+        if req.slo not in SLO_CLASSES:
+            raise ValueError(f"request {req.uid}: slo {req.slo!r} not in "
+                             f"{SLO_CLASSES}")
+        if req.adapter_id in self.store.quarantined:
+            raise AdapterQuarantinedError(
+                f"adapter {req.adapter_id!r} is quarantined: "
+                f"{self.store.quarantined[req.adapter_id]}")
         if req.adapter_id not in self.store:
             raise KeyError(f"unknown adapter {req.adapter_id!r}")
         if self._n_prefix:
@@ -420,9 +512,13 @@ class ServingEngine:
                 raise ValueError(
                     f"request {req.uid}: vision-prefix engine needs vision "
                     f"patches of shape {want}, got {got}")
-        req.submitted_at = time.perf_counter()
+
+    def submit(self, req: Request) -> int:
+        self.validate(req)
+        req.submitted_at = self.clock()
         req.admitted_at = None           # resubmittable: per-run fields
         req.first_token_at = None
+        req.status = "ok"
         self.queue.append(req)
         return req.uid
 
@@ -443,6 +539,13 @@ class ServingEngine:
             req = self.queue[0]
             try:
                 bank_slot = self.store.acquire(req.adapter_id)
+            except AdapterQuarantinedError as e:
+                # the adapter went bad between submit and admission: fail
+                # THIS request (it never occupies a slot) and keep
+                # admitting — a quarantined tenant must not stall the queue
+                self.queue.popleft()
+                self._fail_admission(req, str(e))
+                continue
             except RuntimeError:
                 break            # adapter bank exhausted by pinned tenants
             self.queue.popleft()
@@ -461,15 +564,17 @@ class ServingEngine:
                     jax.random.PRNGKey(self.sample_seed), req.uid)
             self.dispatch_count["serve_admit"] += 1
             with self.telemetry.span("serve_admit", cat="dispatch",
-                                     uid=req.uid, slot=slot):
+                                     uid=req.uid, slot=slot, slo=req.slo):
                 self._state, self._cache = self._admit_fn(
                     self.params, self._state, self._cache,
                     jnp.asarray(slot, jnp.int32), jnp.asarray(ptoks), vis,
                     jnp.asarray(bank_slot, jnp.int32),
                     jnp.asarray(plen, jnp.int32),
                     jnp.asarray(tlen, jnp.int32), rng)
-            req.admitted_at = time.perf_counter()
-            self._h_queue_wait.observe(req.admitted_at - req.submitted_at)
+            # queue-wait is observed at RETIRE (ok completions only) so a
+            # request admitted but later timed out cannot pollute the
+            # histogram percentiles
+            req.admitted_at = self.clock()
             self._requests[slot] = req
             self._pos_h[slot] = 0
             self._plen_h[slot] = plen
@@ -507,44 +612,144 @@ class ServingEngine:
                 self._pos_h[s] = n_fill
         return admitted
 
+    def _fail_admission(self, req: Request, error: str) -> dict:
+        """Complete ``req`` with an error status WITHOUT it ever occupying
+        a slot (quarantined adapter discovered at admission time)."""
+        req.status = "error"
+        rec = {"uid": req.uid, "adapter_id": req.adapter_id,
+               "slo": req.slo, "status": "error", "error": error,
+               "attempts": req.attempts,
+               "tokens": np.zeros((0,), np.int32),
+               "latency_s": self.clock() - req.submitted_at}
+        self._c_errors.inc()
+        self._c_completed.inc()
+        self.telemetry.instant("request_complete", cat="serving",
+                               uid=req.uid, slo=req.slo, status="error")
+        self.completed.append(rec)
+        self._admit_failed.append(rec)
+        return rec
+
     def _retire_finished(self) -> list[dict]:
         done = [s for s in self.busy_slots if self._pos_h[s] >= self._tlen_h[s]]
         if not done:
             return []
         self.dispatch_count["fetch"] += 1
+        idx = np.asarray(done)
         with self.telemetry.span("fetch", cat="dispatch", rows=len(done)):
-            gen_rows = jax.device_get(self._state["gen"][np.asarray(done)])
+            # fault flags ride the SAME fetch — detection adds no sync
+            gen_rows, fault_rows = jax.device_get(
+                (self._state["gen"][idx], self._state["fault"][idx]))
         out = []
-        now = time.perf_counter()
+        now = self.clock()
+        m = self.telemetry.metrics
         for i, s in enumerate(done):
             req = self._requests[s]
             self.store.release(req.adapter_id)
             self._requests[s] = None
             self._plen_h[s] = 0
             self._tlen_h[s] = 0
+            status = "error" if bool(fault_rows[i]) else "ok"
+            req.status = status
             rec = {"uid": req.uid, "adapter_id": req.adapter_id,
+                   "slo": req.slo, "status": status,
+                   "attempts": req.attempts,
                    "tokens": np.asarray(gen_rows[i][:req.gen_len]),
                    "latency_s": now - req.submitted_at,
                    "ttft_s": req.first_token_at - req.submitted_at,
                    "queue_wait_s": req.admitted_at - req.submitted_at}
+            if req.deadline_at is not None:
+                rec["deadline_s"] = req.deadline_at - req.submitted_at
+            if req.degraded:
+                rec["degraded"] = True
+            if status == "error":
+                rec["error"] = "non-finite logits during decode"
             out.append(rec)
-            self._h_latency.observe(rec["latency_s"])
-            self._h_ttft.observe(rec["ttft_s"])
-            self._c_tokens.inc(req.gen_len)
+            if status == "ok":
+                # histograms see OK completions ONLY: faulted rows emit
+                # garbage timings for garbage tokens and must not move
+                # the percentiles the SLO report is built from
+                self._h_latency.observe(rec["latency_s"])
+                self._h_ttft.observe(rec["ttft_s"])
+                self._h_queue_wait.observe(rec["queue_wait_s"])
+                m.histogram(f"serving.latency_seconds.{req.slo}").observe(
+                    rec["latency_s"])
+                m.histogram(f"serving.ttft_seconds.{req.slo}").observe(
+                    rec["ttft_s"])
+                self._c_tokens.inc(req.gen_len)
+            else:
+                self._c_errors.inc()
             self._c_completed.inc()
             self.telemetry.instant("request_complete", cat="serving",
-                                   uid=req.uid)
+                                   uid=req.uid, slo=req.slo, status=status)
         self.completed.extend(out)
         return out
+
+    # ------------------------------------------------------------ cancellation
+    def cancel_slot(self, slot: int, *, status: str = "cancelled") -> dict:
+        """Cancel the in-flight request in ``slot`` at a step boundary.
+        Pure host bookkeeping — the adapter unpins, the host mirrors zero,
+        and the slot rejoins the free pool for the next admission.  The
+        device row keeps advancing inside the shared program until
+        re-admission resets it (rows are independent; admission rewrites
+        every slot buffer), so cancellation adds ZERO dispatches.  The
+        record is returned, appended to ``completed``, and counted under
+        ``serving.timeout`` / ``serving.cancelled`` — never under the
+        latency/TTFT histograms."""
+        req = self._requests[slot]
+        if req is None:
+            raise ValueError(f"slot {slot} has no in-flight request")
+        self.store.release(req.adapter_id)
+        self._requests[slot] = None
+        self._pos_h[slot] = 0
+        self._plen_h[slot] = 0
+        self._tlen_h[slot] = 0
+        req.status = status
+        rec = {"uid": req.uid, "adapter_id": req.adapter_id,
+               "slo": req.slo, "status": status, "attempts": req.attempts,
+               "tokens": np.zeros((0,), np.int32),
+               "latency_s": self.clock() - req.submitted_at}
+        (self._c_timeout if status == "timeout" else self._c_cancelled).inc()
+        self._c_completed.inc()
+        self.telemetry.instant("request_cancelled", cat="serving",
+                               uid=req.uid, slo=req.slo, status=status,
+                               slot=slot)
+        self.completed.append(rec)
+        return rec
+
+    def cancel(self, uid: int, *, status: str = "cancelled") -> dict:
+        """Cancel a request by uid — queued (removed before it ever
+        occupies a slot) or in-flight (via :meth:`cancel_slot`)."""
+        for i, r in enumerate(self.queue):
+            if r.uid == uid:
+                del self.queue[i]
+                r.status = status
+                rec = {"uid": r.uid, "adapter_id": r.adapter_id,
+                       "slo": r.slo, "status": status,
+                       "attempts": r.attempts,
+                       "tokens": np.zeros((0,), np.int32),
+                       "latency_s": self.clock() - r.submitted_at}
+                (self._c_timeout if status == "timeout"
+                 else self._c_cancelled).inc()
+                self._c_completed.inc()
+                self.telemetry.instant("request_cancelled", cat="serving",
+                                       uid=r.uid, slo=r.slo, status=status)
+                self.completed.append(rec)
+                return rec
+        for s in self.busy_slots:
+            if self._requests[s].uid == uid:
+                return self.cancel_slot(s, status=status)
+        raise KeyError(f"no queued or in-flight request with uid {uid}")
 
     # ------------------------------------------------------------ driving
     def step(self) -> list[dict]:
         """Admit → one fused decode dispatch → retire.  Returns the requests
-        that completed this step."""
+        that completed this step (including admission-time quarantine
+        failures, which complete without ever occupying a slot)."""
         self._admit_pending()
+        failed, self._admit_failed = self._admit_failed, []
         busy = self.busy_slots
         if not busy:
-            return []
+            return failed
         self.dispatch_count["serve_step"] += 1
         self.steps += 1
         with self.telemetry.span("serve_step", cat="dispatch",
@@ -554,7 +759,7 @@ class ServingEngine:
                 "ignore", message="Some donated buffers were not usable")
             self._state, self._cache = self._step_fn(
                 self.params, self.store.scan_stack, self._state, self._cache)
-        now = time.perf_counter()
+        now = self.clock()
         for s in busy:
             self._pos_h[s] += 1
             if self._pos_h[s] == self._plen_h[s]:
@@ -562,7 +767,7 @@ class ServingEngine:
                 # the request's first token (time-to-first-token, dispatch
                 # clock: the token itself crosses to host only at retire)
                 self._requests[s].first_token_at = now
-        return self._retire_finished()
+        return failed + self._retire_finished()
 
     def run(self, requests=None, max_steps: int | None = None) -> list[dict]:
         """Submit ``requests`` (optional) and step until queue and slots are
@@ -590,6 +795,7 @@ class ServingEngine:
             self._requests[s] = None
         self.queue.clear()
         self.completed = []
+        self._admit_failed = []
         self._state = jax.tree_util.tree_map(jnp.zeros_like, self._state)
         self._pos_h[:] = 0
         self._plen_h[:] = 0

@@ -186,6 +186,13 @@ class MetricsRegistry:
     def kinds(self) -> dict:
         return {n: k for n, (k, _) in self._metrics.items()}
 
+    def get(self, name: str):
+        """The registered object for ``name`` (``None`` when absent) —
+        readers (benches, SLO reports) inspect a histogram or counter
+        without registering one as a side effect."""
+        entry = self._metrics.get(name)
+        return entry[1] if entry is not None else None
+
     def snapshot(self) -> dict:
         """Plain-JSON view of every metric (gauge callbacks evaluated
         now; histograms summarised to count/sum/min/max/p50/p95/p99)."""

@@ -12,7 +12,8 @@ except ImportError:
     collect_ignore = ["test_aggregation.py", "test_editing.py",
                       "test_fault_props.py", "test_kernels.py",
                       "test_lora.py", "test_paged_props.py",
-                      "test_serving_kernels.py", "test_serving_props.py"]
+                      "test_serving_kernels.py", "test_serving_props.py",
+                      "test_serving_slo_props.py"]
 
 # Tests run on the single real CPU device; only the dry-run subprocess tests
 # request fake devices (via their own spawned-process XLA_FLAGS).

@@ -149,6 +149,44 @@ def test_bench_serving_quick_prefill_cli_lines(monkeypatch):
     assert "serving/dispatch/prefill/expected_serve_prefill,0.0,8" in lines
 
 
+@pytest.mark.slow
+def test_bench_serving_quick_slo_invariants():
+    """SLO-scheduler CI invariants: quick_slo_check raises on violation;
+    here we additionally pin the headline numbers so a silent relaxation
+    of the checks themselves would show up."""
+    from benchmarks.bench_serving import quick_slo_check
+
+    counts = quick_slo_check()
+    # shed burst: 8 arrivals, 2 slots, queue_limit=0 → exactly 6 shed
+    assert counts["shed"]["shed"] == 6
+    assert counts["shed"]["dispatch"]["serve_admit"] == 2
+    # cancellation: all 4 timed out, zero completion fetches
+    assert counts["cancel"]["timeouts"] == 4
+    assert counts["cancel"]["dispatch"].get("fetch", 0) == 0
+    # fault containment: clean/poisoned step parity was asserted inside
+    assert counts["fault"]["faulted"] == 1
+    assert counts["fault"]["unaffected"] == 2
+
+
+def test_bench_serving_quick_slo_cli_lines(monkeypatch):
+    """--quick-slo CSV formatting (quick_slo_check stubbed — the real
+    invariants run in the slow test above and the CI bench step)."""
+    import benchmarks.bench_serving as B
+
+    monkeypatch.setattr(B, "quick_slo_check", lambda: {
+        "shed": {"steps": 20, "shed": 6, "admitted": 2,
+                 "dispatch": {"serve_step": 20, "serve_admit": 2}},
+        "cancel": {"steps": 1, "timeouts": 4,
+                   "dispatch": {"serve_step": 1, "serve_admit": 2}},
+        "fault": {"steps": 26, "faulted": 1, "unaffected": 2,
+                  "dispatch": {"serve_step": 26}}})
+    lines = B.main(["--quick-slo"])
+    assert "serving/slo/shed/shed,0.0,6" in lines
+    assert "serving/slo/shed/serve_admit,0.0,2" in lines
+    assert "serving/slo/cancel/timeouts,0.0,4" in lines
+    assert "serving/slo/fault/steps,0.0,26" in lines
+
+
 def test_bench_serving_quick_telemetry_cli_lines(monkeypatch):
     """--quick-telemetry CSV formatting (quick_telemetry_check stubbed)."""
     import benchmarks.bench_serving as B

@@ -1,0 +1,641 @@
+"""SLO-aware serving under overload: deadline scheduling (EDF within
+class, priority across classes), backpressure + shed policies, timeout
+cancellation through the jitted step boundary (zero extra dispatches),
+retry-with-backoff reproducibility, decode fault containment, and the
+AdapterStore quarantine path."""
+
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.core.editing import EditConfig
+from repro.data.synthetic import SyntheticTaskConfig, make_federated_datasets
+from repro.federated import FederatedConfig, FederatedTrainer
+from repro.optim import OptimizerConfig
+from repro.serving import (AdapterQuarantinedError, AdapterStore,
+                           ManualClock, Request, RetryPolicy,
+                           SamplingConfig, SchedulerConfig, ServingEngine,
+                           SLOScheduler)
+from repro.telemetry import Telemetry
+
+pytestmark = pytest.mark.serving
+
+STANDARD_DISPATCH = {"serve_step", "serve_admit", "adapter_load", "fetch"}
+
+
+@pytest.fixture(scope="module")
+def population():
+    """One trained round over 3 clients with DISTINCT heterogeneous ranks."""
+    tcfg = SyntheticTaskConfig(caption_len=8)
+    clients, gtest = make_federated_datasets(tcfg, 3, np.array([40, 50, 60]))
+    fcfg = FederatedConfig(num_clients=3, sample_rate=1.0, ranks=(4, 8, 16),
+                           local_steps=2, batch_size=4, aggregator="fedilora",
+                           edit=EditConfig(enabled=True))
+    tr = FederatedTrainer(get_config("fedbench-tiny"), fcfg,
+                          OptimizerConfig(peak_lr=3e-3, total_steps=50),
+                          clients, clients, gtest, seed=0)
+    tr.run_round()
+    lm = np.asarray(clients[0]["loss_mask"])
+    cap_start = int(np.argmax(lm[0] > 0))
+    gen_len = int(lm[0].sum())
+    return tr, clients, cap_start, gen_len
+
+
+def _request(clients, cap_start, gen_len, k=0, i=0, **kw):
+    return Request(adapter_id=f"client{k}",
+                   prompt_tokens=np.asarray(
+                       clients[k]["tokens"][i][:cap_start + 1]),
+                   gen_len=gen_len,
+                   vision=np.asarray(clients[k]["image"][i]), **kw)
+
+
+def _engine(tr, gen_len, *, slots=2, store_slots=None, **kw):
+    store = AdapterStore.from_trainer(tr, slots=store_slots)
+    return ServingEngine(tr.mcfg, tr.base_params, store,
+                         lora_scale=tr.lora_scale, max_slots=slots,
+                         max_prompt=8, max_gen=gen_len, continuous=True,
+                         **kw)
+
+
+def _sched(eng, cfg=None, **kw):
+    clock = ManualClock()
+    return SLOScheduler(eng, cfg, clock=clock, **kw), clock
+
+
+def _drain(sched, clock, dt=1e-4, max_rounds=500):
+    for _ in range(max_rounds):
+        if not (sched.pending or sched.waiting_retries or sched.engine.queue
+                or sched.engine.busy_slots):
+            return
+        if (sched.waiting_retries and not sched.pending
+                and not sched.engine.busy_slots and not sched.engine.queue):
+            clock.advance(sched._retry[0][0] - clock() + 1e-9)
+        sched.step()
+        clock.advance(dt)
+    raise AssertionError("scheduler failed to drain")
+
+
+# ---------------------------------------------------------------------------
+# deadline scheduling: priority across classes, EDF within a class
+# ---------------------------------------------------------------------------
+
+def test_interactive_preempts_batch_in_admission_order(population):
+    tr, clients, cap_start, gen_len = population
+    eng = _engine(tr, gen_len, slots=1, store_slots=3)
+    sched, clock = _sched(eng)
+    b = _request(clients, cap_start, gen_len, k=0, slo="batch")
+    i = _request(clients, cap_start, gen_len, k=1, slo="interactive")
+    sched.submit(b)          # submitted FIRST
+    sched.submit(i)
+    sched.step()
+    assert eng._requests[0] is i         # interactive took the only slot
+    _drain(sched, clock)
+    order = [r["uid"] for r in sched.results if r["status"] == "ok"]
+    assert order == [i.uid, b.uid]
+
+
+def test_edf_within_class(population):
+    tr, clients, cap_start, gen_len = population
+    eng = _engine(tr, gen_len, slots=1, store_slots=3)
+    sched, clock = _sched(eng)
+    late = _request(clients, cap_start, gen_len, k=0, slo="batch",
+                    deadline_s=50.0)
+    soon = _request(clients, cap_start, gen_len, k=1, slo="batch",
+                    deadline_s=20.0)
+    sched.submit(late)       # FIFO would run this first
+    sched.submit(soon)
+    sched.step()
+    assert eng._requests[0] is soon      # earliest deadline first
+    _drain(sched, clock)
+    assert {r["status"] for r in sched.results} == {"ok"}
+
+
+def test_scheduled_tokens_match_unloaded_run(population):
+    """Admitted-and-not-cancelled requests decode bit-identically to a
+    plain engine run of the same requests (scheduling reorders, never
+    perturbs)."""
+    tr, clients, cap_start, gen_len = population
+    ref_eng = _engine(tr, gen_len, slots=2, store_slots=3)
+    refs = [_request(clients, cap_start, gen_len, k=k, i=i)
+            for i in range(2) for k in range(3)]
+    ref = {d["uid"]: d["tokens"] for d in ref_eng.run(refs)}
+
+    eng = _engine(tr, gen_len, slots=2, store_slots=3)
+    sched, clock = _sched(eng)
+    # same (client, sample) workload → same prompts; compare by position
+    reqs = [_request(clients, cap_start, gen_len, k=k, i=i,
+                     slo="interactive" if (i + k) % 2 else "batch")
+            for i in range(2) for k in range(3)]
+    for r in reqs:
+        sched.submit(r)
+    _drain(sched, clock)
+    got = {d["uid"]: d["tokens"] for d in sched.results}
+    assert len(got) == len(reqs)
+    for r_ref, r_got in zip(refs, reqs):
+        np.testing.assert_array_equal(ref[r_ref.uid], got[r_got.uid])
+
+
+# ---------------------------------------------------------------------------
+# backpressure + shed policies
+# ---------------------------------------------------------------------------
+
+def test_reject_sheds_new_without_slot_and_counts(population):
+    tr, clients, cap_start, gen_len = population
+    tel = Telemetry(enabled=False)
+    eng = _engine(tr, gen_len, slots=1, store_slots=3, telemetry=tel)
+    sched, clock = _sched(eng, SchedulerConfig(queue_limit=0,
+                                               shed_policy="reject"))
+    reqs = [_request(clients, cap_start, gen_len, k=k) for k in range(3)]
+    for r in reqs:
+        sched.submit(r)
+    shed = [r for r in sched.results if r["status"] == "shed"]
+    assert [r["uid"] for r in shed] == [reqs[1].uid, reqs[2].uid]
+    _drain(sched, clock)
+    # shed requests never occupied a slot: exactly one admission happened
+    assert eng.dispatch_count["serve_admit"] == 1
+    m = tel.metrics
+    assert m.get("serving.shed").value == 2
+    # histograms saw only the ok completion
+    snap = m.snapshot()["histograms"]
+    assert snap["serving.latency_seconds"]["count"] == 1
+    assert snap["serving.ttft_seconds"]["count"] == 1
+    assert snap["serving.queue_wait_seconds"]["count"] == 1
+
+
+def test_drop_lowest_evicts_batch_for_interactive(population):
+    tr, clients, cap_start, gen_len = population
+    eng = _engine(tr, gen_len, slots=1, store_slots=3)
+    sched, clock = _sched(eng, SchedulerConfig(queue_limit=1,
+                                               shed_policy="drop_lowest"))
+    b1 = _request(clients, cap_start, gen_len, k=0, slo="batch")
+    b2 = _request(clients, cap_start, gen_len, k=1, slo="batch")
+    i1 = _request(clients, cap_start, gen_len, k=2, slo="interactive")
+    sched.submit(b1)
+    sched.step()                         # b1 in flight: the slot is busy
+    clock.advance(1e-3)
+    sched.submit(b2)                     # fills queue_limit=1 → victim
+    assert sched.pending == 1
+    clock.advance(1e-3)
+    sched.submit(i1)                     # outranks b2 → evicts it
+    assert [r.uid for r in sched._pending] == [i1.uid]
+    assert [r["uid"] for r in sched.results
+            if r["status"] == "shed"] == [b2.uid]
+    # a second interactive arrival cannot evict an interactive peer with an
+    # earlier deadline → the newcomer itself is shed
+    clock.advance(1e-3)
+    i2 = _request(clients, cap_start, gen_len, k=0, slo="interactive")
+    sched.submit(i2)
+    assert [r["uid"] for r in sched.results
+            if r["status"] == "shed"] == [b2.uid, i2.uid]
+    _drain(sched, clock)
+    ok = {r["uid"] for r in sched.results if r["status"] == "ok"}
+    assert ok == {b1.uid, i1.uid}
+
+
+def test_degrade_clamps_gen_len_to_prefix_of_full_run(population):
+    tr, clients, cap_start, gen_len = population
+    ref_eng = _engine(tr, gen_len, slots=1, store_slots=3)
+    full = ref_eng.run([_request(clients, cap_start, gen_len, k=0)])[0]
+
+    eng = _engine(tr, gen_len, slots=1, store_slots=3)
+    sched, clock = _sched(eng, SchedulerConfig(queue_limit=0,
+                                               shed_policy="degrade",
+                                               degrade_gen_len=2))
+    first = _request(clients, cap_start, gen_len, k=1)
+    degraded = _request(clients, cap_start, gen_len, k=0)
+    sched.submit(first)
+    sched.submit(degraded)               # over room → admitted degraded
+    assert degraded.gen_len == 2 and degraded.degraded
+    _drain(sched, clock)
+    rec = next(r for r in sched.results if r["uid"] == degraded.uid)
+    assert rec["status"] == "ok" and rec.get("degraded")
+    # greedy decode is prefix-stable: degraded == prefix of the full run
+    np.testing.assert_array_equal(rec["tokens"], full["tokens"][:2])
+
+
+# ---------------------------------------------------------------------------
+# deadlines: pending expiry + in-flight cancellation at the step boundary
+# ---------------------------------------------------------------------------
+
+def test_timeout_cancellation_frees_slot_zero_dispatch(population):
+    """Blowing a deadline mid-decode frees the slot as pure host
+    bookkeeping: no extra dispatch kinds, no completion fetch for the
+    cancelled request, and the freed slot serves the next request whose
+    tokens stay bit-identical to an unloaded run."""
+    tr, clients, cap_start, gen_len = population
+    tel = Telemetry(enabled=False)
+    eng = _engine(tr, gen_len, slots=1, store_slots=3, telemetry=tel)
+    ref_eng = _engine(tr, gen_len, slots=1, store_slots=3)
+    ref = ref_eng.run([_request(clients, cap_start, gen_len, k=1)])[0]
+
+    sched, clock = _sched(eng, SchedulerConfig(interactive_deadline_s=0.05,
+                                               batch_deadline_s=100.0))
+    doomed = _request(clients, cap_start, gen_len, k=0, slo="interactive")
+    after = _request(clients, cap_start, gen_len, k=1, slo="batch")
+    sched.submit(doomed)
+    sched.submit(after)
+    sched.step()                         # doomed admitted, 1 decode step
+    assert eng._requests[0] is doomed
+    steps_cancel = eng.steps
+    clock.advance(1.0)                   # doomed's deadline blown mid-flight
+    sched.step()                         # cancel at the boundary + re-admit
+    assert eng._requests[0] is after     # slot freed and reused same round
+    rec = next(r for r in sched.results if r["uid"] == doomed.uid)
+    assert rec["status"] == "timeout"
+    assert tel.metrics.get("serving.timeout").value == 1
+    _drain(sched, clock)
+    got = next(r for r in sched.results if r["uid"] == after.uid)
+    assert got["status"] == "ok"
+    np.testing.assert_array_equal(got["tokens"], ref["tokens"])
+    dc = dict(eng.dispatch_count)
+    assert set(dc) <= STANDARD_DISPATCH  # cancellation adds NO dispatch kind
+    assert dc["serve_step"] == eng.steps
+    assert dc["fetch"] == 1              # only the surviving completion
+    # the cancelled request decoded steps_cancel steps before dying — those
+    # are shared-batch steps, not extra dispatches
+    assert steps_cancel >= 1
+    # histograms never saw the timed-out request
+    snap = tel.metrics.snapshot()["histograms"]
+    assert snap["serving.latency_seconds"]["count"] == 1
+
+
+def test_pending_expiry_never_occupies_slot(population):
+    tr, clients, cap_start, gen_len = population
+    eng = _engine(tr, gen_len, slots=1, store_slots=3)
+    sched, clock = _sched(eng, SchedulerConfig(interactive_deadline_s=0.05))
+    r1 = _request(clients, cap_start, gen_len, k=0, slo="interactive")
+    r2 = _request(clients, cap_start, gen_len, k=1, slo="interactive")
+    sched.submit(r1)
+    sched.submit(r2)                     # pending behind r1 (one slot)
+    sched.step()
+    clock.advance(1.0)
+    sched.step()
+    by_uid = {r["uid"]: r for r in sched.results}
+    assert by_uid[r2.uid]["status"] == "timeout"
+    assert eng.dispatch_count["serve_admit"] == 1   # r2 never admitted
+    _drain(sched, clock)
+
+
+def test_engine_cancel_by_uid_queued_and_inflight(population):
+    tr, clients, cap_start, gen_len = population
+    eng = _engine(tr, gen_len, slots=1, store_slots=3)
+    inflight = _request(clients, cap_start, gen_len, k=0)
+    queued = _request(clients, cap_start, gen_len, k=1)
+    eng.submit(inflight)
+    eng.submit(queued)
+    eng.step()
+    rec_q = eng.cancel(queued.uid)
+    assert rec_q["status"] == "cancelled" and len(rec_q["tokens"]) == 0
+    rec_i = eng.cancel(inflight.uid, status="timeout")
+    assert rec_i["status"] == "timeout"
+    assert eng.busy_slots == [] and not eng.queue
+    with pytest.raises(KeyError):
+        eng.cancel(inflight.uid)
+
+
+# ---------------------------------------------------------------------------
+# retry-with-backoff: reproducible sampling keys on resubmit
+# ---------------------------------------------------------------------------
+
+def test_retry_backoff_resubmits_and_completes(population):
+    tr, clients, cap_start, gen_len = population
+    eng = _engine(tr, gen_len, slots=1, store_slots=3)
+    sched, clock = _sched(eng, SchedulerConfig(
+        queue_limit=0, shed_policy="reject",
+        retry=RetryPolicy(max_attempts=3, backoff_s=0.5, multiplier=2.0)))
+    r1 = _request(clients, cap_start, gen_len, k=0)
+    r2 = _request(clients, cap_start, gen_len, k=1)
+    sched.submit(r1)
+    sched.submit(r2)                     # shed with a retry scheduled
+    assert sched.waiting_retries == 1
+    assert r2.attempts == 1
+    # backoff not yet elapsed: stepping now must not resubmit
+    sched.step()
+    assert sched.waiting_retries == 1
+    _drain(sched, clock)
+    by_uid = {r["uid"]: r for r in sched.results}
+    assert by_uid[r2.uid]["status"] == "ok"
+    assert by_uid[r2.uid]["attempts"] == 2          # one shed, one success
+    assert by_uid[r2.uid]["uid"] == r2.uid          # SAME request object
+
+
+def test_retry_exhaustion_is_terminal_shed(population):
+    tr, clients, cap_start, gen_len = population
+    eng = _engine(tr, gen_len, slots=1, store_slots=3)
+    sched, clock = _sched(eng, SchedulerConfig(
+        queue_limit=0, shed_policy="reject",
+        retry=RetryPolicy(max_attempts=2, backoff_s=1e6)))
+    blocker = _request(clients, cap_start, gen_len, k=0,
+                       deadline_s=1e9)
+    shed = _request(clients, cap_start, gen_len, k=1)
+    sched.submit(blocker)
+    sched.submit(shed)                   # attempt 1 → retry queued
+    clock.advance(2e6)
+    sched._ready_retries(clock())        # attempt 2 — blocker still pending
+    rec = next(r for r in sched.results if r["uid"] == shed.uid)
+    assert rec["status"] == "shed" and rec["attempts"] == 2
+    assert sched.waiting_retries == 0    # terminal, no third attempt
+    _drain(sched, clock)
+
+
+def test_retry_preserves_sampling_key(population):
+    """A retried stochastic request reproduces its unloaded tokens exactly:
+    the per-slot PRNG key is fold_in(sample_seed, uid) and retry re-uses
+    the SAME Request (same uid)."""
+    tr, clients, cap_start, gen_len = population
+    sampling = SamplingConfig(temperature=0.8, top_k=5)
+    req = _request(clients, cap_start, gen_len, k=0)
+    ref_eng = _engine(tr, gen_len, slots=1, store_slots=3,
+                      sampling=sampling, sample_seed=7)
+    ref = ref_eng.run([req])[0]
+
+    eng = _engine(tr, gen_len, slots=1, store_slots=3,
+                  sampling=sampling, sample_seed=7)
+    sched, clock = _sched(eng, SchedulerConfig(
+        queue_limit=0, shed_policy="reject",
+        retry=RetryPolicy(max_attempts=3, backoff_s=0.5)))
+    blocker = _request(clients, cap_start, gen_len, k=1)
+    sched.submit(blocker)
+    sched.submit(req)                    # shed → retried later
+    assert sched.waiting_retries == 1
+    _drain(sched, clock)
+    rec = next(r for r in sched.results if r["uid"] == req.uid)
+    assert rec["status"] == "ok" and rec["attempts"] == 2
+    np.testing.assert_array_equal(rec["tokens"], ref["tokens"])
+
+
+# ---------------------------------------------------------------------------
+# fault containment: non-finite logits stay in their row
+# ---------------------------------------------------------------------------
+
+def _poisoned_store(tr, victim="client1"):
+    store = AdapterStore.from_trainer(tr)
+    lora, rank = tr.export_adapters()[victim]
+    bad = {name: {"A": np.asarray(e["A"]) * np.nan, "B": np.asarray(e["B"])}
+           for name, e in lora.items()}
+    store.register(victim, bad, rank, validate=False)  # bypass quarantine
+    return store
+
+
+def test_fault_containment_mixed_batch_token_identical(population):
+    """One NaN adapter in a 3-tenant continuous batch: its request errors,
+    the other tenants' tokens are bit-identical to the clean run, the step
+    count and dispatch multiset are unchanged (ONE dispatch per step)."""
+    tr, clients, cap_start, gen_len = population
+
+    def run(store):
+        eng = ServingEngine(tr.mcfg, tr.base_params, store,
+                            lora_scale=tr.lora_scale, max_slots=3,
+                            max_prompt=8, max_gen=gen_len, continuous=True)
+        done = eng.run([_request(clients, cap_start, gen_len, k=k)
+                        for k in range(3)])
+        return eng, {d["adapter_id"]: d for d in done}
+
+    eng_clean, clean = run(AdapterStore.from_trainer(tr))
+    eng_bad, bad = run(_poisoned_store(tr))
+    assert eng_bad.steps == eng_clean.steps
+    assert dict(eng_bad.dispatch_count) == dict(eng_clean.dispatch_count)
+    assert eng_bad.dispatch_count["serve_step"] == eng_bad.steps
+    assert bad["client1"]["status"] == "error"
+    assert "error" in bad["client1"]
+    for cid in ("client0", "client2"):
+        assert bad[cid]["status"] == "ok"
+        np.testing.assert_array_equal(bad[cid]["tokens"],
+                                      clean[cid]["tokens"])
+
+
+def test_fault_containment_chunked_prefill(population):
+    """The NaN adapter poisons the cache during shared chunked prefill (no
+    logits there); the first decode step flags the row and the other
+    tenants still match their clean chunked-prefill tokens."""
+    tr, clients, cap_start, gen_len = population
+
+    def run(store):
+        eng = ServingEngine(tr.mcfg, tr.base_params, store,
+                            lora_scale=tr.lora_scale, max_slots=3,
+                            max_prompt=8, max_gen=gen_len, continuous=True,
+                            prefill_chunk=4)
+        done = eng.run([_request(clients, cap_start, gen_len, k=k)
+                        for k in range(3)])
+        return eng, {d["adapter_id"]: d for d in done}
+
+    eng_clean, clean = run(AdapterStore.from_trainer(tr))
+    eng_bad, bad = run(_poisoned_store(tr))
+    assert eng_bad.steps == eng_clean.steps
+    assert dict(eng_bad.dispatch_count) == dict(eng_clean.dispatch_count)
+    assert bad["client1"]["status"] == "error"
+    for cid in ("client0", "client2"):
+        np.testing.assert_array_equal(bad[cid]["tokens"],
+                                      clean[cid]["tokens"])
+
+
+def test_faulted_completion_excluded_from_histograms(population):
+    tr, clients, cap_start, gen_len = population
+    tel = Telemetry(enabled=False)
+    store = _poisoned_store(tr)
+    eng = ServingEngine(tr.mcfg, tr.base_params, store,
+                        lora_scale=tr.lora_scale, max_slots=3,
+                        max_prompt=8, max_gen=gen_len, continuous=True,
+                        telemetry=tel)
+    done = eng.run([_request(clients, cap_start, gen_len, k=k)
+                    for k in range(3)])
+    assert len(done) == 3
+    m = tel.metrics
+    snap = m.snapshot()
+    assert snap["histograms"]["serving.latency_seconds"]["count"] == 2
+    assert snap["histograms"]["serving.ttft_seconds"]["count"] == 2
+    assert snap["histograms"]["serving.queue_wait_seconds"]["count"] == 2
+    assert m.get("serving.request_errors").value == 1
+    assert m.get("serving.completed_requests").value == 3
+
+
+# ---------------------------------------------------------------------------
+# AdapterStore quarantine: Byzantine adapters never reach a slot
+# ---------------------------------------------------------------------------
+
+def test_quarantine_nan_adapter_through_from_trainer(population, monkeypatch):
+    """Regression for the PR 7 corrupt_mode="nan" escape: a federation
+    exporting a NaN adapter must see it quarantined at registration —
+    health counter bumped, acquire/submit raise a targeted error, the
+    OTHER tenants registered and servable — and a clean re-register
+    clears the quarantine."""
+    tr, clients, cap_start, gen_len = population
+    clean_exports = tr.export_adapters()
+    corrupted = {cid: (lora, rank)
+                 for cid, (lora, rank) in clean_exports.items()}
+    lora1, rank1 = clean_exports["client1"]
+    corrupted["client1"] = (
+        {name: {"A": np.asarray(e["A"]) * np.nan, "B": np.asarray(e["B"])}
+         for name, e in lora1.items()}, rank1)
+    monkeypatch.setattr(tr, "export_adapters", lambda: corrupted)
+    store = AdapterStore.from_trainer(tr)
+    assert "client1" in store.quarantined
+    assert "client1" in store               # known, not "unknown adapter"
+    assert store.health["quarantined_nonfinite"] == 1
+    with pytest.raises(AdapterQuarantinedError, match="non-finite"):
+        store.acquire("client1")
+    # the other tenants serve normally around the quarantined one
+    eng = ServingEngine(tr.mcfg, tr.base_params, store,
+                        lora_scale=tr.lora_scale, max_slots=2,
+                        max_prompt=8, max_gen=gen_len, continuous=True)
+    with pytest.raises(AdapterQuarantinedError):
+        eng.submit(_request(clients, cap_start, gen_len, k=1))
+    done = eng.run([_request(clients, cap_start, gen_len, k=0),
+                    _request(clients, cap_start, gen_len, k=2)])
+    assert {d["status"] for d in done} == {"ok"}
+    # clean re-register clears the quarantine
+    store.register("client1", lora1, rank1)
+    assert "client1" not in store.quarantined
+    done = eng.run([_request(clients, cap_start, gen_len, k=1)])
+    assert done[0]["status"] == "ok"
+
+
+def test_quarantine_shape_mismatch(population):
+    tr, clients, cap_start, gen_len = population
+    store = AdapterStore.from_trainer(tr)
+    lora, rank = tr.export_adapters()["client0"]
+    bad = {name: {"A": np.asarray(e["A"])[:, :, :-1],
+                  "B": np.asarray(e["B"])}
+           for name, e in lora.items()}
+    store.register("clientX", bad, rank)
+    assert "clientX" in store.quarantined
+    assert store.health["quarantined_shape"] == 1
+    with pytest.raises(AdapterQuarantinedError, match="shape"):
+        store.acquire("clientX")
+
+
+def test_quarantine_discovered_at_admission_fails_request(population):
+    """An adapter that goes bad BETWEEN submit and admission fails its own
+    request with status=error instead of stalling the queue."""
+    tr, clients, cap_start, gen_len = population
+    eng = _engine(tr, gen_len, slots=1, store_slots=3)
+    good = _request(clients, cap_start, gen_len, k=0)
+    doomed = _request(clients, cap_start, gen_len, k=1)
+    eng.submit(doomed)
+    eng.submit(good)
+    lora, rank = tr.export_adapters()["client1"]
+    eng.store.register("client1", {
+        name: {"A": np.asarray(e["A"]) * np.nan, "B": np.asarray(e["B"])}
+        for name, e in lora.items()}, rank)     # validate=True → quarantine
+    done = eng.run()
+    by_uid = {d["uid"]: d for d in done}
+    assert by_uid[doomed.uid]["status"] == "error"
+    assert "quarantined" in by_uid[doomed.uid]["error"]
+    assert by_uid[good.uid]["status"] == "ok"
+    assert eng.dispatch_count["serve_admit"] == 1
+
+
+def test_quarantined_overwrite_drops_stale_copy(population):
+    """Quarantining an overwrite also drops the PREVIOUS registration —
+    serving stale weights silently would mask the corruption."""
+    tr, clients, cap_start, gen_len = population
+    store = AdapterStore.from_trainer(tr)
+    lora, rank = tr.export_adapters()["client0"]
+    store.register("client0", {
+        name: {"A": np.asarray(e["A"]) * np.nan, "B": np.asarray(e["B"])}
+        for name, e in lora.items()}, rank)
+    assert "client0" in store.quarantined
+    with pytest.raises(AdapterQuarantinedError):
+        store.acquire("client0")
+
+
+# ---------------------------------------------------------------------------
+# telemetry: per-class gauges, SLO span tags, pinned never evicted
+# ---------------------------------------------------------------------------
+
+def test_per_class_queue_depth_gauges(population):
+    tr, clients, cap_start, gen_len = population
+    tel = Telemetry(enabled=False)
+    eng = _engine(tr, gen_len, slots=1, store_slots=3, telemetry=tel)
+    sched, clock = _sched(eng)
+    for k, slo in ((0, "interactive"), (1, "interactive"), (2, "batch")):
+        sched.submit(_request(clients, cap_start, gen_len, k=k, slo=slo))
+    g = tel.metrics.snapshot()["gauges"]
+    assert g["serving.queue_depth.interactive"] == 2.0
+    assert g["serving.queue_depth.batch"] == 1.0
+    _drain(sched, clock)
+    g = tel.metrics.snapshot()["gauges"]
+    assert g["serving.queue_depth.interactive"] == 0.0
+    assert g["serving.queue_depth.batch"] == 0.0
+
+
+def test_spans_tagged_with_slo_class(population):
+    """serve_admit spans (and completion/cancellation instants) carry the
+    SLO class so Perfetto timelines separate interactive from batch."""
+    tr, clients, cap_start, gen_len = population
+    tel = Telemetry(enabled=True)
+    eng = _engine(tr, gen_len, slots=2, store_slots=3, telemetry=tel)
+    sched, clock = _sched(eng, SchedulerConfig(interactive_deadline_s=0.05))
+    sched.submit(_request(clients, cap_start, gen_len, k=0,
+                          slo="interactive"))
+    sched.submit(_request(clients, cap_start, gen_len, k=1, slo="batch"))
+    sched.step()
+    clock.advance(1.0)                   # interactive deadline blown
+    _drain(sched, clock)
+    trace = tel.chrome_trace()
+    admits = [ev for ev in trace["traceEvents"]
+              if ev.get("name") == "serve_admit"]
+    assert {ev["args"]["slo"] for ev in admits} == {"interactive", "batch"}
+    cancels = [ev for ev in trace["traceEvents"]
+               if ev.get("name") == "request_cancelled"]
+    assert cancels and cancels[0]["args"]["slo"] == "interactive"
+    completes = [ev for ev in trace["traceEvents"]
+                 if ev.get("name") == "request_complete"]
+    assert all("status" in ev["args"] and "slo" in ev["args"]
+               for ev in completes)
+
+
+def test_scheduler_churn_never_evicts_pinned(population):
+    """Overload churn (sheds, timeouts, re-admissions) must never evict a
+    pinned (in-flight) adapter from the bank."""
+    tr, clients, cap_start, gen_len = population
+    eng = _engine(tr, gen_len, slots=2, store_slots=2)   # bank == slots
+    store = eng.store
+    orig_assign = store._pager.assign
+
+    def checked_assign(adapter_id):
+        # snapshot BEFORE assign: the pager drops the victim's pin entry
+        pinned = {a for a, v in store._pager.pins.items() if v > 0}
+        slot, evicted = orig_assign(adapter_id)
+        assert evicted not in pinned
+        return slot, evicted
+
+    store._pager.assign = checked_assign
+    sched, clock = _sched(eng, SchedulerConfig(
+        queue_limit=1, shed_policy="reject",
+        interactive_deadline_s=0.02, batch_deadline_s=100.0,
+        retry=RetryPolicy(max_attempts=2, backoff_s=0.01)))
+    for i in range(4):
+        for k in range(3):
+            sched.submit(_request(
+                clients, cap_start, gen_len, k=k, i=i % 2,
+                slo="interactive" if k == 0 else "batch"))
+        sched.step()
+        clock.advance(0.05)              # blows interactive deadlines
+    _drain(sched, clock)
+    # every pinned acquire stayed valid; and nothing is left pinned
+    assert all(v == 0 for v in store._pager.pins.values())
+
+
+def test_slo_report_goodput(population):
+    tr, clients, cap_start, gen_len = population
+    eng = _engine(tr, gen_len, slots=1, store_slots=3)
+    sched, clock = _sched(eng, SchedulerConfig(
+        queue_limit=1, shed_policy="reject",
+        interactive_deadline_s=0.05, batch_deadline_s=100.0))
+    ok = _request(clients, cap_start, gen_len, k=0, slo="batch")
+    to = _request(clients, cap_start, gen_len, k=1, slo="interactive")
+    sh = _request(clients, cap_start, gen_len, k=2, slo="batch")
+    sched.submit(ok)
+    sched.step()                         # ok in flight: the slot is busy
+    sched.submit(to)                     # pending → expires
+    sched.submit(sh)                     # over room → shed
+    clock.advance(0.2)                   # blow the interactive deadline only
+    _drain(sched, clock)
+    rep = sched.slo_report()
+    assert rep["offered"] == 3
+    assert rep["per_class"]["batch"]["completed_ok"] == 1
+    assert rep["per_class"]["batch"]["shed"] == 1
+    assert rep["per_class"]["interactive"]["timeout"] == 1
+    assert rep["per_class"]["batch"]["goodput"] == 1
+    assert rep["goodput"] == 1

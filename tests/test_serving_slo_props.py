@@ -1,0 +1,167 @@
+"""Property sweep: SLO scheduling under random overload interleavings.
+
+Random event sequences — submissions across SLO classes, virtual-clock
+jumps (blowing deadlines mid-flight), explicit in-flight cancellations,
+scheduler steps — drive an ``SLOScheduler`` over a 2-slot engine with a
+2-slot adapter bank (paging pressure by construction).  Across every
+interleaving the invariants must hold:
+
+* every admitted-and-not-cancelled request (terminal ``status="ok"``)
+  completes with tokens BIT-IDENTICAL to the unloaded reference run of
+  the same (tenant, sample) request — scheduling reorders work, it never
+  perturbs decoding;
+* a shed request never occupies a slot (its ``admitted_at`` stays unset);
+* pinned (in-flight) adapters are never evicted by scheduler churn — the
+  pager's assign is wrapped with an eviction guard for the whole sweep;
+* after drain every submitted request has exactly ONE terminal record and
+  nothing is left pinned.
+
+Conftest-gated like the other hypothesis property tests (the container
+may not ship hypothesis; the deterministic slices of these invariants
+also run in tests/test_scheduler.py)."""
+
+import hypothesis.strategies as st
+import numpy as np
+import pytest
+from hypothesis import HealthCheck, given, settings
+
+from repro.configs import get_config
+from repro.core.editing import EditConfig
+from repro.data.synthetic import SyntheticTaskConfig, make_federated_datasets
+from repro.federated import FederatedConfig, FederatedTrainer
+from repro.optim import OptimizerConfig
+from repro.serving import (AdapterStore, ManualClock, Request, RetryPolicy,
+                           SchedulerConfig, ServingEngine, SLOScheduler)
+
+pytestmark = pytest.mark.serving
+
+N_TENANTS = 3
+SAMPLES = 2
+
+
+@pytest.fixture(scope="module")
+def slo_ctx():
+    """Trained 3-tenant population, one 2-slot engine over a 2-slot bank
+    reused across examples (reset() keeps the compiled closures), per-
+    (tenant, sample) reference tokens, and a pinned-eviction guard wired
+    into the pager for the whole sweep."""
+    tcfg = SyntheticTaskConfig(caption_len=8)
+    clients, gtest = make_federated_datasets(tcfg, N_TENANTS,
+                                             np.array([40, 50, 60]))
+    fcfg = FederatedConfig(num_clients=N_TENANTS, sample_rate=1.0,
+                           ranks=(4, 8, 16), local_steps=2, batch_size=4,
+                           aggregator="fedilora",
+                           edit=EditConfig(enabled=True))
+    tr = FederatedTrainer(get_config("fedbench-tiny"), fcfg,
+                          OptimizerConfig(peak_lr=3e-3, total_steps=50),
+                          clients, clients, gtest, seed=0)
+    tr.run_round()
+    lm = np.asarray(clients[0]["loss_mask"])
+    cap_start = int(np.argmax(lm[0] > 0))
+    gen_len = int(lm[0].sum())
+
+    def make_request(k, i, **kw):
+        return Request(adapter_id=f"client{k}",
+                       prompt_tokens=np.asarray(
+                           clients[k]["tokens"][i][:cap_start + 1]),
+                       gen_len=gen_len,
+                       vision=np.asarray(clients[k]["image"][i]), **kw)
+
+    # unloaded reference tokens per (tenant, sample): greedy decode is
+    # independent of batching/admission order (tested in test_serving)
+    ref_eng = ServingEngine(tr.mcfg, tr.base_params,
+                            AdapterStore.from_trainer(tr),
+                            lora_scale=tr.lora_scale, max_slots=2,
+                            max_prompt=8, max_gen=gen_len)
+    ref = {}
+    for k in range(N_TENANTS):
+        for i in range(SAMPLES):
+            done = ref_eng.run([make_request(k, i)])
+            ref[(k, i)] = np.asarray(done[-1]["tokens"])
+
+    store = AdapterStore.from_trainer(tr, slots=2)   # bank < tenants
+    orig_assign = store._pager.assign
+
+    def guarded_assign(adapter_id):
+        pinned = {a for a, v in store._pager.pins.items() if v > 0}
+        slot, evicted = orig_assign(adapter_id)
+        assert evicted not in pinned, \
+            f"pinned adapter {evicted!r} evicted by scheduler churn"
+        return slot, evicted
+
+    store._pager.assign = guarded_assign
+    eng = ServingEngine(tr.mcfg, tr.base_params, store,
+                        lora_scale=tr.lora_scale, max_slots=2,
+                        max_prompt=8, max_gen=gen_len)
+    return eng, make_request, ref
+
+
+EVENTS = st.lists(
+    st.tuples(st.sampled_from(["submit", "advance", "step", "cancel"]),
+              st.integers(min_value=0, max_value=5),
+              st.integers(min_value=0, max_value=999)),
+    min_size=4, max_size=40)
+
+
+@settings(max_examples=6, deadline=None,
+          suppress_health_check=[HealthCheck.function_scoped_fixture])
+@given(events=EVENTS)
+def test_random_overload_interleavings(slo_ctx, events):
+    eng, make_request, ref = slo_ctx
+    eng.reset()
+    clock = ManualClock()
+    sched = SLOScheduler(eng, SchedulerConfig(
+        queue_limit=2, shed_policy="reject",
+        interactive_deadline_s=0.05, batch_deadline_s=10.0,
+        retry=RetryPolicy(max_attempts=2, backoff_s=0.01)), clock=clock)
+
+    submitted = {}
+    for kind, a, b in events:
+        if kind == "submit":
+            req = make_request(a % N_TENANTS, b % SAMPLES,
+                               slo="interactive" if (a + b) % 2 else "batch")
+            submitted[req.uid] = req
+            sched.submit(req)
+        elif kind == "advance":
+            clock.advance(0.002 + (b % 100) * 0.002)   # 2ms .. 200ms
+        elif kind == "cancel":
+            busy = eng.busy_slots
+            if busy:
+                rec = eng.cancel_slot(busy[a % len(busy)],
+                                      status="cancelled")
+                sched.results.append(rec)
+        else:
+            sched.step()
+
+    for _ in range(2000):                               # drain
+        if not (sched.pending or sched.waiting_retries or eng.queue
+                or eng.busy_slots):
+            break
+        if (sched.waiting_retries and not sched.pending
+                and not eng.busy_slots and not eng.queue):
+            clock.advance(sched._retry[0][0] - clock() + 1e-9)
+        sched.step()
+        clock.advance(1e-4)
+    else:
+        raise AssertionError("scheduler failed to drain")
+
+    # one terminal record per submitted request, none invented
+    uids = sorted(r["uid"] for r in sched.results)
+    assert uids == sorted(submitted)
+    for rec in sched.results:
+        req = submitted[rec["uid"]]
+        k = int(str(req.adapter_id).removeprefix("client"))
+        i = 0 if np.array_equal(req.vision,
+                                make_request(k, 0).vision) else 1
+        if rec["status"] == "ok":
+            # admitted-and-not-cancelled → bit-identical to unloaded run
+            np.testing.assert_array_equal(rec["tokens"], ref[(k, i)])
+        elif rec["status"] == "shed":
+            # shed requests never occupy a slot
+            assert req.admitted_at is None
+            assert len(rec["tokens"]) == 0
+        else:
+            assert rec["status"] in ("timeout", "cancelled")
+            assert len(rec["tokens"]) == 0
+    # nothing left pinned after drain
+    assert all(v == 0 for v in eng.store._pager.pins.values())
